@@ -1,0 +1,92 @@
+"""Paper Figs 1-3: false positives (candidates) & false negatives vs
+(b, r) at Jaccard thresholds 0.2 / 0.3 / 0.4, on the §9.1 test set
+(521 notes + 10 near-duplicates at 10% word change).
+
+Also Fig 4: in-memory LSH time vs number of hash functions.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import emit, section, timeit
+from repro.core import jaccard, lsh, minhash, shingle
+from repro.data import accuracy_testset
+
+
+def _prepare(seed=0):
+    notes, srcs = accuracy_testset(seed=seed)
+    token_lists = [shingle.tokenize(t) for t in notes]
+    sets = [shingle.ngram_set(t, 8) for t in token_lists]
+    packed = shingle.pack_documents(token_lists)
+    ng, valid = shingle.ngram_hashes(
+        jnp.asarray(packed.tokens), jnp.asarray(packed.lengths), n=8)
+    return notes, sets, ng, valid
+
+
+def _true_pairs(sets, threshold):
+    n = len(sets)
+    out = set()
+    for i in range(n):
+        for j in range(i + 1, n):
+            if jaccard.exact_jaccard(sets[i], sets[j]) > threshold:
+                out.add((i, j))
+    return out
+
+
+def run():
+    section("figs 1-3: FP/FN vs (b, r) at thresholds 0.2/0.3/0.4")
+    notes, sets, ng, valid = _prepare()
+    n = len(notes)
+    seeds_all = minhash.default_seeds(512)
+
+    results = []
+    for threshold in (0.2, 0.3, 0.4):
+        truth = _true_pairs(sets, threshold)
+        for r in (1, 2, 4):
+            for b in (5, 10, 25, 50):
+                t0 = time.perf_counter()
+                m = b * r
+                sig = np.asarray(minhash.signatures(
+                    ng, valid, jnp.asarray(seeds_all[:m])))
+                bands = np.asarray(
+                    lsh.band_values(jnp.asarray(sig), r))
+                cand = set(map(tuple, lsh.all_candidate_pairs(bands)))
+                dt = time.perf_counter() - t0
+                sims = {
+                    p: jaccard.exact_jaccard(sets[p[0]], sets[p[1]])
+                    for p in cand}
+                fp = sum(1 for p, s in sims.items() if s <= threshold)
+                fn = len(truth - cand)
+                results.append((threshold, b, r, fp, fn, dt))
+                emit(f"accuracy_t{threshold}_b{b}_r{r}", dt * 1e6,
+                     f"FP={fp};FN={fn};true={len(truth)}")
+    # Paper's chosen operating point: r=2 b=50 avoids false negatives.
+    chosen = [x for x in results if x[1] == 50 and x[2] == 2]
+    for threshold, b, r, fp, fn, dt in chosen:
+        emit(f"accuracy_paper_point_t{threshold}", dt * 1e6,
+             f"FN={fn}(paper:0);FP={fp}")
+    return results
+
+
+def run_time_vs_bands():
+    section("fig 4: in-memory LSH time vs number of hash functions")
+    notes, sets, ng, valid = _prepare()
+    seeds_all = minhash.default_seeds(512)
+    for b in (5, 10, 25, 50, 100):
+        m = 2 * b
+
+        def go():
+            sig = minhash.signatures(ng, valid,
+                                     jnp.asarray(seeds_all[:m]))
+            return np.asarray(lsh.band_values(sig, 2))
+
+        us = timeit(go, repeats=2)
+        emit(f"time_bands_b{b}", us, f"M={m}")
+
+
+if __name__ == "__main__":
+    run()
+    run_time_vs_bands()

@@ -1,0 +1,121 @@
+"""Paper §10 Tables 5-6 + §10.2 Table 7 (Louvain comparison), on the
+clustering test set (521 notes + 500 injected near-duplicates, 0-20%
+word changes)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import emit, section
+from repro.core import jaccard, shingle
+from repro.core.cluster import cluster_bands, modularity
+from repro.core.pipeline import DedupConfig, DedupPipeline
+from repro.data import clustering_testset
+
+
+def _prepare():
+    notes, prov = clustering_testset(seed=0)
+    pipe = DedupPipeline(DedupConfig())
+    toks = pipe.tokenize(notes)
+    sig = pipe.compute_signatures(toks)
+    bands = pipe.compute_bands(sig)
+    sets = [shingle.ngram_set(t, 8) for t in toks]
+    return notes, sets, bands
+
+
+def run():
+    notes, sets, bands = _prepare()
+    simfn = lambda a, b: jaccard.exact_jaccard(sets[a], sets[b])
+
+    section("table 5/6: pairs excluded, modularity vs edge threshold")
+    # Baseline without disjoint sets (paper: 6388 pairs on their data).
+    _, st_off, pairs_off = cluster_bands(bands, simfn, 0.60, 0.40, False)
+    emit("cluster_no_ds_pairs", 0.0,
+         f"evaluated={st_off.pairs_evaluated}")
+
+    tree_t = 0.40
+    for edge_pct in (60, 65, 70, 75, 80, 85, 90, 95):
+        edge_t = edge_pct / 100
+        t0 = time.perf_counter()
+        uf, st, pairs = cluster_bands(bands, simfn, edge_t, tree_t, True)
+        dt = time.perf_counter() - t0
+        labels = uf.components()
+        excluded = st_off.pairs_evaluated - st.pairs_evaluated
+        # category counts (paper fig 9)
+        same_high = diff_high = same_mid = 0
+        for a, b, s in pairs:
+            same = labels[a] == labels[b]
+            if s > edge_t:
+                same_high += int(same)
+                diff_high += int(not same)
+            elif s > tree_t and same:
+                same_mid += 1
+        q = modularity(labels, pairs)
+        sizes = {}
+        for l in labels:
+            sizes[l] = sizes.get(l, 0) + 1
+        n_clusters = sum(1 for v in sizes.values() if v >= 2)
+        emit(f"cluster_edge{edge_pct}", dt * 1e6,
+             f"excluded={excluded};sameHigh={same_high};"
+             f"diffHigh={diff_high};sameMid={same_mid};"
+             f"Q={q:.3f};clusters={n_clusters}")
+
+
+def run_louvain():
+    import networkx as nx
+
+    notes, sets, bands = _prepare()
+    simfn = lambda a, b: jaccard.exact_jaccard(sets[a], sets[b])
+    section("table 7: comparison with the Louvain method (edge=75)")
+
+    _, _, pairs = cluster_bands(bands, simfn, 0.0, 0.0, False)
+    g = nx.Graph()
+    g.add_nodes_from(range(len(notes)))
+    for a, b, s in pairs:
+        if s > 0:
+            g.add_edge(a, b, weight=s)
+    t0 = time.perf_counter()
+    comms = nx.community.louvain_communities(g, weight="weight", seed=0)
+    t_louvain = time.perf_counter() - t0
+    lv_label = {}
+    for ci, comm in enumerate(comms):
+        for v in comm:
+            lv_label[v] = ci
+
+    uf, st, pairs_ds = cluster_bands(bands, simfn, 0.75, 0.40, True)
+    ds_label = uf.components()
+
+    def categories(labels):
+        same_h = same_m = same_l = diff_h = 0
+        for a, b, s in pairs:
+            same = labels[a] == labels[b]
+            if s > 0.75:
+                same_h += int(same)
+                diff_h += int(not same)
+            elif s > 0.40:
+                same_m += int(same)
+            else:
+                same_l += int(same)
+        return same_h, same_m, same_l, diff_h
+
+    for name, labels, secs in (
+            ("louvain", [lv_label[i] for i in range(len(notes))],
+             t_louvain),
+            ("disjoint_set", ds_label, 0.0)):
+        sh, sm, sl, dh = categories(labels)
+        q = modularity(np.asarray(labels), pairs)
+        nclust = len({l for l in labels}) - sum(
+            1 for l in set(labels)
+            if sum(1 for x in labels if x == l) == 1)
+        emit(f"louvain_cmp_{name}", secs * 1e6,
+             f"sameHigh={sh};sameMid={sm};sameLow={sl};diffHigh={dh};"
+             f"Q={q:.3f}")
+    emit("louvain_cmp_saved_evals", 0.0,
+         f"excluded={st.pairs_excluded}")
+
+
+if __name__ == "__main__":
+    run()
+    run_louvain()

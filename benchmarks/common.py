@@ -1,0 +1,26 @@
+"""Benchmark helpers: timing + the `name,us_per_call,derived` CSV contract."""
+from __future__ import annotations
+
+import time
+
+ROWS: list[tuple] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def timeit(fn, *, repeats: int = 3, number: int = 1) -> float:
+    """Best-of wall time in µs per call."""
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for _ in range(number):
+            fn()
+        best = min(best, (time.perf_counter() - t0) / number)
+    return best * 1e6
+
+
+def section(title: str):
+    print(f"\n# --- {title} ---")

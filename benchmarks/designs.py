@@ -1,0 +1,97 @@
+"""Paper Figs 5-7 (§9.2) + Fig 8 (§9.2.1) + §11: in-memory vs Database
+Design 1 vs Design 2 — time vs #notes / #words, memory, and the §11
+memory-limit table."""
+from __future__ import annotations
+
+import time
+import tracemalloc
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import emit, section
+from repro.core import lsh, minhash, shingle
+from repro.core.bandstore import (
+    Design1Store, Design2Store, candidate_pairs_from_store,
+)
+from repro.data import make_i2b2_like
+
+
+def _bands_for(notes):
+    token_lists = [shingle.tokenize(t) for t in notes]
+    packed = shingle.pack_documents(token_lists)
+    ng, valid = shingle.ngram_hashes(
+        jnp.asarray(packed.tokens), jnp.asarray(packed.lengths), n=8)
+    sig = minhash.signatures(ng, valid,
+                             jnp.asarray(minhash.default_seeds(100)))
+    return np.asarray(lsh.band_values(sig, 2))
+
+
+def _run_in_memory(bands):
+    return lsh.all_candidate_pairs(bands)
+
+
+def _run_store(bands, store):
+    for d in range(len(bands)):
+        store.insert_document(d, bands[d])
+    store.commit()
+    return candidate_pairs_from_store(store, bands.shape[1])
+
+
+def run():
+    section("figs 5-7: time vs #notes, in-memory vs Design 1 vs Design 2")
+    for n_notes in (100, 200, 400, 800):
+        notes = make_i2b2_like(n_notes, seed=1)
+        bands = _bands_for(notes)
+        t0 = time.perf_counter()
+        p_mem = _run_in_memory(bands)
+        t_mem = time.perf_counter() - t0
+
+        s1 = Design1Store()
+        t0 = time.perf_counter()
+        p_d1 = _run_store(bands, s1)
+        t_d1 = time.perf_counter() - t0
+
+        s2 = Design2Store(part_size=max(10, n_notes // 10))
+        t0 = time.perf_counter()
+        p_d2 = _run_store(bands, s2)
+        t_d2 = time.perf_counter() - t0
+
+        assert set(map(tuple, p_d1)) == set(map(tuple, p_mem))
+        assert set(map(tuple, p_d2)) == set(map(tuple, p_mem))
+        emit(f"designs_n{n_notes}_inmem", t_mem * 1e6, f"pairs={len(p_mem)}")
+        emit(f"designs_n{n_notes}_d1", t_d1 * 1e6,
+             f"writes={s1.n_writes};bytes={s1.write_bytes}")
+        emit(f"designs_n{n_notes}_d2", t_d2 * 1e6,
+             f"writes={s2.n_writes};bytes={s2.write_bytes}")
+
+
+def run_memory():
+    section("fig 8 + §11: memory")
+    notes = make_i2b2_like(400, seed=2)
+    bands = _bands_for(notes)
+
+    for name, fn in [
+        ("inmem", lambda: _run_in_memory(bands)),
+        ("d1", lambda: _run_store(bands, Design1Store())),
+        ("d2", lambda: _run_store(bands, Design2Store(part_size=40))),
+    ]:
+        tracemalloc.start()
+        fn()
+        _, peak = tracemalloc.get_traced_memory()
+        tracemalloc.stop()
+        emit(f"memory_{name}", 0.0, f"peak_bytes={peak}")
+
+    # §11 theoretical limits at 4 GB, b=50 bands, 8-byte values.
+    gb4 = 4 * 1024**3
+    inmem_limit = gb4 // (50 * 8)
+    d1_limit = gb4 // 8
+    d2_limit = gb4 // (50 * 8 // 10)
+    emit("limit_inmem_notes", 0.0, f"{inmem_limit}")        # ~10M (paper)
+    emit("limit_design1_notes", 0.0, f"{d1_limit}")         # ~500M
+    emit("limit_design2_notes", 0.0, f"{d2_limit}")         # ~100M
+
+
+if __name__ == "__main__":
+    run()
+    run_memory()

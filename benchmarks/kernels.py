@@ -1,0 +1,70 @@
+"""Per-kernel µs/call (interpret mode on CPU) + allclose spot-check.
+
+On-TPU these kernels lower via Mosaic; interpret mode here validates the
+kernel bodies and gives relative cost shapes, not TPU wall time.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, section, timeit
+from repro.kernels import ops, ref
+
+
+def run():
+    section("kernels: pallas(interpret) vs jnp ref, µs/call")
+    rng = np.random.RandomState(0)
+    D, L, M = 128, 512, 128
+    tokens = rng.randint(0, 2**32, size=(D, L), dtype=np.uint64
+                         ).astype(np.uint32)
+    lengths = rng.randint(L // 2, L, size=(D,)).astype(np.int32)
+    seeds = rng.randint(0, 2**32, size=(M,), dtype=np.uint64
+                        ).astype(np.uint32)
+    tj, lj, sj = map(jnp.asarray, (tokens, lengths, seeds))
+
+    ng_k, valid = ops.ngram_hashes(tj, lj, n=8)
+    ng_r, _ = ref.ngram_hashes(tj, lj, n=8)
+    vm = np.asarray(valid)
+    assert np.array_equal(np.asarray(ng_k)[vm], np.asarray(ng_r)[vm])
+    for name, fn in [
+        ("ngram_pallas", lambda: jax.block_until_ready(
+            ops.ngram_hashes(tj, lj, n=8)[0])),
+        ("ngram_ref", lambda: jax.block_until_ready(
+            ref.ngram_hashes(tj, lj, n=8)[0])),
+    ]:
+        emit(name, timeit(fn), f"D={D};L={L}")
+
+    sig_k = ops.minhash_signatures(ng_k, valid, sj)
+    sig_r = ref.minhash_signatures(ng_k, valid, sj)
+    assert np.array_equal(np.asarray(sig_k), np.asarray(sig_r))
+    for name, fn in [
+        ("minhash_pallas", lambda: jax.block_until_ready(
+            ops.minhash_signatures(ng_k, valid, sj))),
+        ("minhash_ref", lambda: jax.block_until_ready(
+            ref.minhash_signatures(ng_k, valid, sj))),
+    ]:
+        emit(name, timeit(fn), f"D={D};L={L};M={M}")
+
+    for name, fn in [
+        ("bandfold_pallas", lambda: jax.block_until_ready(
+            ops.band_values(sig_k, 2))),
+        ("bandfold_ref", lambda: jax.block_until_ready(
+            ref.band_values(sig_k, 2))),
+    ]:
+        emit(name, timeit(fn), f"D={D};b={M//2}")
+
+    a = jnp.asarray(np.asarray(sig_k)[rng.randint(0, D, 512)])
+    b = jnp.asarray(np.asarray(sig_k)[rng.randint(0, D, 512)])
+    for name, fn in [
+        ("sigjaccard_pallas", lambda: jax.block_until_ready(
+            ops.pair_estimate(a, b))),
+        ("sigjaccard_ref", lambda: jax.block_until_ready(
+            ref.pair_estimate(a, b))),
+    ]:
+        emit(name, timeit(fn), "P=512")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,50 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads experiments/dryrun/*.json (produced by repro.launch.dryrun) and
+prints the three-term table.  Does NOT recompile anything.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit, section
+
+ART_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "experiments", "dryrun")
+
+
+def load_records(art_dir: str = ART_DIR):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def run(art_dir: str = ART_DIR):
+    section("roofline terms per (arch x cell x mesh)")
+    recs = load_records(art_dir)
+    if not recs:
+        emit("roofline_no_artifacts", 0.0,
+             "run `python -m repro.launch.dryrun` first")
+        return
+    for r in recs:
+        tag = f"{r['arch']}__{r['cell']}__{r['mesh']}"
+        if r["status"] != "ok":
+            emit(f"roofline_{tag}", 0.0, r["status"])
+            continue
+        roof = r["roofline"]
+        emit(
+            f"roofline_{tag}", roof["step_s"] * 1e6,
+            f"compute={roof['compute_s']:.3g}s;"
+            f"memory={roof['memory_s']:.3g}s;"
+            f"collective={roof['collective_s']:.3g}s;"
+            f"bottleneck={roof['bottleneck']};"
+            f"frac={roof['roofline_fraction']:.4f};"
+            f"flops_eff={roof['flops_efficiency']:.3f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,55 @@
+"""Benchmark entry point — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (the harness contract).
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run --only accuracy,kernels
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset: accuracy,designs,"
+                         "clustering,scale,kernels,roofline")
+    args = ap.parse_args(argv)
+    only = set(args.only.split(",")) if args.only else None
+
+    def want(name):
+        return only is None or name in only
+
+    print("name,us_per_call,derived")
+    t0 = time.perf_counter()
+
+    if want("accuracy"):
+        from benchmarks import accuracy
+        accuracy.run()
+        accuracy.run_time_vs_bands()
+    if want("designs"):
+        from benchmarks import designs
+        designs.run()
+        designs.run_memory()
+    if want("clustering"):
+        from benchmarks import clustering
+        clustering.run()
+        clustering.run_louvain()
+    if want("scale"):
+        from benchmarks import scale
+        scale.run()
+    if want("kernels"):
+        from benchmarks import kernels
+        kernels.run()
+    if want("roofline"):
+        from benchmarks import roofline
+        roofline.run()
+
+    print(f"\n# benchmarks completed in {time.perf_counter()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

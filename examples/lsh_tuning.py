@@ -1,0 +1,45 @@
+"""Reproduce the paper's (b, r) tuning analysis (Figs 1-3) interactively:
+sweep bands/rows, print the FP/FN trade-off and the S-curve.
+
+  PYTHONPATH=src python examples/lsh_tuning.py
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import jaccard, lsh, minhash, shingle
+from repro.data import accuracy_testset
+
+notes, srcs = accuracy_testset(seed=0)
+token_lists = [shingle.tokenize(t) for t in notes]
+sets = [shingle.ngram_set(t, 8) for t in token_lists]
+packed = shingle.pack_documents(token_lists)
+ng, valid = shingle.ngram_hashes(
+    jnp.asarray(packed.tokens), jnp.asarray(packed.lengths), n=8)
+seeds = minhash.default_seeds(512)
+
+threshold = 0.3
+truth = set()
+for i in range(len(notes)):
+    for j in range(i + 1, len(notes)):
+        if jaccard.exact_jaccard(sets[i], sets[j]) > threshold:
+            truth.add((i, j))
+print(f"ground truth: {len(truth)} similar pairs at J>{threshold}")
+
+print(f"{'b':>4} {'r':>3} {'P(cand|J=t)':>12} {'FP':>6} {'FN':>4}")
+for r in (1, 2, 4):
+    for b in (5, 10, 25, 50):
+        sig = np.asarray(minhash.signatures(
+            ng, valid, jnp.asarray(seeds[: b * r])))
+        bands = np.asarray(lsh.band_values(jnp.asarray(sig), r))
+        cand = set(map(tuple, lsh.all_candidate_pairs(bands)))
+        fp = sum(
+            1 for p in cand
+            if jaccard.exact_jaccard(sets[p[0]], sets[p[1]]) <= threshold)
+        fn = len(truth - cand)
+        p_at_t = float(lsh.candidate_probability(threshold, r=r, b=b))
+        print(f"{b:>4} {r:>3} {p_at_t:>12.3f} {fp:>6} {fn:>4}")
+
+print("\npaper's operating point: r=2, b=50 (no false negatives)")
+print("S-curve P(candidate) at r=2, b=50:")
+for s in (0.05, 0.1, 0.2, 0.3, 0.5, 0.7, 0.9):
+    print(f"  J={s:.2f}: P={float(lsh.candidate_probability(s, 2, 50)):.4f}")

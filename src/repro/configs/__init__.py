@@ -1,0 +1,110 @@
+"""Architecture registry + per-cell input specs (ShapeDtypeStruct only).
+
+``get_config(arch_id)`` / ``get_reduced(arch_id)`` resolve the 10 assigned
+architectures; ``input_specs(cfg, cell)`` builds the allocation-free
+stand-ins the dry-run lowers against (the shannon/kernels pattern).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig, SHAPE_CELLS, cell_applicable
+from repro.configs import (
+    deepseek_v2_236b, gemma_7b, h2o_danube, internvl2_2b, llama4_maverick,
+    mamba2_780m, olmo_1b, phi3_medium, whisper_medium, zamba2_2p7b,
+)
+from repro.core.pipeline import DedupConfig
+from repro.core.dist_lsh import DistLSHConfig
+
+_MODULES = [
+    deepseek_v2_236b, llama4_maverick, phi3_medium, olmo_1b, h2o_danube,
+    gemma_7b, whisper_medium, zamba2_2p7b, mamba2_780m, internvl2_2b,
+]
+
+REGISTRY = {m.ID: m for m in _MODULES}
+ARCH_IDS = list(REGISTRY)
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    return REGISTRY[arch_id].config()
+
+
+def get_reduced(arch_id: str) -> ModelConfig:
+    return REGISTRY[arch_id].reduced()
+
+
+def paper_dedup_config() -> DedupConfig:
+    """Paper §7/§9 defaults: n=8, M=100, r=2, b=50, thresholds 75/40."""
+    return DedupConfig()
+
+
+def paper_dist_lsh_config() -> DistLSHConfig:
+    return DistLSHConfig()
+
+
+# -- input specs ---------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def input_specs(cfg: ModelConfig, cell_name: str) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of one cell.
+
+    train/prefill: the batch dict.  decode: {"token", "kv_len"} — the
+    cache spec comes from ``cache_specs``.
+    """
+    cell = SHAPE_CELLS[cell_name]
+    B, S = cell.global_batch, cell.seq_len
+    tok = jnp.int32
+    if cfg.encdec:
+        if cell.kind in ("train", "prefill"):
+            return {
+                "frames": _sds((B, S, cfg.d_model), cfg.cdtype),
+                "tokens": _sds((B, cfg.dec_len), tok),
+            }
+        return {"token": _sds((B,), tok), "kv_len": _sds((B,), tok)}
+    if cell.kind in ("train", "prefill"):
+        batch = {"tokens": _sds((B, max(1, S - cfg.n_patches)), tok)}
+        if cfg.n_patches:
+            batch["patches"] = _sds((B, cfg.n_patches, cfg.d_model),
+                                    cfg.cdtype)
+        return batch
+    return {"token": _sds((B,), tok), "kv_len": _sds((B,), tok)}
+
+
+def cache_specs(cfg: ModelConfig, cell_name: str):
+    """(ShapeDtypeStruct cache tree, logical axes tree) for decode cells."""
+    from repro.models import lm, whisper
+
+    cell = SHAPE_CELLS[cell_name]
+    B, S = cell.global_batch, cell.seq_len
+    seq_shard = cell_name == "long_500k"
+    if cfg.encdec:
+        def build():
+            cache, _ = whisper.make_cache(cfg, B, dec_len=cfg.dec_len,
+                                          enc_len=S)
+            kc = jnp.zeros((cfg.n_dec_layers or cfg.n_layers, B, S,
+                            cfg.n_kv_heads, cfg.resolved_head_dim),
+                           cfg.cdtype)
+            return {"enc_kv": (kc, kc), "cache": cache}
+
+        _, axes = whisper.make_cache(cfg, 1, dec_len=2, enc_len=2)
+        enc_ax = ("layers", "batch", None, "heads", None)
+        full_axes = {"enc_kv": (enc_ax, enc_ax), "cache": axes}
+        return jax.eval_shape(build), full_axes
+
+    def build():
+        cache, _ = lm.make_cache(cfg, B, S, seq_shard=seq_shard)
+        return cache
+
+    _, axes = lm.make_cache(cfg, 1, 2, seq_shard=seq_shard)
+    return jax.eval_shape(build), axes
+
+
+__all__ = [
+    "REGISTRY", "ARCH_IDS", "get_config", "get_reduced",
+    "paper_dedup_config", "paper_dist_lsh_config", "input_specs",
+    "cache_specs",
+]

@@ -1,0 +1,18 @@
+"""Core library: MinHash-LSH deduplication (the paper's contribution)."""
+from repro.core.pipeline import DedupConfig, DedupPipeline, DedupResult
+from repro.core.lsh import LSHParams, candidate_probability
+from repro.core.unionfind import ThresholdUnionFind, connected_components
+from repro.core.dist_lsh import DistLSHConfig, make_dedup_step, docs_mesh
+
+__all__ = [
+    "DedupConfig",
+    "DedupPipeline",
+    "DedupResult",
+    "LSHParams",
+    "candidate_probability",
+    "ThresholdUnionFind",
+    "connected_components",
+    "DistLSHConfig",
+    "make_dedup_step",
+    "docs_mesh",
+]

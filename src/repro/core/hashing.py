@@ -1,0 +1,98 @@
+"""32-bit-native hash families for TPU minhashing.
+
+The paper uses MurmurHash with M random seeds as its approximate random
+permutations (paper §3.5, §7.3).  TPUs are 32-bit-native, so we build the
+family from the Murmur3 *finalizer* ``fmix32`` — a bijection on uint32 —
+seeded by xor/multiply mixing.  A bijection composed with per-seed mixing
+gives a well-spread hash family; this is the same family `datasketch`-style
+minhash libraries use in 32-bit mode.
+
+Two independent lanes (different seed streams) give ~64-bit discrimination
+where the paper uses 64-bit values (band values, exact-dup keys).
+
+Everything here is pure jnp on uint32 and is safe inside Pallas kernels
+(only xor / shift / 32-bit multiply).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+# Murmur3 constants.
+_FMIX_C1 = np.uint32(0x85EBCA6B)
+_FMIX_C2 = np.uint32(0xC2B2AE35)
+# Knuth multiplicative constant (odd -> bijective multiply mod 2^32).
+GOLDEN32 = np.uint32(0x9E3779B9)
+# Polynomial base for rolling n-gram hashes (odd).
+NGRAM_BASE = np.uint32(0x01000193)  # FNV prime.
+NGRAM_BASE2 = np.uint32(0x0001F7B7)  # independent odd base for lane 2.
+
+U32_MAX = np.uint32(0xFFFFFFFF)
+
+
+def fmix32(x: jnp.ndarray) -> jnp.ndarray:
+    """Murmur3 finalizer: bijective avalanche on uint32."""
+    x = x.astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * _FMIX_C1
+    x = x ^ (x >> 13)
+    x = x * _FMIX_C2
+    x = x ^ (x >> 16)
+    return x
+
+
+def hash_u32(x: jnp.ndarray, seed: jnp.ndarray) -> jnp.ndarray:
+    """Seeded hash: h_seed(x) = fmix32(x * GOLDEN + seed).
+
+    For a fixed seed this is a bijection on uint32 (odd multiply, xor-shift
+    avalanche), i.e. a legitimate "random permutation" stand-in for
+    minhashing (paper §3.5).
+    """
+    x = x.astype(jnp.uint32)
+    seed = seed.astype(jnp.uint32)
+    return fmix32(x * GOLDEN32 + seed)
+
+
+def make_seeds(m: int, key: int = 0x5EED) -> np.ndarray:
+    """M deterministic 32-bit seeds (paper: default RNG -> M seeds)."""
+    rng = np.random.RandomState(key & 0x7FFFFFFF)
+    return rng.randint(0, 2**32, size=(m,), dtype=np.uint64).astype(np.uint32)
+
+
+def fmix32_np(x: np.ndarray) -> np.ndarray:
+    """Numpy oracle for fmix32 (uint32, wraparound semantics)."""
+    x = x.astype(np.uint32)
+    with np.errstate(over="ignore"):
+        x = x ^ (x >> np.uint32(16))
+        x = (x * _FMIX_C1).astype(np.uint32)
+        x = x ^ (x >> np.uint32(13))
+        x = (x * _FMIX_C2).astype(np.uint32)
+        x = x ^ (x >> np.uint32(16))
+    return x
+
+
+def hash_u32_np(x: np.ndarray, seed) -> np.ndarray:
+    x = x.astype(np.uint32)
+    with np.errstate(over="ignore"):
+        return fmix32_np((x * GOLDEN32).astype(np.uint32) + np.uint32(seed))
+
+
+def fmix32_inverse_np(x: np.ndarray) -> np.ndarray:
+    """Inverse of fmix32 (proves bijectivity; used by property tests)."""
+    def unshift(v, s):
+        # invert v ^= v >> s for uint32
+        r = v.copy()
+        for _ in range(0, 32, s):
+            r = v ^ (r >> np.uint32(s))
+        return r
+
+    inv_c1 = np.uint32(pow(int(_FMIX_C1), -1, 2**32))
+    inv_c2 = np.uint32(pow(int(_FMIX_C2), -1, 2**32))
+    x = x.astype(np.uint32)
+    with np.errstate(over="ignore"):
+        x = unshift(x, 16)
+        x = (x * inv_c2).astype(np.uint32)
+        x = unshift(x, 13)
+        x = (x * inv_c1).astype(np.uint32)
+        x = unshift(x, 16)
+    return x

@@ -1,0 +1,57 @@
+"""Jaccard similarity: exact (oracle) and signature-estimated (paper §2.1, §3.3)."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def exact_jaccard(a: set, b: set) -> float:
+    """Exact set Jaccard |A∩B| / |A∪B| (paper §2.1)."""
+    if not a and not b:
+        return 1.0
+    inter = len(a & b)
+    union = len(a) + len(b) - inter
+    return inter / union if union else 0.0
+
+
+def exact_jaccard_docs(tokens_a: list[str], tokens_b: list[str], n: int = 8) -> float:
+    from repro.core.shingle import ngram_set
+
+    return exact_jaccard(ngram_set(tokens_a, n), ngram_set(tokens_b, n))
+
+
+def jaccard_distance(a: set, b: set) -> float:
+    """1 - Jaccard; a metric (triangle inequality holds, paper §6.1)."""
+    return 1.0 - exact_jaccard(a, b)
+
+
+@jax.jit
+def pairwise_estimate(sig: jnp.ndarray, pairs: jnp.ndarray) -> jnp.ndarray:
+    """Signature-agreement estimate for candidate pairs.
+
+    sig: (D, M) uint32; pairs: (P, 2) int32.  Returns (P,) float32.
+    """
+    a = sig[pairs[:, 0]]
+    b = sig[pairs[:, 1]]
+    return jnp.mean((a == b).astype(jnp.float32), axis=-1)
+
+
+def pairwise_estimate_np(sig: np.ndarray, pairs: np.ndarray) -> np.ndarray:
+    if len(pairs) == 0:
+        return np.zeros((0,), dtype=np.float32)
+    a = sig[pairs[:, 0]]
+    b = sig[pairs[:, 1]]
+    return (a == b).mean(axis=-1).astype(np.float32)
+
+
+def exact_jaccard_matrix(ngram_sets: list[set]) -> np.ndarray:
+    """Dense exact Jaccard matrix — the paper's O(N^2 w) baseline (§7.5.1)."""
+    n = len(ngram_sets)
+    out = np.zeros((n, n), dtype=np.float32)
+    for i in range(n):
+        out[i, i] = 1.0
+        for j in range(i + 1, n):
+            s = exact_jaccard(ngram_sets[i], ngram_sets[j])
+            out[i, j] = out[j, i] = s
+    return out

@@ -1,0 +1,183 @@
+"""Banded Locality-Sensitive Hashing (paper §4).
+
+The (M x D) signature matrix is split into b bands of r rows.  Each band's
+r values are folded into one compact value per document ("band matrix",
+paper §4.3 — the paper folds to a 64-bit integer; we use two independent
+32-bit lanes, see DESIGN.md §2/§5).  Candidate pairs are documents sharing
+a band value in at least one band:  P(candidate) = 1 - (1 - s^r)^b.
+
+Candidate generation follows the paper's sort-based method (§3.6 method 2):
+sort (band_value, doc) pairs, find equal runs.  Two enumeration modes:
+
+* ``enumerate_pairs_in_runs`` — all pairs within a run (paper-faithful,
+  O(run^2); bounded by ``max_pairs`` for static shapes).
+* star edges (each doc paired with its run head) — O(run) edges; preserves
+  connectivity for clustering and attacks the paper's "too many candidate
+  pairs" problem (beyond-paper; see DESIGN.md).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.hashing import fmix32, GOLDEN32
+
+# Per-lane fold seeds (arbitrary distinct constants).
+_LANE_SEEDS = (np.uint32(0x2545F491), np.uint32(0x9E3779B9))
+
+
+def candidate_probability(s, r: int, b: int):
+    """P(candidate | Jaccard=s) = 1 - (1 - s^r)^b  (paper §4.4)."""
+    s = jnp.asarray(s, dtype=jnp.float64 if jax.config.jax_enable_x64 else jnp.float32)
+    return 1.0 - (1.0 - s**r) ** b
+
+
+@functools.partial(jax.jit, static_argnames=("r",))
+def band_values(sig: jnp.ndarray, r: int) -> jnp.ndarray:
+    """Fold the signature matrix into the band matrix.
+
+    sig: (D, M) uint32, M = b*r.  Returns (D, b, 2) uint32 — two 32-bit
+    lanes per band value (~64-bit discrimination, paper §4.3).
+    Fold: h <- fmix32(h * GOLDEN + sig_row), chained over the r rows,
+    one chain per lane seed.
+    """
+    D, M = sig.shape
+    assert M % r == 0, f"M={M} not divisible by r={r}"
+    b = M // r
+    sig = sig.astype(jnp.uint32).reshape(D, b, r)
+    lanes = []
+    for lane_seed in _LANE_SEEDS:
+        h = jnp.full((D, b), lane_seed, dtype=jnp.uint32)
+        for k in range(r):
+            h = fmix32(h * GOLDEN32 + sig[:, :, k])
+        lanes.append(h)
+    return jnp.stack(lanes, axis=-1)  # (D, b, 2)
+
+
+def band_values_np(sig: np.ndarray, r: int) -> np.ndarray:
+    from repro.core.hashing import fmix32_np
+
+    D, M = sig.shape
+    b = M // r
+    sig = sig.astype(np.uint32).reshape(D, b, r)
+    lanes = []
+    with np.errstate(over="ignore"):
+        for lane_seed in _LANE_SEEDS:
+            h = np.full((D, b), lane_seed, dtype=np.uint32)
+            for k in range(r):
+                h = fmix32_np((h * GOLDEN32).astype(np.uint32) + sig[:, :, k])
+            lanes.append(h)
+    return np.stack(lanes, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Sort-based candidate generation (static shapes throughout)
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def sort_band(vals: jnp.ndarray, doc_ids: jnp.ndarray):
+    """Lexicographic sort of one band's (value_hi, value_lo, doc) triples.
+
+    vals: (D, 2) uint32; doc_ids: (D,) int32.
+    Returns sorted (vals (D,2), docs (D,)).
+    """
+    hi, lo = vals[:, 0], vals[:, 1]
+    hi_s, lo_s, doc_s = jax.lax.sort((hi, lo, doc_ids), num_keys=2)
+    return jnp.stack([hi_s, lo_s], axis=-1), doc_s
+
+
+@jax.jit
+def run_heads(sorted_vals: jnp.ndarray) -> jnp.ndarray:
+    """Boolean mask: position starts a new equal-value run."""
+    same = jnp.all(sorted_vals[1:] == sorted_vals[:-1], axis=-1)
+    return jnp.concatenate([jnp.array([True]), ~same])
+
+
+@jax.jit
+def star_edges(sorted_vals: jnp.ndarray, sorted_docs: jnp.ndarray):
+    """Candidate edges (doc -> run head) for one sorted band.
+
+    Returns (edges (D, 2) int32, mask (D,) bool).  Edge i connects
+    sorted_docs[i] to the first doc of its run; mask is False for run
+    heads themselves (no self edge).  O(D) edges; connectivity-equivalent
+    to the paper's O(run^2) enumeration for clustering purposes.
+    """
+    heads = run_heads(sorted_vals)
+    idx = jnp.arange(sorted_docs.shape[0])
+    head_idx = jnp.maximum.accumulate(jnp.where(heads, idx, 0))
+    head_doc = sorted_docs[head_idx]
+    edges = jnp.stack([head_doc, sorted_docs], axis=-1).astype(jnp.int32)
+    mask = ~heads
+    return edges, mask
+
+
+def enumerate_pairs_in_runs(
+    sorted_vals: np.ndarray, sorted_docs: np.ndarray, max_pairs: int | None = None
+) -> np.ndarray:
+    """Paper-faithful all-pairs within equal runs (host path, ragged).
+
+    Returns (P, 2) int32 array of candidate pairs (a < b by doc id).
+    """
+    heads = np.ones(len(sorted_docs), dtype=bool)
+    heads[1:] = np.any(sorted_vals[1:] != sorted_vals[:-1], axis=-1)
+    run_start = np.flatnonzero(heads)
+    run_end = np.append(run_start[1:], len(sorted_docs))
+    pairs = []
+    total = 0
+    for s, e in zip(run_start, run_end):
+        k = e - s
+        if k < 2:
+            continue
+        docs = np.sort(sorted_docs[s:e])
+        ii, jj = np.triu_indices(k, k=1)
+        p = np.stack([docs[ii], docs[jj]], axis=-1)
+        pairs.append(p)
+        total += len(p)
+        if max_pairs is not None and total >= max_pairs:
+            break
+    if not pairs:
+        return np.zeros((0, 2), dtype=np.int32)
+    out = np.concatenate(pairs).astype(np.int32)
+    return out[:max_pairs] if max_pairs is not None else out
+
+
+@dataclass(frozen=True)
+class LSHParams:
+    """Paper defaults: M=100, r=2, b=50, n=8 (paper §7.2, §9.1)."""
+
+    num_hashes: int = 100
+    rows_per_band: int = 2
+    ngram: int = 8
+
+    @property
+    def num_bands(self) -> int:
+        return self.num_hashes // self.rows_per_band
+
+    def threshold_estimate(self) -> float:
+        """Approximate similarity threshold (1/b)^(1/r)."""
+        return float((1.0 / self.num_bands) ** (1.0 / self.rows_per_band))
+
+
+def all_candidate_pairs(
+    bands: np.ndarray, max_pairs_per_band: int | None = None
+) -> np.ndarray:
+    """All candidate pairs across bands (host path; dedups across bands).
+
+    bands: (D, b, 2) uint32.
+    """
+    D, b, _ = bands.shape
+    doc_ids = np.arange(D, dtype=np.int32)
+    seen: set[tuple[int, int]] = set()
+    for j in range(b):
+        order = np.lexsort((bands[:, j, 1], bands[:, j, 0]))
+        sv, sd = bands[order, j, :], doc_ids[order]
+        pairs = enumerate_pairs_in_runs(sv, sd, max_pairs_per_band)
+        for a, c in pairs:
+            seen.add((int(a), int(c)))
+    if not seen:
+        return np.zeros((0, 2), dtype=np.int32)
+    return np.array(sorted(seen), dtype=np.int32)

@@ -1,0 +1,151 @@
+"""Shingling: documents -> word n-gram hash sets (paper §2.2, §7.2).
+
+Host side: text -> stemmed word tokens -> token ids (hash vocabulary).
+Device side: padded token-id matrices -> rolling polynomial n-gram hashes.
+
+The paper uses word 8-grams with stemming.  Stemming here is a light
+suffix-stripping stemmer (Porter-lite) — adequate for equating inflected
+forms, dependency-free.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.hashing import (
+    NGRAM_BASE,
+    NGRAM_BASE2,
+    U32_MAX,
+    fmix32,
+    fmix32_np,
+    hash_u32_np,
+)
+
+_WORD_RE = re.compile(r"[A-Za-z0-9]+")
+
+_SUFFIXES = (
+    "ational", "iveness", "fulness", "ousness",
+    "ication", "izations", "ization",
+    "ingly", "edly", "ings",
+    "ing", "ies", "ied", "ely", "es", "ed", "ly", "s",
+)
+
+
+def stem(word: str) -> str:
+    """Suffix-strip stemmer (keeps >=3 chars of stem)."""
+    w = word.lower()
+    for suf in _SUFFIXES:
+        if w.endswith(suf) and len(w) - len(suf) >= 3:
+            return w[: -len(suf)]
+    return w
+
+
+def tokenize(text: str, do_stem: bool = True) -> list[str]:
+    toks = _WORD_RE.findall(text)
+    if do_stem:
+        return [stem(t) for t in toks]
+    return [t.lower() for t in toks]
+
+
+def token_ids(tokens: list[str], seed: int = 0x7045) -> np.ndarray:
+    """Hash words to uint32 ids (hash vocabulary; no lookup table needed)."""
+    out = np.empty(len(tokens), dtype=np.uint32)
+    for i, t in enumerate(tokens):
+        h = 2166136261
+        for ch in t.encode("utf-8"):
+            h = ((h ^ ch) * 16777619) & 0xFFFFFFFF
+        out[i] = h
+    if len(tokens):
+        out = hash_u32_np(out, np.uint32(seed))
+    return out
+
+
+def ngram_set(tokens: list[str], n: int = 8) -> set[tuple[str, ...]]:
+    """Exact n-gram set (oracle for exact Jaccard)."""
+    if len(tokens) < n:
+        return {tuple(tokens)} if tokens else set()
+    return {tuple(tokens[i : i + n]) for i in range(len(tokens) - n + 1)}
+
+
+# ---------------------------------------------------------------------------
+# Padded-matrix n-gram hashing (device path)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class PackedDocs:
+    """A batch of documents as a padded token-id matrix."""
+
+    tokens: np.ndarray  # (D, L) uint32
+    lengths: np.ndarray  # (D,) int32
+
+    @property
+    def num_docs(self) -> int:
+        return self.tokens.shape[0]
+
+
+def pack_documents(
+    docs: list[list[str]], max_len: int | None = None
+) -> PackedDocs:
+    lengths = np.array([len(d) for d in docs], dtype=np.int32)
+    L = int(max_len or max(1, lengths.max(initial=1)))
+    toks = np.zeros((len(docs), L), dtype=np.uint32)
+    for i, d in enumerate(docs):
+        ids = token_ids(d[:L])
+        toks[i, : len(ids)] = ids
+        lengths[i] = min(lengths[i], L)
+    return PackedDocs(tokens=toks, lengths=lengths)
+
+
+def ngram_hashes(
+    tokens: jnp.ndarray, lengths: jnp.ndarray, n: int = 8
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Rolling polynomial hash of every length-n token window.
+
+    tokens: (D, L) uint32; lengths: (D,) int32.
+    Returns (hashes (D, L) uint32, valid (D, L) bool).  Position i hashes
+    tokens[i:i+n]; valid iff i + n <= length.  Documents shorter than n
+    hash their full prefix (paper §12 saw notes with <4 words; we keep
+    them rather than crash).
+
+    h(i) = fmix32( sum_k base^(n-1-k) * t[i+k] )   (mod 2^32)
+
+    Windows never wrap: tokens are zero-padded by n on the right so
+    position i always reads tokens[i:i+n] with zero fill (matches the
+    Pallas kernel's halo semantics).
+    """
+    tokens = tokens.astype(jnp.uint32)
+    D, L = tokens.shape
+    padded = jnp.pad(tokens, ((0, 0), (0, n)))
+    acc = jnp.zeros((D, L), dtype=jnp.uint32)
+    base = jnp.uint32(NGRAM_BASE)
+    for k in range(n):
+        acc = acc * base + jax.lax.dynamic_slice_in_dim(padded, k, L, axis=1)
+    acc = fmix32(acc)
+    pos = jnp.arange(L, dtype=jnp.int32)[None, :]
+    lengths = lengths.astype(jnp.int32)[:, None]
+    valid = pos + n <= lengths
+    # Short docs: single shingle at position 0 covering the whole doc.
+    short = (lengths < n) & (pos == 0) & (lengths > 0)
+    valid = valid | short
+    return acc, valid
+
+
+def ngram_hashes_np(tokens: np.ndarray, lengths: np.ndarray, n: int = 8):
+    """Numpy oracle mirroring :func:`ngram_hashes`."""
+    tokens = tokens.astype(np.uint32)
+    D, L = tokens.shape
+    padded = np.pad(tokens, ((0, 0), (0, n)))
+    acc = np.zeros((D, L), dtype=np.uint32)
+    with np.errstate(over="ignore"):
+        for k in range(n):
+            acc = (acc * NGRAM_BASE + padded[:, k : k + L]).astype(np.uint32)
+    acc = fmix32_np(acc)
+    pos = np.arange(L, dtype=np.int32)[None, :]
+    lengths = lengths.astype(np.int32)[:, None]
+    valid = pos + n <= lengths
+    short = (lengths < n) & (pos == 0) & (lengths > 0)
+    return acc, valid | short

@@ -1,0 +1,75 @@
+"""Dedup-integrated LM data pipeline.
+
+texts -> DedupPipeline (keep representatives) -> hash-tokenize -> one flat
+token stream -> step-indexed batches.  ``batch_at(step)`` is a pure
+function of step, which makes the FT loop resumable by construction.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.pipeline import DedupConfig, DedupPipeline
+
+
+def hash_tokenize(text: str, vocab_size: int, seed: int = 17) -> np.ndarray:
+    """Word-hash tokenizer (no vocab file; stable across runs)."""
+    ids = []
+    for w in text.lower().split():
+        h = 2166136261
+        for ch in w.encode():
+            h = ((h ^ ch) * 16777619) & 0xFFFFFFFF
+        h = (h * 0x9E3779B9 + seed) & 0xFFFFFFFF
+        ids.append(h % (vocab_size - 2) + 2)   # 0=pad, 1=eos
+    return np.array(ids, dtype=np.int32)
+
+
+@dataclass
+class CleanDataset:
+    tokens: np.ndarray            # flat stream, eos-separated
+    num_docs_in: int
+    num_docs_kept: int
+    dedup_stats: dict
+
+    def batch_at(self, step: int, batch: int, seq: int) -> dict:
+        need = batch * (seq + 1)
+        start = (step * need) % max(1, len(self.tokens) - need - 1)
+        window = self.tokens[start : start + need]
+        window = window.reshape(batch, seq + 1)
+        return {"tokens": window[:, :-1].copy()}
+
+
+def build_clean_dataset(
+    texts: list[str], vocab_size: int,
+    dedup_cfg: DedupConfig | None = None,
+) -> CleanDataset:
+    pipe = DedupPipeline(dedup_cfg or DedupConfig())
+    res = pipe.run(texts)
+    kept = [t for t, k in zip(texts, res.keep_mask) if k]
+    streams = []
+    for t in kept:
+        streams.append(hash_tokenize(t, vocab_size))
+        streams.append(np.array([1], dtype=np.int32))   # eos
+    tokens = (np.concatenate(streams) if streams
+              else np.zeros((0,), np.int32))
+    return CleanDataset(
+        tokens=tokens,
+        num_docs_in=len(texts),
+        num_docs_kept=len(kept),
+        dedup_stats={
+            "pairs_evaluated": res.stats.pairs_evaluated,
+            "pairs_excluded": int(res.stats.pairs_excluded),
+            "duplicates_removed": res.num_duplicates_removed,
+        },
+    )
+
+
+def synthetic_batch_fn(vocab_size: int, batch: int, seq: int,
+                       seed: int = 0):
+    """Pure random-batch function (for tests without a corpus)."""
+    def fn(step: int) -> dict:
+        rng = np.random.RandomState((seed * 1_000_003 + step) & 0x7FFFFFFF)
+        return {"tokens": rng.randint(
+            2, vocab_size, size=(batch, seq)).astype(np.int32)}
+    return fn

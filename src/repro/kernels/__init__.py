@@ -1,0 +1,4 @@
+"""Pallas TPU kernels for the dedup hot path (see EXAMPLE.md contract)."""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,21 @@
+"""Jit'd public wrappers over the Pallas kernels.
+
+``interpret=None`` auto-selects: interpret mode on CPU (validation), real
+Mosaic lowering on TPU.  These are the entry points the pipeline uses when
+``DedupConfig.use_pallas`` is set.
+"""
+from __future__ import annotations
+
+from repro.kernels.minhash import minhash_signatures
+from repro.kernels.ngram import ngram_hashes
+from repro.kernels.bandfold import band_values
+from repro.kernels.sigjaccard import pair_estimate
+from repro.kernels.flash_attention import flash_attention
+
+__all__ = [
+    "minhash_signatures",
+    "ngram_hashes",
+    "band_values",
+    "pair_estimate",
+    "flash_attention",
+]

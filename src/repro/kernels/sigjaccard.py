@@ -1,0 +1,57 @@
+"""Pallas TPU kernel: signature-agreement Jaccard estimate for pairs.
+
+Given pre-gathered signature rows for P candidate pairs, computes
+est[p] = mean_m( a[p, m] == b[p, m] )  (paper §3.4's m/M estimator).
+Memory-bound; tiled (TP, M) so both operands stream through VMEM once.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TP = 256
+
+
+def _sigjac_kernel(a_ref, b_ref, out_ref, *, m: int):
+    a = a_ref[...]
+    b = b_ref[...]
+    eq = (a == b).astype(jnp.float32)
+    out_ref[...] = jnp.sum(eq, axis=1) * (1.0 / m)
+
+
+@functools.partial(jax.jit, static_argnames=("tp", "interpret"))
+def pair_estimate(
+    sig_a: jnp.ndarray,
+    sig_b: jnp.ndarray,
+    *,
+    tp: int = TP,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """(P, M), (P, M) uint32 -> (P,) float32 agreement fraction."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    P, M = sig_a.shape
+    tp_ = min(tp, max(1, P))
+    Pp = -(-P // tp_) * tp_
+    a = jnp.pad(sig_a.astype(jnp.uint32), ((0, Pp - P), (0, 0)))
+    b = jnp.pad(sig_b.astype(jnp.uint32), ((0, Pp - P), (0, 0)))
+    # Make padded rows disagree so padding can't look like a match.
+    if Pp > P:
+        row = jnp.arange(Pp)[:, None] >= P
+        b = jnp.where(row, b + jnp.uint32(1), b)
+
+    out = pl.pallas_call(
+        functools.partial(_sigjac_kernel, m=M),
+        grid=(Pp // tp_,),
+        in_specs=[
+            pl.BlockSpec((tp_, M), lambda p: (p, 0)),
+            pl.BlockSpec((tp_, M), lambda p: (p, 0)),
+        ],
+        out_specs=pl.BlockSpec((tp_,), lambda p: (p,)),
+        out_shape=jax.ShapeDtypeStruct((Pp,), jnp.float32),
+        interpret=interpret,
+    )(a, b)
+    return out[:P]

@@ -1,0 +1,8 @@
+"""Launchers: mesh builders, multi-pod dry-run, train/serve/dedup drivers.
+
+NOTE: do not import ``repro.launch.dryrun`` from library code — importing
+it sets XLA_FLAGS for 512 host devices (it is a __main__ entry point).
+"""
+from repro.launch.mesh import make_production_mesh, make_test_mesh
+
+__all__ = ["make_production_mesh", "make_test_mesh"]

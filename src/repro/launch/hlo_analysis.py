@@ -1,0 +1,232 @@
+"""HLO artifact analysis: collective-byte accounting + roofline terms.
+
+Sources (ROOFLINE ANALYSIS spec):
+  * ``compiled.cost_analysis()`` -> HLO_FLOPs, HLO_bytes.
+  * ``compiled.as_text()`` (the per-device SPMD-partitioned module) ->
+    per-device collective bytes: operand sizes of all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute ops.
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI.  The three terms are each "seconds if this resource were the only
+bottleneck"; the max is the roofline step time.
+
+Note on normalization: the partitioned HLO is the program of ONE device,
+so summed operand bytes are already per-device; collective_term =
+per_device_bytes / link_bw (algebraically identical to the global
+formula collective_bytes_global / (chips x link_bw)).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+ICI_BW = 50e9            # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(sig: str) -> int:
+    """Sum byte sizes of every shape literal in an HLO type signature."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(sig):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: dict = field(default_factory=dict)
+    count_by_kind: dict = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_kind.values())
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    """Per-device collective bytes from a partitioned HLO module."""
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if not s or "=" not in s:
+            continue
+        # Result type is between '=' and the op name.
+        m = re.search(
+            r"=\s*((?:\([^)]*\))|(?:\w+\[[\d,]*\](?:\{[^}]*\})?))\s+"
+            r"([\w-]+)", s)
+        if not m:
+            continue
+        op = m.group(2)
+        if op.endswith("-start"):
+            op = op[: -len("-start")]
+        if op not in _COLLECTIVES:
+            continue
+        size = _shape_bytes(m.group(1))
+        # all-reduce moves ~2x operand bytes (reduce-scatter+all-gather
+        # decomposition); others ~1x of the larger of operand/result.
+        factor = 2 if op == "all-reduce" else 1
+        stats.bytes_by_kind[op] = stats.bytes_by_kind.get(op, 0) + (
+            size * factor)
+        stats.count_by_kind[op] = stats.count_by_kind.get(op, 0) + 1
+    return stats
+
+
+@dataclass
+class Roofline:
+    """All byte/flop quantities are PER-DEVICE (the partitioned HLO is one
+    device's program); ``model_flops`` is the global analytic count."""
+
+    flops: float               # per-device HLO dot flops (trip-corrected)
+    hbm_bytes: float           # per-device traffic proxy (upper bound)
+    coll_bytes_per_dev: float  # per-device collective bytes
+    chips: int
+    model_flops: float = 0.0   # 6*N*D (analytic, global)
+    xla_flops: float = 0.0     # raw cost_analysis (scan-undercounted)
+    xla_bytes: float = 0.0
+    raw_hbm_bytes: float = 0.0   # before bf16 CPU-upcast correction
+    raw_coll_bytes: float = 0.0
+    coll_by_kind: dict = None
+    top_collectives: list = None
+    top_mem: list = None
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes_per_dev / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """useful-compute time / roofline step time (the perf score)."""
+        if self.step_s == 0:
+            return 0.0
+        useful = self.model_flops / (self.chips * PEAK_FLOPS)
+        return useful / self.step_s
+
+    @property
+    def flops_efficiency(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — remat/redundancy waste detector."""
+        total = self.flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    def as_dict(self) -> dict:
+        return {
+            "flops_per_dev": self.flops, "hbm_bytes_per_dev": self.hbm_bytes,
+            "coll_bytes_per_dev": self.coll_bytes_per_dev,
+            "chips": self.chips, "model_flops": self.model_flops,
+            "xla_flops_raw": self.xla_flops,
+            "xla_bytes_raw": self.xla_bytes,
+            "hbm_bytes_uncorrected": self.raw_hbm_bytes,
+            "coll_bytes_uncorrected": self.raw_coll_bytes,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck, "step_s": self.step_s,
+            "roofline_fraction": self.roofline_fraction,
+            "flops_efficiency": self.flops_efficiency,
+            "coll_by_kind": self.coll_by_kind or {},
+            "top_collectives": self.top_collectives or [],
+            "top_mem": self.top_mem or [],
+        }
+
+
+def cost_terms(compiled, chips: int, model_flops: float = 0.0) -> Roofline:
+    from repro.launch.hlo_parse import analyze
+
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    stats = analyze(compiled.as_text())
+    return Roofline(
+        flops=stats.flops, hbm_bytes=stats.mem_bytes_bf16corr,
+        coll_bytes_per_dev=stats.coll_bytes_bf16corr, chips=chips,
+        model_flops=model_flops,
+        xla_flops=float(ca.get("flops", 0.0)),
+        xla_bytes=float(ca.get("bytes accessed", 0.0)),
+        raw_hbm_bytes=stats.traffic_bytes,
+        raw_coll_bytes=stats.coll_bytes,
+        top_mem=[{"bytes": b, "kind": k, "mult": mu, "sig": sg}
+                 for b, k, mu, sg in stats.top_mem[:12]],
+        coll_by_kind={k: v for k, v in sorted(
+            stats.coll_by_kind.items())},
+        top_collectives=[
+            {"bytes": b, "kind": k, "mult": mu, "sig": sg}
+            for b, k, mu, sg in stats.top_collectives[:12]],
+    )
+
+
+# -- analytic model FLOPs -------------------------------------------------------
+
+def param_counts(cfg) -> dict:
+    """Total and active parameter counts from the config (no allocation)."""
+    import jax
+    from repro.models import lm as _lm
+    from repro.models import whisper as _whisper
+
+    mod = _whisper if cfg.encdec else _lm
+    shapes = jax.eval_shape(
+        lambda: mod.init(cfg, jax.random.PRNGKey(0))[0])
+    total = sum(
+        int(x.size) for x in jax.tree.leaves(shapes))
+    active = total
+    if cfg.moe is not None:
+        m = cfg.moe
+        h = m.d_expert or cfg.d_ff
+        per_expert = 3 * cfg.d_model * h
+        n_moe_layers = cfg.n_layers // m.every
+        inactive = (m.n_experts - m.top_k) * per_expert * n_moe_layers
+        active = total - inactive
+    return {"total": total, "active": active}
+
+
+def model_flops(cfg, cell) -> float:
+    """MODEL_FLOPS per step: 6*N*D (train) / 2*N*D (forward-only),
+    N = active params (MoE), D = processed tokens."""
+    counts = param_counts(cfg)
+    n = counts["active"]
+    if cell.kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        return 6.0 * n * tokens
+    if cell.kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * cell.global_batch

@@ -1,0 +1,342 @@
+"""Trip-count-aware HLO analyzer (the dry-run 'profiler').
+
+XLA's ``cost_analysis()`` visits while-loop bodies ONCE — a scan over 60
+layers undercounts flops/bytes/collectives by 60x (verified in-repo).
+This module re-derives the roofline inputs from the partitioned,
+optimized HLO text with loop trip counts multiplied through:
+
+  * dot FLOPs from operand shapes (per-computation symbol table) +
+    contracting dims,
+  * collective bytes (all-gather/all-reduce/reduce-scatter/all-to-all/
+    collective-permute) from result shapes,
+  * a memory-traffic proxy: sum of non-trivial op result bytes (an upper
+    bound on HBM traffic — fusion lowers real traffic; see EXPERIMENTS.md).
+
+Trip counts come from the ``backend_config={"known_trip_count":{"n":..}}``
+annotation XLA attaches to canonical counted loops (jax scans), with a
+condition-parse fallback.
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# ops whose result buffers we exclude from the memory proxy (no real
+# HBM write, or bookkeeping)
+_NO_TRAFFIC = {"parameter", "get-tuple-element", "tuple", "bitcast",
+               "constant", "iota", "copy", "while", "conditional",
+               "after-all", "partition-id", "replica-id"}
+
+# fused-ideal memory model: ops that MUST touch HBM on TPU even under
+# perfect fusion.  dot counts lhs+rhs+out; the others count in+out
+# (2x result).  Pure elementwise/layout ops fuse away (the CPU backend
+# fuses far less than TPU, so counting every top-level result
+# overestimates TPU traffic several-fold — both proxies are recorded).
+_MEM_IO2 = {"scatter", "gather", "sort", "reduce", "reduce-window",
+            "dynamic-update-slice", "dynamic-slice", "concatenate",
+            "pad", "convolution", "select-and-scatter",
+            "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+            "collective-permute"}
+# fusion outputs count 1x (write only): inputs come fused from their
+# producers; counting them 2x double-charges every fusion chain (the CPU
+# backend emits MANY small chained fusions where TPU emits few).
+_MEM_IO1 = {"fusion"}
+
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*"
+    r"((?:\([^;]*?\))|(?:\w+\[[\d,]*\](?:\{[^}]*\})?))\s+"
+    r"([\w\-]+)\(")
+
+_CALL_RE = re.compile(
+    r"(body|computation|condition|branch_computations|to_apply|calls)="
+    r"\{?(%[\w.\-]+(?:,\s*%[\w.\-]+)*)\}?")
+
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+
+def _shape_list(sig: str):
+    out = []
+    for dt, dims in _SHAPE_RE.findall(sig):
+        if dt not in _DTYPE_BYTES:
+            continue
+        out.append((dt, tuple(int(d) for d in dims.split(",") if d)))
+    return out
+
+
+def _bytes_of(sig: str) -> int:
+    total = 0
+    for dt, shape in _shape_list(sig):
+        n = 1
+        for d in shape:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _f32_bytes_of(sig: str, floor: int = 1 << 20) -> int:
+    """f32 bytes in shapes above ``floor`` — candidates for the CPU
+    bf16->f32 normalization artifact (TPU would keep these bf16)."""
+    total = 0
+    for dt, shape in _shape_list(sig):
+        if dt != "f32":
+            continue
+        n = 1
+        for d in shape:
+            n *= d
+        if n * 4 >= floor:
+            total += n * 4
+    return total
+
+
+@dataclass
+class OpInfo:
+    kind: str
+    result_sig: str
+    flops: float = 0.0
+    coll_bytes: float = 0.0
+    coll_f32_bytes: float = 0.0   # f32 share (CPU bf16-upcast artifact)
+    traffic_bytes: float = 0.0
+    traffic_f32_bytes: float = 0.0
+    mem_bytes: float = 0.0        # fused-ideal HBM traffic
+    mem_f32_bytes: float = 0.0
+    children: tuple = ()
+    trip: int | None = None
+    body_child: str | None = None
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: list = field(default_factory=list)
+
+
+def parse_module(text: str) -> tuple[dict, str | None]:
+    comps: dict[str, Computation] = {}
+    entry = None
+    cur: Computation | None = None
+    symbols: dict[str, str] = {}
+    pending: list[tuple] = []
+
+    def finish():
+        nonlocal pending
+        for info, line in pending:
+            if info.kind == "dot":
+                info.flops = _dot_flops(line, symbols)
+                opnames = re.findall(r"dot\((%[\w.\-]+),\s*(%[\w.\-]+)", line)
+                io = _bytes_of(info.result_sig)
+                io_f32 = _f32_bytes_of(info.result_sig)
+                if opnames:
+                    for nm in opnames[0]:
+                        sig_ = symbols.get(nm, "")
+                        io += _bytes_of(sig_)
+                        io_f32 += _f32_bytes_of(sig_)
+                info.mem_bytes = io
+                info.mem_f32_bytes = io_f32
+        pending = []
+
+    for line in text.splitlines():
+        s = line.rstrip()
+        if cur is None:
+            header = re.match(
+                r"^\s*(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{\s*$", s)
+            if header:
+                cur = Computation(name=header.group(2))
+                comps[cur.name] = cur
+                if header.group(1):
+                    entry = cur.name
+                symbols = {}
+            continue
+        if s.strip() == "}":
+            finish()
+            cur = None
+            continue
+        m = _OP_RE.match(s)
+        if not m:
+            continue
+        name, sig, op = m.groups()
+        symbols[name] = sig
+        children = []
+        body_child = None
+        for cm in _CALL_RE.finditer(s):
+            kids = [c.strip().lstrip("%") for c in cm.group(2).split(",")]
+            if cm.group(1) == "body" and kids:
+                body_child = kids[0]
+            children.extend(kids)
+        info = OpInfo(kind=op, result_sig=sig, children=tuple(children))
+        info.body_child = body_child
+        if op == "while":
+            tm = _TRIP_RE.search(s)
+            info.trip = int(tm.group(1)) if tm else None
+        base = op[:-6] if op.endswith("-start") else op
+        if base in _COLLECTIVES:
+            factor = 2 if base == "all-reduce" else 1
+            info.coll_bytes = _bytes_of(sig) * factor
+            info.coll_f32_bytes = _f32_bytes_of(sig) * factor
+            info.kind = base
+        if op == "dot":
+            pending.append((info, s))
+        if base not in _NO_TRAFFIC and not op.endswith("-done"):
+            info.traffic_bytes = _bytes_of(sig)
+            info.traffic_f32_bytes = _f32_bytes_of(sig)
+        if base in _MEM_IO2 and not op.endswith("-done"):
+            info.mem_bytes = 2.0 * _bytes_of(sig)
+            info.mem_f32_bytes = 2.0 * _f32_bytes_of(sig)
+        elif base in _MEM_IO1 and not op.endswith("-done"):
+            info.mem_bytes = float(_bytes_of(sig))
+            info.mem_f32_bytes = float(_f32_bytes_of(sig))
+        cur.ops.append(info)
+    finish()
+    return comps, entry
+
+
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERANDS_RE = re.compile(r"\(((?:%[\w.\-]+(?:,\s*)?)+)\)")
+
+
+def _dot_flops(line: str, symbols: dict) -> float:
+    m = _OP_RE.match(line)
+    if not m:
+        return 0.0
+    result_shapes = _shape_list(m.group(2))
+    if not result_shapes:
+        return 0.0
+    _, rshape = result_shapes[0]
+    out_elems = 1
+    for d in rshape:
+        out_elems *= d
+    # first operand name after "dot("
+    om = re.search(r"dot\((%[\w.\-]+)", line)
+    cm = _LHS_CONTRACT_RE.search(line)
+    if not om or not cm:
+        return 2.0 * out_elems
+    lhs_sig = symbols.get(om.group(1))
+    if not lhs_sig:
+        return 2.0 * out_elems
+    shapes = _shape_list(lhs_sig)
+    if not shapes:
+        return 2.0 * out_elems
+    _, lhs_shape = shapes[0]
+    k = 1
+    for idx in cm.group(1).split(","):
+        if idx and int(idx) < len(lhs_shape):
+            k *= lhs_shape[int(idx)]
+    return 2.0 * out_elems * k
+
+
+@dataclass
+class HLOStats:
+    flops: float = 0.0
+    coll_bytes: float = 0.0
+    coll_f32_bytes: float = 0.0
+    coll_by_kind: dict = field(default_factory=dict)
+    traffic_bytes: float = 0.0
+    traffic_f32_bytes: float = 0.0
+    mem_bytes: float = 0.0
+    mem_f32_bytes: float = 0.0
+    top_collectives: list = field(default_factory=list)
+    top_mem: list = field(default_factory=list)
+
+    @property
+    def mem_bytes_bf16corr(self) -> float:
+        return self.mem_bytes - 0.5 * self.mem_f32_bytes
+
+    @property
+    def coll_bytes_bf16corr(self) -> float:
+        """TPU estimate: large f32 payloads are CPU bf16-upcasts (verified
+        against the StableHLO, which carries bf16) — halve them."""
+        return self.coll_bytes - 0.5 * self.coll_f32_bytes
+
+    @property
+    def traffic_bytes_bf16corr(self) -> float:
+        return self.traffic_bytes - 0.5 * self.traffic_f32_bytes
+
+    def as_dict(self):
+        return {
+            "flops": self.flops, "coll_bytes": self.coll_bytes,
+            "coll_by_kind": {k: v for k, v in sorted(
+                self.coll_by_kind.items())},
+            "traffic_bytes": self.traffic_bytes,
+            "top_collectives": [
+                {"bytes": b, "kind": k, "mult": mu, "sig": sg}
+                for b, k, mu, sg in self.top_collectives[:20]],
+        }
+
+
+def analyze(text: str) -> HLOStats:
+    comps, entry = parse_module(text)
+    stats = HLOStats()
+
+    def walk(name: str, mult: float, depth: int = 0,
+             in_fusion: bool = False, body_trips: int = 0):
+        comp = comps.get(name)
+        if comp is None or depth > 16:
+            return
+        for op in comp.ops:
+            # Loop-invariant heuristic: an op inside a counted loop whose
+            # result's LEADING dim equals the trip count is (almost
+            # always) the full stacked scan-xs array hoisted into the
+            # body — it exists once, not once per iteration.  Verified on
+            # mamba2 prefill: the (NC, B, Q, H, P) chunk reshape was
+            # charged NC x too much (9.9 TB -> 39 GB).
+            op_mult = mult
+            if body_trips > 1:
+                shapes = _shape_list(op.result_sig)
+                if shapes and shapes[0][1] and                         shapes[0][1][0] == body_trips:
+                    op_mult = mult / body_trips
+            if op.flops:
+                stats.flops += op.flops * op_mult
+            if op.coll_bytes:
+                stats.coll_bytes += op.coll_bytes * op_mult
+                stats.coll_f32_bytes += op.coll_f32_bytes * op_mult
+                stats.coll_by_kind[op.kind] = stats.coll_by_kind.get(
+                    op.kind, 0.0) + op.coll_bytes * op_mult
+                stats.top_collectives.append(
+                    (op.coll_bytes * op_mult, op.kind, op_mult,
+                     op.result_sig[:120]))
+            # Memory proxy: count each op's result write ONCE at the level
+            # where it hits HBM — ops inside fusion bodies share the fused
+            # kernel's output buffer, so only the fusion's own result
+            # counts (otherwise a 30-op fused elementwise chain counts
+            # 30x its tensor size).
+            if not in_fusion:
+                stats.traffic_bytes += op.traffic_bytes * op_mult
+                stats.traffic_f32_bytes += op.traffic_f32_bytes * op_mult
+                if op.mem_bytes:
+                    stats.mem_bytes += op.mem_bytes * op_mult
+                    stats.mem_f32_bytes += op.mem_f32_bytes * op_mult
+                    stats.top_mem.append(
+                        (op.mem_bytes * op_mult, op.kind, op_mult,
+                         op.result_sig[:100]))
+            if op.kind == "while" and op.children:
+                names = list(op.children)
+                body = getattr(op, "body_child", None) or names[0]
+                trips = op.trip if op.trip else 1
+                walk(body, mult * trips, depth + 1, in_fusion,
+                     body_trips=trips)
+                for other in names:
+                    if other != body:
+                        walk(other, mult, depth + 1, in_fusion)
+            elif op.children:
+                child_fused = in_fusion or op.kind in (
+                    "fusion", "call", "map", "reduce", "reduce-window",
+                    "scatter", "sort", "custom-call")
+                for child in op.children:
+                    walk(child, op_mult, depth + 1, child_fused,
+                         body_trips)
+
+    if entry:
+        walk(entry, 1.0)
+    stats.top_collectives.sort(key=lambda t: -t[0])
+    stats.top_mem.sort(key=lambda t: -t[0])
+    del stats.top_mem[40:]
+    return stats

@@ -1,0 +1,30 @@
+"""Production mesh builders (functions, never module-level constants —
+importing this module must not touch jax device state)."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single pod (256 chips) or 2x16x16 two-pod (512 chips).
+
+    Uses the first prod(shape) available devices so a 512-device host
+    platform can build the single-pod mesh too.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) == need:
+        return jax.make_mesh(shape, axes)
+    assert len(devices) >= need, (
+        f"need {need} devices, have {len(devices)} — run under "
+        f"XLA_FLAGS=--xla_force_host_platform_device_count=512")
+    return jax.make_mesh(shape, axes, devices=devices[:need])
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh over however many host devices tests forced."""
+    need = int(np.prod(shape))
+    return jax.make_mesh(shape, axes, devices=jax.devices()[:need])

@@ -1,0 +1,7 @@
+from repro.models.config import (
+    MLACfg, MoECfg, ModelConfig, SSMCfg, SHAPE_CELLS, ShapeCell,
+    cell_applicable,
+)
+
+__all__ = ["ModelConfig", "MoECfg", "MLACfg", "SSMCfg", "SHAPE_CELLS",
+           "ShapeCell", "cell_applicable"]

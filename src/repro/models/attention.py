@@ -1,0 +1,137 @@
+"""Attention: blockwise (flash-style) training/prefill path + decode path.
+
+The blockwise path scans over KV blocks with an online softmax so the
+(Sq x Skv) score matrix never materializes — mandatory for the 32k prefill
+cells (a dense 32k x 32k score tensor would be ~PB-scale at batch 32).
+Supports GQA/MQA (n_kv_heads <= n_heads), causal masking, and sliding
+windows (h2o-danube).  Pure jnp + lax.scan: XLA fuses each block's matmul
+chain; remat recomputes blocks in the backward pass.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.sharding import constrain
+
+
+def _mask_bias(q_pos, k_pos, *, causal, window, kv_len=None):
+    """(…, Sq, Tkv) additive bias from position masks."""
+    m = k_pos[None, :] <= q_pos[:, None] if causal else (
+        jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool))
+    if window is not None:
+        m = m & (k_pos[None, :] > q_pos[:, None] - window)
+    if kv_len is not None:
+        m = m & (k_pos[None, :] < kv_len)
+    return jnp.where(m, 0.0, -jnp.inf).astype(jnp.float32)
+
+
+def blockwise_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset=0,
+    block_kv: int = 512,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    """q: (B, Sq, H, Dh); k: (B, Skv, Hkv, Dh); v: (B, Skv, Hkv, Dv).
+
+    Returns (B, Sq, H, Dv).  H % Hkv == 0 (GQA groups).
+    """
+    B, Sq, H, Dh = q.shape
+    _, Skv, Hkv, Dv = v.shape
+    g = H // Hkv
+    scale = scale if scale is not None else Dh**-0.5
+    blk = min(block_kv, Skv)
+    n_blk = -(-Skv // blk)
+    pad = n_blk * blk - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qg = q.reshape(B, Sq, Hkv, g, Dh)
+    q_pos = q_offset + jnp.arange(Sq, dtype=jnp.int32)
+    kb = k.reshape(B, n_blk, blk, Hkv, Dh)
+    vb = v.reshape(B, n_blk, blk, Hkv, Dv)
+
+    def step(carry, inputs):
+        m_prev, l_prev, acc = carry
+        kblk, vblk, bi = inputs                  # (B, blk, Hkv, Dh)
+        k_pos = bi * blk + jnp.arange(blk, dtype=jnp.int32)
+        s = jnp.einsum(
+            "bqhgd,bkhd->bhgqk", qg, kblk,
+            preferred_element_type=jnp.float32) * scale
+        bias = _mask_bias(q_pos, k_pos, causal=causal, window=window,
+                          kv_len=jnp.int32(Skv - 0) if pad else None)
+        if pad:
+            bias = jnp.where(k_pos[None, :] < Skv, bias, -jnp.inf)
+        s = s + bias[None, None, None]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        # Guard fully-masked rows (m == -inf).
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(jnp.isfinite(s), p, 0.0)
+        corr = jnp.where(jnp.isfinite(m_prev),
+                         jnp.exp(m_prev - m_safe), 0.0)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(vblk.dtype), vblk,
+                        preferred_element_type=jnp.float32)
+        acc = acc * corr[..., None] + pv
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((B, Hkv, g, Sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, g, Sq), jnp.float32)
+    acc0 = jnp.zeros((B, Hkv, g, Sq, Dv), jnp.float32)
+    kbs = jnp.moveaxis(kb, 1, 0)
+    vbs = jnp.moveaxis(vb, 1, 0)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, acc0),
+        (kbs, vbs, jnp.arange(n_blk, dtype=jnp.int32)))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    out = jnp.moveaxis(out, 3, 1).reshape(B, Sq, H, Dv)
+    return out.astype(q.dtype)
+
+
+def decode_attention(
+    q: jnp.ndarray,
+    k_cache: jnp.ndarray,
+    v_cache: jnp.ndarray,
+    kv_len,
+    *,
+    window: int | None = None,
+    scale: float | None = None,
+    seq_shard: bool = False,
+) -> jnp.ndarray:
+    """Single-token decode. q: (B, H, Dh); caches: (B, S, Hkv, D*).
+
+    ``kv_len``: (B,) or scalar — number of valid cache positions; the new
+    token attends to positions < kv_len.  ``seq_shard`` marks the cache as
+    sequence-sharded over the 'data' mesh axis (long_500k): the softmax
+    reduction over S then spans shards and the SPMD partitioner emits the
+    distributed max/sum (log-sum-exp merge).
+    """
+    B, S, Hkv, Dh = k_cache.shape
+    H = q.shape[1]
+    g = H // Hkv
+    Dv = v_cache.shape[-1]
+    scale = scale if scale is not None else Dh**-0.5
+    if seq_shard:
+        k_cache = constrain(k_cache, "batch", "seq_shard", None, None)
+        v_cache = constrain(v_cache, "batch", "seq_shard", None, None)
+    qg = q.reshape(B, Hkv, g, Dh)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(S, dtype=jnp.int32)
+    kv_len = jnp.asarray(kv_len, jnp.int32)
+    valid = pos[None, :] < kv_len.reshape(-1, 1)
+    if window is not None:
+        valid = valid & (pos[None, :] >= kv_len.reshape(-1, 1) - window)
+    s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", w.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, H, Dv).astype(q.dtype)

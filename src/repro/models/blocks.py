@@ -1,0 +1,228 @@
+"""Transformer block assembly: GQA attention blocks, MLPs, layer dispatch.
+
+One "unit" is the scanned entity in the layer stack; a unit contains one
+or more sub-blocks (e.g. llama4 alternates dense/MoE layers -> unit of 2;
+zamba2 units are `shared_every` mamba layers + one shared attention block).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import blockwise_attention, decode_attention
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    Builder, apply_norm, apply_rope, glu_act, make_norm,
+)
+from repro.models.mla import make_mla, mla_decode, mla_prefill
+from repro.models.moe import make_moe, moe_ffn
+from repro.models.sharding import constrain
+from repro.models.ssm import make_ssm, ssd_decode, ssd_forward
+
+
+# -- GQA attention ----------------------------------------------------------
+
+def make_attn(b: Builder, cfg: ModelConfig, stack: int = 0):
+    d, H, Hkv, dh = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                     cfg.resolved_head_dim)
+    s = b.scope("attn")
+    s.make("wq", (d, H, dh), ("embed", "heads", "qkv"), stack=stack)
+    s.make("wk", (d, Hkv, dh), ("embed", "heads", "qkv"), stack=stack)
+    s.make("wv", (d, Hkv, dh), ("embed", "heads", "qkv"), stack=stack)
+    s.make("wo", (H, dh, d), ("heads", "qkv", "embed"), stack=stack)
+
+
+def attn_qkv(p, cfg: ModelConfig, x, positions, rope: bool = True):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    q = constrain(q, "batch", "seq", "act_heads", None)
+    k = constrain(k, "batch", "seq", "act_heads", None)
+    return q, k, v
+
+
+def attn_fwd(p, cfg: ModelConfig, x, positions, *, causal=True,
+             window=None, block_kv=512, rope=True, kv=None):
+    """Full-sequence attention (train / prefill / encoder).
+
+    Returns (out, (k, v)) — k/v returned for cache construction.
+    ``kv``: externally supplied (k, v) for cross-attention.
+    """
+    if kv is None:
+        q, k, v = attn_qkv(p, cfg, x, positions, rope)
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+        if rope:
+            q = apply_rope(q, positions, cfg.rope_theta)
+        k, v = kv
+    if cfg.use_flash_attention:
+        from repro.kernels.flash_attention import flash_attention
+
+        out = flash_attention(q, k, v, causal=causal, window=window)
+    else:
+        out = blockwise_attention(q, k, v, causal=causal, window=window,
+                                  block_kv=block_kv)
+    out = constrain(out, "batch", "seq", "act_heads", None)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return out, (k, v)
+
+
+def attn_decode(p, cfg: ModelConfig, x, cache, kv_len, *, window=None,
+                rope=True, seq_shard=False, ring=False, cross=False):
+    """Single-token decode with cache update.
+
+    cache: {"k": (B,S,Hkv,dh), "v": ..., optional "pos": (B,S)}.
+    ``ring``: sliding-window ring buffer (slot = pos % S).
+    ``cross``: cross-attention — cache is static, no update.
+    """
+    B = x.shape[0]
+    pos = jnp.asarray(kv_len, jnp.int32).reshape(-1)
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])     # (B, 1, H, dh)
+    if rope:
+        q = apply_rope(q, pos[:, None], cfg.rope_theta)
+    q = q[:, 0]
+    k_cache, v_cache = cache["k"], cache["v"]
+    if not cross:
+        k_new = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+        v_new = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+        if rope:
+            k_new = apply_rope(k_new, pos[:, None], cfg.rope_theta)
+        S = k_cache.shape[1]
+        slot = jnp.where(jnp.bool_(ring), pos % S, jnp.minimum(pos, S - 1))
+        bidx = jnp.arange(B)
+        k_cache = k_cache.at[bidx, slot].set(
+            k_new[:, 0].astype(k_cache.dtype))
+        v_cache = v_cache.at[bidx, slot].set(
+            v_new[:, 0].astype(v_cache.dtype))
+        cache = dict(cache, k=k_cache, v=v_cache)
+        if "pos" in cache:
+            cache["pos"] = cache["pos"].at[bidx, slot].set(pos)
+    if "pos" in cache:
+        pos_ids = cache["pos"]
+        valid = (pos_ids >= 0) & (pos_ids <= pos[:, None])
+        if window is not None:
+            valid = valid & (pos_ids > pos[:, None] - window)
+        out = _decode_masked(q, k_cache, v_cache, valid)
+    else:
+        out = decode_attention(q, k_cache, v_cache,
+                               pos + (0 if cross else 1),
+                               window=window, seq_shard=seq_shard)
+    out = jnp.einsum("bhk,hkd->bd", out, p["wo"])[:, None]
+    return out, cache
+
+
+def _decode_masked(q, k_cache, v_cache, valid):
+    B, S, Hkv, Dh = k_cache.shape
+    H = q.shape[1]
+    g = H // Hkv
+    qg = q.reshape(B, Hkv, g, Dh)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, k_cache,
+                   preferred_element_type=jnp.float32) * Dh**-0.5
+    s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", w.astype(v_cache.dtype), v_cache)
+    return out.reshape(B, H, v_cache.shape[-1]).astype(q.dtype)
+
+
+# -- dense MLP ----------------------------------------------------------------
+
+def make_mlp(b: Builder, cfg: ModelConfig, stack: int = 0):
+    d, ff = cfg.d_model, cfg.d_ff
+    s = b.scope("mlp")
+    if cfg.mlp != "gelu":
+        s.make("w_gate", (d, ff), ("embed", "mlp"), stack=stack)
+    s.make("w_up", (d, ff), ("embed", "mlp"), stack=stack)
+    s.make("w_down", (ff, d), ("mlp", "embed"), stack=stack)
+
+
+def mlp_fwd(p, cfg: ModelConfig, x):
+    if cfg.mlp == "gelu":
+        h = jax.nn.gelu(x @ p["w_up"], approximate=True)
+    else:
+        h = glu_act(cfg.mlp, x @ p["w_gate"], x @ p["w_up"])
+    h = constrain(h, "batch", "seq", "act_mlp")
+    return h @ p["w_down"]
+
+
+# -- layer builders -----------------------------------------------------------
+
+def make_decoder_layer(b: Builder, cfg: ModelConfig, *, moe_layer: bool,
+                       stack: int = 0):
+    make_norm(b, "ln_attn", cfg.norm, cfg.d_model, stack=stack)
+    make_norm(b, "ln_mlp", cfg.norm, cfg.d_model, stack=stack)
+    if cfg.mla is not None:
+        make_mla(b, cfg, stack=stack)
+    else:
+        make_attn(b, cfg, stack=stack)
+    if moe_layer:
+        make_moe(b, cfg, stack=stack)
+    else:
+        make_mlp(b, cfg, stack=stack)
+
+
+def make_ssm_layer(b: Builder, cfg: ModelConfig, stack: int = 0):
+    make_norm(b, "ln_ssm", cfg.norm, cfg.d_model, stack=stack)
+    make_ssm(b, cfg, stack=stack)
+
+
+ZERO_AUX = {"lb_loss": jnp.float32(0), "z_loss": jnp.float32(0),
+            "drop_frac": jnp.float32(0)}
+
+
+def decoder_layer_fwd(p, cfg: ModelConfig, x, positions, *,
+                      moe_layer: bool, mode: str, cache=None, kv_len=None,
+                      window=None, seq_shard=False, ring=False):
+    """One attention+ffn layer.  Returns (x, cache, aux)."""
+    h = apply_norm(cfg.norm, x, p.get("ln_attn"))
+    if cfg.mla is not None:
+        if mode == "decode":
+            a, new_cache = mla_decode(p["mla"], cfg, h, cache, kv_len)
+        else:
+            a, kvc = mla_prefill(p["mla"], cfg, h, positions)
+            new_cache = kvc if mode == "prefill" else None
+    else:
+        if mode == "decode":
+            a, new_cache = attn_decode(
+                p["attn"], cfg, h, cache, kv_len, window=window,
+                seq_shard=seq_shard, ring=ring)
+        else:
+            a, (k, v) = attn_fwd(p["attn"], cfg, h, positions,
+                                 window=window)
+            new_cache = {"k": k, "v": v} if mode == "prefill" else None
+    x = x + a
+    h = apply_norm(cfg.norm, x, p.get("ln_mlp"))
+    if moe_layer:
+        f, aux = _moe_dispatch(p["moe"], cfg, h)
+    else:
+        f, aux = mlp_fwd(p["mlp"], cfg, h), ZERO_AUX
+    return x + f, new_cache, aux
+
+
+def _moe_dispatch(p, cfg: ModelConfig, h):
+    """Route to the expert-parallel shard_map path when a mesh is active
+    and experts divide the EP axis; else the dense-global fallback."""
+    from repro.models import sharding as shlib
+    from repro.models.moe_sharded import moe_ffn_ep
+
+    ctx = getattr(shlib._ACTIVE, "ctx", None)
+    if ctx is not None:
+        mesh, rules = ctx
+        ep_axis = shlib.resolve_axis(rules, "experts", mesh)
+        if ep_axis and cfg.moe.n_experts % mesh.shape[ep_axis] == 0:
+            return moe_ffn_ep(p, cfg, h)
+    return moe_ffn(p, cfg, h)
+
+
+def ssm_layer_fwd(p, cfg: ModelConfig, x, *, mode: str, cache=None):
+    h = apply_norm(cfg.norm, x, p.get("ln_ssm"))
+    if mode == "decode":
+        o, new_cache = ssd_decode(p["ssm"], cfg, h, cache)
+    else:
+        o, c = ssd_forward(p["ssm"], cfg, h)
+        new_cache = c if mode == "prefill" else None
+    return x + o, new_cache, ZERO_AUX

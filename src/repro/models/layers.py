@@ -1,0 +1,200 @@
+"""Shared model building blocks: param builder, norms, RoPE, losses."""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Parameter builder: creates arrays and records logical sharding axes
+# ---------------------------------------------------------------------------
+
+class Builder:
+    """Creates parameters and a parallel pytree of logical-axis tuples.
+
+    Usable under ``jax.eval_shape`` (pure jnp inits) so the dry-run can
+    build ShapeDtypeStruct param trees without allocating.
+    """
+
+    def __init__(self, key, dtype, path: str = "", abstract: bool = False):
+        self.key = key
+        self.dtype = dtype
+        self.path = path
+        self.abstract = abstract   # ShapeDtypeStructs only, no allocation
+        self.params: dict[str, Any] = {}
+        self.axes: dict[str, Any] = {}
+
+    def scope(self, name: str) -> "Builder":
+        sub = Builder(self.key, self.dtype, f"{self.path}/{name}",
+                      self.abstract)
+        self.params[name] = sub.params
+        self.axes[name] = sub.axes
+        return sub
+
+    def make(
+        self,
+        name: str,
+        shape: tuple[int, ...],
+        axes: tuple,
+        init: str = "normal",
+        stack: int = 0,
+        fan_in: int | None = None,
+        dtype=None,
+    ):
+        full_shape = (stack,) + tuple(shape) if stack else tuple(shape)
+        full_axes = (("layers",) + tuple(axes)) if stack else tuple(axes)
+        assert len(full_shape) == len(full_axes), (name, full_shape, full_axes)
+        dtype = dtype or self.dtype
+        if self.abstract:
+            arr = jax.ShapeDtypeStruct(full_shape, dtype)
+            self.params[name] = arr
+            self.axes[name] = full_axes
+            return arr
+        key = jax.random.fold_in(
+            self.key, hash(f"{self.path}/{name}") & 0x7FFFFFFF
+        )
+        if init == "zeros":
+            arr = jnp.zeros(full_shape, dtype)
+        elif init == "ones":
+            arr = jnp.ones(full_shape, dtype)
+        elif init == "normal":
+            fi = fan_in if fan_in is not None else (
+                shape[-2] if len(shape) >= 2 else shape[-1]
+            )
+            std = 1.0 / math.sqrt(max(1, fi))
+            arr = (jax.random.normal(key, full_shape, jnp.float32) * std
+                   ).astype(dtype)
+        else:
+            raise ValueError(init)
+        self.params[name] = arr
+        self.axes[name] = full_axes
+        return arr
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, weight=None, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    if weight is not None:
+        x = x * (1.0 + weight.astype(jnp.float32))
+    return x.astype(dt)
+
+
+def layernorm(x, weight=None, bias=None, eps: float = 1e-5):
+    """LayerNorm; with weight=bias=None this is OLMo's non-parametric LN."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    if weight is not None:
+        x = x * weight.astype(jnp.float32)
+    if bias is not None:
+        x = x + bias.astype(jnp.float32)
+    return x.astype(dt)
+
+
+def apply_norm(kind: str, x, params: dict | None):
+    if kind == "rmsnorm":
+        return rmsnorm(x, params["scale"] if params else None)
+    if kind == "layernorm":
+        return layernorm(
+            x,
+            params["scale"] if params else None,
+            params.get("bias") if params else None,
+        )
+    if kind == "nonparam_ln":
+        return layernorm(x, None, None)
+    raise ValueError(kind)
+
+
+def make_norm(b: Builder, name: str, kind: str, d: int, stack: int = 0):
+    if kind == "nonparam_ln":
+        return
+    s = b.scope(name)
+    if kind == "rmsnorm":
+        s.make("scale", (d,), ("act_embed",), init="zeros", stack=stack)
+    elif kind == "layernorm":
+        s.make("scale", (d,), ("act_embed",), init="ones", stack=stack)
+        s.make("bias", (d,), ("act_embed",), init="zeros", stack=stack)
+
+
+def norm_params(params: dict, name: str):
+    return params.get(name)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float = 10_000.0):
+    """x: (..., S, H, Dh) or (..., S, Dh); positions: (..., S)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # (dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, dh/2)
+    if x.ndim == ang.ndim + 1:                          # heads axis present
+        ang = ang[..., None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d: int):
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10_000.0, dim / d)
+    pe = jnp.zeros((seq, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(ang))
+    pe = pe.at[:, 1::2].set(jnp.cos(ang[:, : (d + 1) // 2]))
+    return pe
+
+
+# ---------------------------------------------------------------------------
+# Activations / loss
+# ---------------------------------------------------------------------------
+
+def glu_act(kind: str, gate, up):
+    if kind == "swiglu":
+        return jax.nn.silu(gate) * up
+    if kind == "geglu":
+        return jax.nn.gelu(gate, approximate=True) * up
+    raise ValueError(kind)
+
+
+def cross_entropy(logits, labels, mask=None, z_coef: float = 0.0):
+    """Softmax CE in fp32 with optional z-loss; labels < 0 are ignored.
+
+    The label logit is extracted with a masked sum over the vocab axis
+    (NOT take_along_axis): a gather over a tensor-parallel vocab dim does
+    not partition and forces an all-gather of the full fp32 logits
+    (measured: 429 GB/step on deepseek-v2 train_4k; EXPERIMENTS.md §Perf).
+    The masked sum partitions as elementwise + local reduce + small psum.
+    """
+    logits = logits.astype(jnp.float32)
+    valid = labels >= 0 if mask is None else mask & (labels >= 0)
+    safe = jnp.maximum(labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    vocab = logits.shape[-1]
+    col = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                   logits.ndim - 1)
+    ll = jnp.sum(jnp.where(col == safe[..., None], logits, 0.0), axis=-1)
+    nll = lse - ll
+    if z_coef:
+        nll = nll + z_coef * lse**2
+    nll = jnp.where(valid, nll, 0.0)
+    denom = jnp.maximum(jnp.sum(valid), 1)
+    return jnp.sum(nll) / denom

@@ -1,0 +1,368 @@
+"""Decoder-only language models: dense / MoE / MLA / SSM / hybrid / VLM.
+
+The layer stack is organized as scanned "units" (DESIGN: keeps the HLO a
+single rolled loop — essential for compiling 48-60-layer models quickly
+and for clean pipeline stages):
+
+  dense, moe(every=1):  unit = 1 decoder layer,        n_units = n_layers
+  moe(every=2, llama4): unit = dense layer + MoE layer, n_units = n_layers/2
+  ssm (mamba2):         unit = 1 mamba layer,           n_units = n_layers
+  hybrid (zamba2):      unit = shared_every mamba layers + 1 application
+                        of the SHARED attention block,  n_units = n_layers/shared_every
+
+Public entry points: init / loss_fn / prefill / decode / make_cache.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks
+from repro.models.config import ModelConfig
+from repro.models.layers import Builder, apply_norm, cross_entropy, make_norm
+from repro.models.mla import make_mla
+from repro.models.sharding import constrain
+from repro.models.ssm import ssm_cache_shape, ssm_dims
+
+
+# -- structure ----------------------------------------------------------------
+
+def unit_layout(cfg: ModelConfig) -> tuple[str, int]:
+    """Returns (unit_kind, n_units)."""
+    if cfg.family in ("ssm",):
+        return "ssm", cfg.n_layers
+    if cfg.family == "hybrid":
+        assert cfg.shared_every and cfg.n_layers % cfg.shared_every == 0
+        return "hybrid", cfg.n_layers // cfg.shared_every
+    if cfg.moe is not None and cfg.moe.every == 2:
+        assert cfg.n_layers % 2 == 0
+        return "dense_moe", cfg.n_layers // 2
+    if cfg.moe is not None:
+        return "moe", cfg.n_layers
+    return "dense", cfg.n_layers
+
+
+def init(cfg: ModelConfig, key, abstract: bool = False
+         ) -> tuple[dict, dict]:
+    """Build (params, logical_axes) pytrees.
+
+    ``abstract=True`` returns ShapeDtypeStructs (dry-run: no allocation).
+    """
+    b = Builder(key, cfg.pdtype, abstract=abstract)
+    b.make("embed", (cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+           fan_in=cfg.d_model)
+    if not cfg.tie_embeddings:
+        b.make("head", (cfg.d_model, cfg.vocab_size), ("embed", "vocab"))
+    make_norm(b, "ln_final", cfg.norm, cfg.d_model)
+
+    kind, n_units = unit_layout(cfg)
+    u = b.scope("units")
+    if kind == "dense":
+        blocks.make_decoder_layer(u, cfg, moe_layer=False, stack=n_units)
+    elif kind == "moe":
+        blocks.make_decoder_layer(u, cfg, moe_layer=True, stack=n_units)
+    elif kind == "dense_moe":
+        blocks.make_decoder_layer(u.scope("a"), cfg, moe_layer=False,
+                                  stack=n_units)
+        blocks.make_decoder_layer(u.scope("b"), cfg, moe_layer=True,
+                                  stack=n_units)
+    elif kind == "ssm":
+        blocks.make_ssm_layer(u, cfg, stack=n_units)
+    elif kind == "hybrid":
+        for i in range(cfg.shared_every):
+            blocks.make_ssm_layer(u.scope(f"ssm_{i}"), cfg, stack=n_units)
+        # Shared attention block: parameters NOT stacked (shared).
+        sh = b.scope("shared")
+        blocks.make_decoder_layer(sh, cfg, moe_layer=False)
+    return b.params, b.axes
+
+
+# -- caches -------------------------------------------------------------------
+
+def _attn_cache(cfg: ModelConfig, batch: int, seq: int, *, stack: int,
+                seq_shard: bool, ring: bool, dtype):
+    seq_ax = "seq_shard" if seq_shard else None
+    if cfg.mla is not None:
+        m = cfg.mla
+        shapes = {
+            "__mla_c": ((stack, batch, seq, m.kv_lora_rank),
+                        ("layers", "batch", seq_ax, None)),
+            "__mla_r": ((stack, batch, seq, m.rope_head_dim),
+                        ("layers", "batch", seq_ax, None)),
+        }
+        vals = {k: jnp.zeros(s, dtype) for k, (s, _) in shapes.items()}
+        axes = {k: a for k, (_, a) in shapes.items()}
+        # packed as tuple (c, k_rope) by the layer code
+        return (vals["__mla_c"], vals["__mla_r"]), (
+            axes["__mla_c"], axes["__mla_r"])
+    hkv, dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    cache = {
+        "k": jnp.zeros((stack, batch, seq, hkv, dh), dtype),
+        "v": jnp.zeros((stack, batch, seq, hkv, dh), dtype),
+    }
+    axes = {
+        "k": ("layers", "batch", seq_ax, "heads", None),
+        "v": ("layers", "batch", seq_ax, "heads", None),
+    }
+    if ring:
+        cache["pos"] = jnp.full((stack, batch, seq), -1, jnp.int32)
+        axes["pos"] = ("layers", "batch", seq_ax)
+    return cache, axes
+
+
+def _ssm_cache(cfg: ModelConfig, batch: int, stack: int, dtype):
+    sh = ssm_cache_shape(cfg, batch)
+    cache = {
+        "state": jnp.zeros((stack,) + sh["state"], jnp.float32),
+        "conv": jnp.zeros((stack,) + sh["conv"], dtype),
+    }
+    axes = {
+        "state": ("layers", "batch", "heads", None, None),
+        "conv": ("layers", "batch", None, "ssm_inner"),
+    }
+    return cache, axes
+
+
+def make_cache(cfg: ModelConfig, batch: int, seq: int, *,
+               seq_shard: bool = False, dtype=None):
+    """Decode cache pytree + logical axes.  ``seq`` = max cache length.
+
+    Sliding-window models get a ring buffer of size min(seq, window).
+    """
+    dtype = dtype or cfg.cdtype
+    kind, n_units = unit_layout(cfg)
+    ring = cfg.sliding_window is not None
+    if ring:
+        seq = min(seq, cfg.sliding_window)
+    if kind in ("dense", "moe"):
+        return _attn_cache(cfg, batch, seq, stack=n_units,
+                           seq_shard=seq_shard, ring=ring, dtype=dtype)
+    if kind == "dense_moe":
+        ca, aa = _attn_cache(cfg, batch, seq, stack=n_units,
+                             seq_shard=seq_shard, ring=ring, dtype=dtype)
+        cb, ab = _attn_cache(cfg, batch, seq, stack=n_units,
+                             seq_shard=seq_shard, ring=ring, dtype=dtype)
+        return {"a": ca, "b": cb}, {"a": aa, "b": ab}
+    if kind == "ssm":
+        return _ssm_cache(cfg, batch, n_units, dtype)
+    if kind == "hybrid":
+        cache, axes = {}, {}
+        for i in range(cfg.shared_every):
+            cache[f"ssm_{i}"], axes[f"ssm_{i}"] = _ssm_cache(
+                cfg, batch, n_units, dtype)
+        cache["shared"], axes["shared"] = _attn_cache(
+            cfg, batch, seq, stack=n_units, seq_shard=seq_shard,
+            ring=False, dtype=dtype)
+        return cache, axes
+    raise ValueError(kind)
+
+
+# -- unit forward ---------------------------------------------------------------
+
+def _unit_fwd(cfg: ModelConfig, kind: str, unit_params, shared_params,
+              x, positions, *, mode: str, cache=None, kv_len=None,
+              seq_shard=False):
+    window = cfg.sliding_window
+    ring = window is not None and mode == "decode"
+    aux = blocks.ZERO_AUX
+    if kind in ("dense", "moe"):
+        x, new_cache, aux = blocks.decoder_layer_fwd(
+            unit_params, cfg, x, positions,
+            moe_layer=(kind == "moe"), mode=mode, cache=cache,
+            kv_len=kv_len, window=window, seq_shard=seq_shard, ring=ring)
+    elif kind == "dense_moe":
+        x, ca, aux_a = blocks.decoder_layer_fwd(
+            unit_params["a"], cfg, x, positions, moe_layer=False,
+            mode=mode, cache=None if cache is None else cache["a"],
+            kv_len=kv_len, window=window, seq_shard=seq_shard, ring=ring)
+        x, cb, aux_b = blocks.decoder_layer_fwd(
+            unit_params["b"], cfg, x, positions, moe_layer=True,
+            mode=mode, cache=None if cache is None else cache["b"],
+            kv_len=kv_len, window=window, seq_shard=seq_shard, ring=ring)
+        new_cache = None if mode == "train" else {"a": ca, "b": cb}
+        aux = jax.tree.map(lambda p, q: p + q, aux_a, aux_b)
+    elif kind == "ssm":
+        x, new_cache, aux = blocks.ssm_layer_fwd(
+            unit_params, cfg, x, mode=mode, cache=cache)
+    elif kind == "hybrid":
+        new_cache = {}
+        for i in range(cfg.shared_every):
+            x, c, _ = blocks.ssm_layer_fwd(
+                unit_params[f"ssm_{i}"], cfg, x, mode=mode,
+                cache=None if cache is None else cache[f"ssm_{i}"])
+            new_cache[f"ssm_{i}"] = c
+        x, c, aux = blocks.decoder_layer_fwd(
+            shared_params, cfg, x, positions, moe_layer=False, mode=mode,
+            cache=None if cache is None else cache["shared"],
+            kv_len=kv_len, window=window, seq_shard=seq_shard, ring=False)
+        new_cache["shared"] = c
+        if mode == "train":
+            new_cache = None
+    else:
+        raise ValueError(kind)
+    return x, new_cache, aux
+
+
+def _remat_wrap(cfg: ModelConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    policy = (jax.checkpoint_policies.nothing_saveable
+              if cfg.remat == "full"
+              else jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn, policy=policy)
+
+
+# -- stack forward ----------------------------------------------------------------
+
+def _embed(cfg: ModelConfig, params, tokens):
+    x = params["embed"][tokens]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+    return x.astype(cfg.cdtype)
+
+
+def _head(cfg: ModelConfig, params, x):
+    x = apply_norm(cfg.norm, x, params.get("ln_final"))
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    else:
+        logits = x @ params["head"]
+    return constrain(logits, "batch", "seq", "vocab")
+
+
+def forward(cfg: ModelConfig, params, x, positions, *, mode: str,
+            cache=None, kv_len=None, seq_shard: bool = False):
+    """Run the unit stack.  x: (B, S, d) embedded input."""
+    kind, n_units = unit_layout(cfg)
+    shared = params.get("shared")
+
+    def unit(xc, unit_in):
+        unit_params, unit_cache = unit_in
+        h, new_cache, aux = _unit_fwd(
+            cfg, kind, unit_params, shared, xc, positions, mode=mode,
+            cache=unit_cache, kv_len=kv_len, seq_shard=seq_shard)
+        return h, (new_cache, aux)
+
+    unit = _remat_wrap(cfg, unit)
+
+    if cfg.scan_layers:
+        x, (new_cache, auxs) = jax.lax.scan(
+            unit, x, (params["units"], cache))
+        aux = jax.tree.map(lambda a: jnp.sum(a, axis=0), auxs)
+    else:
+        caches, auxs = [], []
+        for i in range(n_units):
+            up = jax.tree.map(lambda a: a[i], params["units"])
+            uc = (None if cache is None
+                  else jax.tree.map(lambda a: a[i], cache))
+            x, (nc, aux) = unit(x, (up, uc))
+            caches.append(nc)
+            auxs.append(aux)
+        new_cache = (None if caches[0] is None else
+                     jax.tree.map(lambda *xs: jnp.stack(xs), *caches))
+        aux = jax.tree.map(lambda *xs: sum(xs), *auxs)
+    return x, new_cache, aux
+
+
+# -- public API -----------------------------------------------------------------
+
+def loss_fn(cfg: ModelConfig, params, batch) -> tuple[jnp.ndarray, dict]:
+    """batch: {"tokens": (B, S) int32, optional "patches": (B, P, d)}."""
+    tokens = batch["tokens"]
+    labels = jnp.concatenate(
+        [tokens[:, 1:], jnp.full_like(tokens[:, :1], -1)], axis=1)
+    x = _embed(cfg, params, tokens)
+    if cfg.n_patches and "patches" in batch:
+        x = jnp.concatenate([batch["patches"].astype(x.dtype), x], axis=1)
+        labels = jnp.concatenate(
+            [jnp.full(tokens.shape[:1] + (cfg.n_patches,), -1,
+                      labels.dtype), labels], axis=1)
+    x = constrain(x, "batch", "seq", "act_embed")
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)[None]
+    x, _, aux = forward(cfg, params, x, positions, mode="train")
+    logits = _head(cfg, params, x)
+    ce = cross_entropy(logits, labels)
+    loss = ce + aux["lb_loss"] + aux["z_loss"]
+    metrics = {"loss": loss, "ce": ce, **aux}
+    return loss, metrics
+
+
+def prefill(cfg: ModelConfig, params, tokens, cache, *, patches=None,
+            seq_shard: bool = False):
+    """Build a KV cache from a full prompt.  Returns (cache, last_logits).
+
+    Note: for attention families the prefill-returned per-layer k/v have
+    the prompt's length; they are written into the (longer) decode cache.
+    """
+    B, S = tokens.shape
+    x = _embed(cfg, params, tokens)
+    if cfg.n_patches and patches is not None:
+        x = jnp.concatenate([patches.astype(x.dtype), x], axis=1)
+        S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)[None]
+    x, new_cache, _ = forward(cfg, params, x, positions, mode="prefill",
+                              seq_shard=seq_shard)
+    logits = _head(cfg, params, x[:, -1:])
+    cache = _merge_prefill_cache(cfg, cache, new_cache, S)
+    return cache, logits
+
+
+def _merge_prefill_cache(cfg: ModelConfig, cache, fresh, prompt_len: int):
+    """Write prefill k/v (length S_p) into the decode cache buffers."""
+    if cache is None:
+        return fresh
+
+    def write_pos(dst):
+        S = dst.shape[-1]
+        take = min(S, prompt_len)
+        pos = jnp.arange(prompt_len - take, prompt_len, dtype=jnp.int32)
+        upd = jnp.full_like(dst, -1)
+        idx = pos % S
+        return upd.at[:, :, idx].set(
+            jnp.broadcast_to(pos, dst.shape[:2] + (take,)))
+
+    def write_seq(dst, src):
+        take = min(prompt_len, dst.shape[2])
+        src_t = src[:, :, prompt_len - take : prompt_len].astype(dst.dtype)
+        if cfg.sliding_window is not None:
+            S = dst.shape[2]
+            idx = (jnp.arange(prompt_len - take, prompt_len) % S)
+            return dst.at[:, :, idx].set(src_t)
+        return jax.lax.dynamic_update_slice_in_dim(dst, src_t, 0, axis=2)
+
+    def merge(dst, src):
+        if isinstance(dst, dict):
+            return {
+                k: (write_pos(dst[k]) if k == "pos" and (
+                    not isinstance(src, dict) or k not in src)
+                    else merge(dst[k], src[k]))
+                for k in dst
+            }
+        if isinstance(dst, (tuple, list)):
+            return type(dst)(merge(d, s) for d, s in zip(dst, src))
+        if (dst.ndim >= 3 and src.ndim == dst.ndim
+                and dst.shape[:2] == src.shape[:2]
+                and dst.shape[3:] == src.shape[3:]
+                and dst.shape[2] != src.shape[2]):
+            return write_seq(dst, src)
+        return src.astype(dst.dtype) if src.shape == dst.shape else dst
+
+    return merge(cache, fresh)
+
+
+def decode(cfg: ModelConfig, params, cache, token, kv_len, *,
+           seq_shard: bool = False):
+    """One decode step.  token: (B,) int32; kv_len: (B,) current lengths.
+
+    Returns (logits (B, 1, V), new cache).
+    """
+    x = _embed(cfg, params, token[:, None])
+    positions = jnp.asarray(kv_len, jnp.int32).reshape(-1, 1)
+    x, new_cache, _ = forward(cfg, params, x, positions, mode="decode",
+                              cache=cache, kv_len=kv_len,
+                              seq_shard=seq_shard)
+    logits = _head(cfg, params, x)
+    return logits, new_cache

@@ -1,0 +1,121 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+Train/prefill: the low-rank KV projection ``c = W_dkv x`` is up-projected
+to per-head k_nope/v and run through the shared blockwise attention (MLA
+is effectively MHA with per-head dim nope+rope and a rope component shared
+across heads).
+
+Decode: the **absorbed** form — W_uk is folded into the query and W_uv
+into the output so attention runs directly against the compressed cache
+(c_kv: kv_lora_rank + rope_head_dim per token).  The KV cache is 576
+values/token instead of n_heads*(dh_k+dh_v) = 32768 — the architecture's
+whole point, visible in the decode_32k roofline.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import blockwise_attention
+from repro.models.config import MLACfg, ModelConfig
+from repro.models.layers import Builder, apply_rope, make_norm, apply_norm
+from repro.models.sharding import constrain
+
+
+def make_mla(b: Builder, cfg: ModelConfig, stack: int = 0):
+    m: MLACfg = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    qd = m.nope_head_dim + m.rope_head_dim
+    s = b.scope("mla")
+    if m.q_lora_rank:
+        s.make("w_dq", (d, m.q_lora_rank), ("embed", "kv_lora"), stack=stack)
+        s.make("w_uq", (m.q_lora_rank, H, qd),
+               ("kv_lora", "heads", "qkv"), stack=stack)
+        make_norm(s, "q_norm", "rmsnorm", m.q_lora_rank, stack=stack)
+    else:
+        s.make("w_q", (d, H, qd), ("embed", "heads", "qkv"), stack=stack)
+    s.make("w_dkv", (d, m.kv_lora_rank), ("embed", "kv_lora"), stack=stack)
+    s.make("w_kr", (d, m.rope_head_dim), ("embed", "qkv"), stack=stack)
+    make_norm(s, "kv_norm", "rmsnorm", m.kv_lora_rank, stack=stack)
+    s.make("w_uk", (m.kv_lora_rank, H, m.nope_head_dim),
+           ("kv_lora", "heads", "qkv"), stack=stack)
+    s.make("w_uv", (m.kv_lora_rank, H, m.v_head_dim),
+           ("kv_lora", "heads", "qkv"), stack=stack)
+    s.make("w_o", (H, m.v_head_dim, d), ("heads", "qkv", "embed"),
+           stack=stack)
+
+
+def _queries(p, cfg: ModelConfig, x, positions):
+    m = cfg.mla
+    H = cfg.n_heads
+    if m.q_lora_rank:
+        cq = x @ p["w_dq"]
+        cq = apply_norm("rmsnorm", cq, p.get("q_norm"))
+        q = jnp.einsum("bsr,rhd->bshd", cq, p["w_uq"])
+    else:
+        q = jnp.einsum("bsd,dhq->bshq", x, p["w_q"])
+    q_nope = q[..., : m.nope_head_dim]
+    q_rope = apply_rope(q[..., m.nope_head_dim:], positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_prefill(p, cfg: ModelConfig, x, positions, *, block_kv: int = 512):
+    """x: (B, S, d).  Returns (out (B, S, d), cache (c_kv, k_rope))."""
+    m = cfg.mla
+    q_nope, q_rope = _queries(p, cfg, x, positions)
+    c = apply_norm("rmsnorm", x @ p["w_dkv"], p.get("kv_norm"))  # (B,S,r)
+    k_rope = apply_rope(x @ p["w_kr"], positions, cfg.rope_theta)
+    # Materialize per-head K/V (naive prefill — the standard choice: the
+    # absorbed form costs kv_lora/(nope+rope) ≈ 2.7x more score FLOPs).
+    k_nope = jnp.einsum("bsr,rhd->bshd", c, p["w_uk"])
+    v = jnp.einsum("bsr,rhd->bshd", c, p["w_uv"])
+    k = jnp.concatenate(
+        [k_nope,
+         jnp.broadcast_to(k_rope[:, :, None, :],
+                          k_nope.shape[:3] + (m.rope_head_dim,))],
+        axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    scale = (m.nope_head_dim + m.rope_head_dim) ** -0.5
+    out = blockwise_attention(q, k, v, causal=True, block_kv=block_kv,
+                              scale=scale)
+    out = jnp.einsum("bshv,hvd->bsd", out, p["w_o"])
+    return out, (c, k_rope)
+
+
+def mla_decode(p, cfg: ModelConfig, x, cache, kv_len):
+    """Absorbed single-token decode.
+
+    x: (B, 1, d); cache: (c_kv (B, S, r), k_rope (B, S, dr)).
+    Returns (out (B, 1, d), updated cache).
+    """
+    m = cfg.mla
+    B = x.shape[0]
+    c_cache, r_cache = cache
+    S = c_cache.shape[1]
+    pos = jnp.asarray(kv_len, jnp.int32).reshape(-1)  # (B,) insert position
+    positions = pos[:, None]
+
+    q_nope, q_rope = _queries(p, cfg, x, positions)   # (B,1,H,*)
+    c_new = apply_norm("rmsnorm", x @ p["w_dkv"], p.get("kv_norm"))
+    r_new = apply_rope(x @ p["w_kr"], positions, cfg.rope_theta)
+    bidx = jnp.arange(B)
+    c_cache = c_cache.at[bidx, pos].set(
+        c_new[:, 0].astype(c_cache.dtype))
+    r_cache = r_cache.at[bidx, pos].set(
+        r_new[:, 0].astype(r_cache.dtype))
+
+    # Absorb W_uk into q:  q_eff = q_nope @ W_uk  -> (B, H, r)
+    q_eff = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0], p["w_uk"])
+    s = jnp.einsum("bhr,bsr->bhs", q_eff, c_cache,
+                   preferred_element_type=jnp.float32)
+    s = s + jnp.einsum("bhd,bsd->bhs", q_rope[:, 0], r_cache,
+                       preferred_element_type=jnp.float32)
+    s = s * (m.nope_head_dim + m.rope_head_dim) ** -0.5
+    valid = jnp.arange(S)[None, :] <= pos[:, None]
+    s = jnp.where(valid[:, None, :], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhs,bsr->bhr", w.astype(c_cache.dtype), c_cache,
+                     preferred_element_type=jnp.float32)
+    out = jnp.einsum("bhr,rhv->bhv", ctx.astype(x.dtype), p["w_uv"])
+    out = jnp.einsum("bhv,hvd->bd", out, p["w_o"])[:, None]
+    return out, (c_cache, r_cache)

@@ -1,0 +1,98 @@
+"""Mixture-of-Experts with sort-based capacity dispatch (EP over 'model').
+
+Top-k routing -> flatten (token, expert) assignments -> stable sort by
+expert -> position-within-expert -> scatter into a per-expert capacity
+buffer (E, C, d) -> batched expert FFN einsum -> weighted combine.
+All shapes static; capacity overflow drops tokens (counted in metrics),
+the standard TPU MoE formulation.  Experts shard over the ``model`` mesh
+axis; the dispatch scatter/gather lowers to an all-to-all under SPMD.
+
+Aux losses: switch-style load-balance + router z-loss.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig, MoECfg
+from repro.models.layers import Builder, glu_act
+from repro.models.sharding import constrain
+
+
+def make_moe(b: Builder, cfg: ModelConfig, stack: int = 0):
+    m: MoECfg = cfg.moe
+    d, e, h = cfg.d_model, m.n_experts, m.d_expert or cfg.d_ff
+    s = b.scope("moe")
+    s.make("router", (d, e), ("embed", "experts"), stack=stack,
+           dtype=jnp.float32)
+    s.make("w_gate", (e, d, h), ("experts", "embed", "expert_mlp"),
+           stack=stack)
+    s.make("w_up", (e, d, h), ("experts", "embed", "expert_mlp"),
+           stack=stack)
+    s.make("w_down", (e, h, d), ("experts", "expert_mlp", "embed"),
+           stack=stack)
+    if m.n_shared:
+        s.make("ws_gate", (d, m.n_shared * h), ("embed", "mlp"), stack=stack)
+        s.make("ws_up", (d, m.n_shared * h), ("embed", "mlp"), stack=stack)
+        s.make("ws_down", (m.n_shared * h, d), ("mlp", "embed"), stack=stack)
+
+
+def moe_ffn(p, cfg: ModelConfig, x):
+    """x: (B, S, d) -> (out, aux) with aux = {lb_loss, z_loss, drop_frac}."""
+    m: MoECfg = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    E, K = m.n_experts, m.top_k
+    C = max(1, int(m.capacity_factor * T * K / E))
+    xt = x.reshape(T, d)
+
+    logits = (xt.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                    # (T, E)
+    gate_vals, expert_ids = jax.lax.top_k(probs, K)            # (T, K)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # Aux losses.
+    density = jnp.mean(
+        jax.nn.one_hot(expert_ids[:, 0], E, dtype=jnp.float32), axis=0)
+    mean_probs = jnp.mean(probs, axis=0)
+    lb_loss = E * jnp.sum(density * mean_probs) * m.lb_coef
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, -1) ** 2) * m.router_z_coef
+
+    # Flatten assignments and sort by expert (stable: ties keep token order).
+    flat_e = expert_ids.reshape(-1)                            # (T*K,)
+    flat_t = jnp.repeat(jnp.arange(T, dtype=jnp.int32), K)
+    flat_g = gate_vals.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sg = flat_e[order], flat_t[order], flat_g[order]
+    idx = jnp.arange(T * K, dtype=jnp.int32)
+    heads = jnp.concatenate([jnp.array([True]), se[1:] != se[:-1]])
+    seg_start = jnp.maximum.accumulate(jnp.where(heads, idx, 0))
+    pos = idx - seg_start
+    keep = pos < C
+    drop_frac = 1.0 - jnp.mean(keep.astype(jnp.float32))
+
+    slot = jnp.where(keep, se * C + pos, E * C)                # OOB drop
+    buf = jnp.zeros((E * C, d), x.dtype).at[slot].set(
+        xt[st], mode="drop").reshape(E, C, d)
+    buf = constrain(buf, "experts", None, None)
+
+    h = glu_act(
+        cfg.mlp if cfg.mlp != "none" else "swiglu",
+        jnp.einsum("ecd,edh->ech", buf, p["w_gate"]),
+        jnp.einsum("ecd,edh->ech", buf, p["w_up"]),
+    )
+    h = constrain(h, "experts", None, "act_mlp")
+    out_buf = jnp.einsum("ech,ehd->ecd", h, p["w_down"]).reshape(E * C, d)
+
+    gathered = out_buf.at[slot].get(mode="fill", fill_value=0)  # (T*K, d)
+    contrib = gathered * jnp.where(keep, sg, 0.0)[:, None].astype(x.dtype)
+    out = jnp.zeros((T, d), x.dtype).at[st].add(contrib)
+
+    if m.n_shared:
+        shared = glu_act(
+            cfg.mlp if cfg.mlp != "none" else "swiglu",
+            xt @ p["ws_gate"], xt @ p["ws_up"]) @ p["ws_down"]
+        out = out + shared
+    aux = {"lb_loss": lb_loss, "z_loss": z_loss, "drop_frac": drop_frac}
+    return out.reshape(B, S, d), aux

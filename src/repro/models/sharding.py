@@ -1,0 +1,194 @@
+"""Logical-axis sharding: named weight/activation axes -> mesh axes.
+
+Every parameter leaf is created together with a tuple of logical axis
+names (see ``init.py``).  ``logical_to_mesh`` resolves those names through
+a rules table into ``PartitionSpec``s for the target mesh.  This is the
+MaxText-style scheme: change the rules, not the model code, to change the
+parallelism layout.
+
+Default rules implement:
+  * FSDP/ZeRO-3 over the ``data`` axis (weights' embed/vocab dims),
+  * tensor parallelism over ``model`` (heads / mlp / experts / vocab),
+  * DP over (``pod`` × ``data``) for activation batch,
+  * expert parallelism over ``model``.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> mesh axis (or None = replicated, or tuple of mesh axes)
+DEFAULT_RULES: dict[str, Any] = {
+    # activations
+    "batch": ("pod", "data"),
+    "seq": None,
+    "seq_shard": "data",        # sequence-parallel (long-context decode)
+    "act_embed": None,
+    "act_heads": "model",
+    "act_mlp": "model",
+    # weights
+    "embed": "data",            # FSDP shard of the contraction dim
+    "heads": "model",
+    "qkv": None,
+    "mlp": "model",
+    "experts": "model",
+    "expert_mlp": None,
+    "vocab": "model",
+    "kv_lora": None,
+    "ssm_inner": "model",
+    "ssm_state": None,
+    "conv": None,
+    "layers": None,             # stacked-scan layer axis: never sharded
+    # flattened 1D state (e.g. int8 optimizer-moment blocks): shard over
+    # every mesh axis — elementwise math, any even split is valid.
+    "flat_shard": ("pod", "data", "model"),
+    None: None,
+}
+
+
+# long_500k (global_batch=1): batch replicates, the KV-cache sequence axis
+# takes the data dimension instead (sequence-parallel decode).
+LONG_CONTEXT_RULES = dict(DEFAULT_RULES)
+LONG_CONTEXT_RULES["batch"] = None
+LONG_CONTEXT_RULES["seq_shard"] = "data"
+
+# DP-heavy layout: batch over EVERY mesh axis (pure DP + per-layer FSDP
+# weight gathers), no tensor parallelism except expert parallelism.
+# Measured motivation (EXPERIMENTS.md §Perf): at TP=16 the per-layer
+# row-parallel activation all-reduces dominate small/dense models
+# (e.g. gemma-7b train_4k: 369 GB/step/dev), and GQA models whose
+# n_kv_heads < TP degree (llama4: kv=8 < 16) hit GSPMD involuntary
+# replication.  DP-heavy trades those for weight all-gathers
+# (params x ~3 passes), a win whenever batch divides the device count.
+DP_HEAVY_RULES = dict(DEFAULT_RULES)
+DP_HEAVY_RULES.update({
+    "batch": ("pod", "data", "model"),
+    "act_heads": None,
+    "act_mlp": None,
+    "heads": None,
+    "mlp": None,
+    "vocab": ("data", "model"),
+    "embed": ("data", "model"),
+    "ssm_inner": None,
+    # experts stay on "model" (EP); expert d_ff/d_model dims get FSDP
+    "expert_mlp": "data",
+})
+
+RULES_PRESETS = {
+    "tp": DEFAULT_RULES,
+    "dp": DP_HEAVY_RULES,
+    "long": LONG_CONTEXT_RULES,
+}
+
+
+def resolve_axis(rules: dict, name, mesh: Mesh):
+    mesh_axes = rules.get(name, None)
+    if mesh_axes is None:
+        return None
+    if isinstance(mesh_axes, str):
+        return mesh_axes if mesh_axes in mesh.axis_names else None
+    found = tuple(a for a in mesh_axes if a in mesh.axis_names)
+    return found if found else None
+
+
+def spec_for(axes: tuple, mesh: Mesh, rules: dict | None = None) -> P:
+    rules = rules or DEFAULT_RULES
+    parts = [resolve_axis(rules, a, mesh) for a in axes]
+    # PartitionSpec cannot repeat a mesh axis; keep first occurrence.
+    used: set = set()
+    clean = []
+    for p in parts:
+        items = p if isinstance(p, tuple) else (p,) if p else ()
+        keep = tuple(a for a in items if a not in used)
+        used.update(keep)
+        if not keep:
+            clean.append(None)
+        elif len(keep) == 1:
+            clean.append(keep[0])
+        else:
+            clean.append(keep)
+    return P(*clean)
+
+
+def tree_specs(axes_tree, mesh: Mesh, rules: dict | None = None):
+    """Map a pytree of logical-axis tuples to PartitionSpecs."""
+    return jax.tree.map(
+        lambda axes: spec_for(axes, mesh, rules),
+        axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(a, (str, type(None))) for a in x),
+    )
+
+
+def shardings_for(axes_tree, sds_tree, mesh: Mesh,
+                  rules: dict | None = None):
+    """NamedShardings with per-leaf divisibility pruning.
+
+    A dim whose size does not divide its assigned mesh axes drops axes
+    from the right until it does (jit in_shardings requires exact
+    divisibility; e.g. a 20-block quantizer scale cannot shard 256-way).
+    """
+    specs = tree_specs(axes_tree, mesh, rules)
+
+    def fix(sd, spec):
+        parts = list(spec) + [None] * (len(sd.shape) - len(spec))
+        out = []
+        for size, part in zip(sd.shape, parts):
+            axes = (part,) if isinstance(part, str) else (
+                tuple(part) if part else ())
+            while axes:
+                n = 1
+                for a in axes:
+                    n *= mesh.shape[a]
+                if size % n == 0:
+                    break
+                axes = axes[:-1]
+            out.append(axes[0] if len(axes) == 1 else
+                       (tuple(axes) if axes else None))
+        return NamedSharding(mesh, P(*out))
+
+    return jax.tree.map(
+        fix, sds_tree,
+        jax.tree.map(lambda s: s, specs,
+                     is_leaf=lambda x: isinstance(x, P)),
+        is_leaf=lambda x: hasattr(x, "shape") and hasattr(x, "dtype"))
+
+
+def tree_shardings(axes_tree, mesh: Mesh, rules: dict | None = None):
+    return jax.tree.map(
+        lambda spec: NamedSharding(mesh, spec),
+        tree_specs(axes_tree, mesh, rules),
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# Active (mesh, rules) for logical constraints.  Set by the step builders
+# around trace time (``with activate(mesh, rules): fn.lower(...)``); model
+# code calls ``constrain`` with logical names only.  Without an active
+# mesh, constrain is a no-op (single-device tests).
+import contextlib
+import threading
+
+_ACTIVE = threading.local()
+
+
+@contextlib.contextmanager
+def activate(mesh: Mesh, rules: dict | None = None):
+    prev = getattr(_ACTIVE, "ctx", None)
+    _ACTIVE.ctx = (mesh, rules or DEFAULT_RULES)
+    try:
+        yield
+    finally:
+        _ACTIVE.ctx = prev
+
+
+def constrain(x, *axes, rules: dict | None = None):
+    """with_sharding_constraint by logical axis names (no-op off-mesh)."""
+    ctx = getattr(_ACTIVE, "ctx", None)
+    if ctx is None:
+        return x
+    mesh, active_rules = ctx
+    spec = spec_for(tuple(axes), mesh, rules or active_rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,182 @@
+"""Mamba2 blocks via SSD (state-space duality, arXiv:2405.21060).
+
+Training/prefill uses the chunked SSD algorithm: intra-chunk attention-like
+quadratic blocks + inter-chunk linear state recurrence (lax.scan over
+chunks).  Decode is the O(1) recurrent update.  State math in fp32.
+
+Shapes: d_inner = expand*d_model, H = d_inner/head_dim heads, state N,
+groups G (B/C shared per group).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig, SSMCfg
+from repro.models.layers import Builder, rmsnorm
+from repro.models.sharding import constrain
+
+
+def ssm_dims(cfg: ModelConfig):
+    s: SSMCfg = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    H = d_in // s.head_dim
+    conv_ch = d_in + 2 * s.n_groups * s.d_state
+    return d_in, H, conv_ch
+
+
+def make_ssm(b: Builder, cfg: ModelConfig, stack: int = 0):
+    s: SSMCfg = cfg.ssm
+    d = cfg.d_model
+    d_in, H, conv_ch = ssm_dims(cfg)
+    sc = b.scope("ssm")
+    # in_proj -> [z(d_in), xBC(conv_ch), dt(H)]
+    sc.make("w_in", (d, 2 * d_in + 2 * s.n_groups * s.d_state + H),
+            ("embed", "ssm_inner"), stack=stack)
+    sc.make("conv_w", (s.conv_width, conv_ch), ("conv", "ssm_inner"),
+            stack=stack, init="normal", fan_in=s.conv_width)
+    sc.make("conv_b", (conv_ch,), ("ssm_inner",), init="zeros", stack=stack)
+    sc.make("a_log", (H,), ("heads",), init="zeros", stack=stack,
+            dtype=jnp.float32)
+    sc.make("d_skip", (H,), ("heads",), init="ones", stack=stack,
+            dtype=jnp.float32)
+    sc.make("dt_bias", (H,), ("heads",), init="zeros", stack=stack,
+            dtype=jnp.float32)
+    sc.make("norm_scale", (d_in,), ("ssm_inner",), init="zeros",
+            stack=stack)
+    sc.make("w_out", (d_in, d), ("ssm_inner", "embed"), stack=stack)
+
+
+def _split_proj(p, cfg, x):
+    s: SSMCfg = cfg.ssm
+    d_in, H, conv_ch = ssm_dims(cfg)
+    proj = x @ p["w_in"]
+    z = proj[..., :d_in]
+    xbc = proj[..., d_in : d_in + conv_ch]
+    dt = proj[..., d_in + conv_ch :]
+    return z, xbc, dt
+
+
+def _conv(p, xbc, conv_state=None):
+    """Causal depthwise conv; xbc: (B, S, CC).  Returns (out, new_state)."""
+    w = p["conv_w"]                     # (W, CC)
+    W = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros(xbc.shape[:1] + (W - 1,) + xbc.shape[2:], xbc.dtype)
+    else:
+        pad = conv_state.astype(xbc.dtype)
+    full = jnp.concatenate([pad, xbc], axis=1)
+    out = jnp.zeros_like(xbc)
+    for k in range(W):
+        out = out + full[:, k : k + xbc.shape[1]] * w[k]
+    out = jax.nn.silu(out + p["conv_b"])
+    new_state = full[:, full.shape[1] - (W - 1) :]
+    return out, new_state
+
+
+def ssd_forward(p, cfg: ModelConfig, x, *, init_state=None,
+                conv_state=None):
+    """x: (B, S, d) -> (out (B, S, d), cache {state, conv}).
+
+    Chunked SSD scan; S must be a multiple of cfg.ssm.chunk (pad upstream).
+    """
+    s: SSMCfg = cfg.ssm
+    B_, S, _ = x.shape
+    d_in, H, conv_ch = ssm_dims(cfg)
+    G, N, P = s.n_groups, s.d_state, s.head_dim
+    Q = min(s.chunk, S)
+    assert S % Q == 0, (S, Q)
+    NC = S // Q
+
+    z, xbc, dt_raw = _split_proj(p, cfg, x)
+    xbc, new_conv = _conv(p, xbc, conv_state)
+    xs = xbc[..., :d_in]
+    Bmat = xbc[..., d_in : d_in + G * N].reshape(B_, S, G, N)
+    Cmat = xbc[..., d_in + G * N :].reshape(B_, S, G, N)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))                     # (H,)
+    xh = xs.reshape(B_, S, H, P).astype(jnp.float32)
+    rep = H // G
+    Bh = jnp.repeat(Bmat, rep, axis=2).astype(jnp.float32)  # (B,S,H,N)
+    Ch = jnp.repeat(Cmat, rep, axis=2).astype(jnp.float32)
+
+    def step(state, inp):
+        xc, Bc, Cc, dtc = inp                        # (B,Q,...) one chunk
+        dA = dtc * A                                 # (B,Q,H)
+        t = jnp.cumsum(dA, axis=1)                   # inclusive
+        # Intra-chunk (diagonal block).
+        CB = jnp.einsum("bihn,bjhn->bhij", Cc, Bc)
+        Ld = t[:, :, None, :] - t[:, None, :, :]     # t_i - t_j (B,Q,Q,H)
+        mask = jnp.tril(jnp.ones((Q, Q), bool))
+        Lmat = jnp.where(mask[None, :, :, None], jnp.exp(Ld), 0.0)
+        M = CB * jnp.moveaxis(Lmat, 3, 1)            # (B,H,Q,Q)
+        y = jnp.einsum("bhij,bjh,bjhp->bihp", M, dtc, xc)
+        # Inter-chunk: contribution of incoming state.
+        y = y + jnp.einsum("bihn,bhpn,bih->bihp", Cc, state,
+                           jnp.exp(t))
+        # State update.
+        decay_out = jnp.exp(t[:, -1:, :] - t)        # (B,Q,H)
+        new_state = state * jnp.exp(t[:, -1])[:, :, None, None] + jnp.einsum(
+            "bjhn,bjh,bjhp->bhpn", Bc, dtc * decay_out, xc)
+        return new_state, y
+
+    def chunked(a):                                  # (B,S,...) -> (NC,B,Q,...)
+        return jnp.moveaxis(
+            a.reshape((B_, NC, Q) + a.shape[2:]), 1, 0)
+
+    state = (jnp.zeros((B_, H, P, N), jnp.float32)
+             if init_state is None else init_state.astype(jnp.float32))
+    state, ys = jax.lax.scan(
+        step, state, (chunked(xh), chunked(Bh), chunked(Ch), chunked(dt)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B_, S, H, P)  # (B,S,H,P)
+
+    y = y + xh * p["d_skip"][None, None, :, None]
+    y = y.reshape(B_, S, d_in)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rmsnorm(y, p["norm_scale"])
+    out = y.astype(x.dtype) @ p["w_out"]
+    cache = {"state": state, "conv": new_conv}
+    return out, cache
+
+
+def ssd_decode(p, cfg: ModelConfig, x, cache):
+    """Single-token recurrence.  x: (B, 1, d)."""
+    s: SSMCfg = cfg.ssm
+    B_, _, _ = x.shape
+    d_in, H, conv_ch = ssm_dims(cfg)
+    G, N, P = s.n_groups, s.d_state, s.head_dim
+
+    z, xbc, dt_raw = _split_proj(p, cfg, x)
+    # Roll conv state: conv over [state, new].
+    xbc, new_conv = _conv(p, xbc, cache["conv"])
+    xs = xbc[..., :d_in]
+    Bmat = xbc[..., d_in : d_in + G * N].reshape(B_, G, N)
+    Cmat = xbc[..., d_in + G * N :].reshape(B_, G, N)
+
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+    xh = xs.reshape(B_, H, P).astype(jnp.float32)
+    rep = H // G
+    Bh = jnp.repeat(Bmat, rep, axis=1).astype(jnp.float32)   # (B,H,N)
+    Ch = jnp.repeat(Cmat, rep, axis=1).astype(jnp.float32)
+
+    dA = jnp.exp(dt * A)                                      # (B,H)
+    state = cache["state"] * dA[:, :, None, None] + jnp.einsum(
+        "bh,bhp,bhn->bhpn", dt, xh, Bh)
+    y = jnp.einsum("bhpn,bhn->bhp", state, Ch)
+    y = y + xh * p["d_skip"][None, :, None]
+    y = y.reshape(B_, 1, d_in)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rmsnorm(y, p["norm_scale"])
+    out = y.astype(x.dtype) @ p["w_out"]
+    return out, {"state": state, "conv": new_conv}
+
+
+def ssm_cache_shape(cfg: ModelConfig, batch: int):
+    s: SSMCfg = cfg.ssm
+    d_in, H, conv_ch = ssm_dims(cfg)
+    return {
+        "state": (batch, H, s.head_dim, s.d_state),
+        "conv": (batch, s.conv_width - 1, conv_ch),
+    }

@@ -1,0 +1,193 @@
+"""Whisper-style encoder-decoder (arXiv:2212.04356) — backbone only.
+
+The conv frontend is a STUB per the assignment: ``input_specs()`` supplies
+precomputed frame embeddings (B, S_frames, d_model).  Encoder:
+bidirectional attention + GELU MLP with sinusoidal positions.  Decoder:
+causal self-attention + cross-attention to the encoder output.
+
+Shape policy (DESIGN.md §4): seq_len drives the ENCODER length; the
+decoder runs at cfg.dec_len for train/prefill and single-token for decode
+(cross-attention cache = projected encoder states at 32k frames for
+decode_32k).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    Builder, apply_norm, cross_entropy, make_norm, sinusoidal_positions,
+)
+from repro.models.sharding import constrain
+
+
+def init(cfg: ModelConfig, key, abstract: bool = False
+         ) -> tuple[dict, dict]:
+    b = Builder(key, cfg.pdtype, abstract=abstract)
+    b.make("embed", (cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+           fan_in=cfg.d_model)
+    make_norm(b, "ln_enc_final", cfg.norm, cfg.d_model)
+    make_norm(b, "ln_dec_final", cfg.norm, cfg.d_model)
+
+    enc = b.scope("encoder")
+    make_norm(enc, "ln_attn", cfg.norm, cfg.d_model, stack=cfg.n_layers)
+    make_norm(enc, "ln_mlp", cfg.norm, cfg.d_model, stack=cfg.n_layers)
+    blocks.make_attn(enc, cfg, stack=cfg.n_layers)
+    blocks.make_mlp(enc, cfg, stack=cfg.n_layers)
+
+    n_dec = cfg.n_dec_layers or cfg.n_layers
+    dec = b.scope("decoder")
+    make_norm(dec, "ln_self", cfg.norm, cfg.d_model, stack=n_dec)
+    make_norm(dec, "ln_cross", cfg.norm, cfg.d_model, stack=n_dec)
+    make_norm(dec, "ln_mlp", cfg.norm, cfg.d_model, stack=n_dec)
+    sa = dec.scope("self_attn")
+    blocks.make_attn(sa, cfg, stack=n_dec)
+    ca = dec.scope("cross_attn")
+    blocks.make_attn(ca, cfg, stack=n_dec)
+    blocks.make_mlp(dec, cfg, stack=n_dec)
+    return b.params, b.axes
+
+
+def _enc_layer(p, cfg, x):
+    h = apply_norm(cfg.norm, x, p.get("ln_attn"))
+    a, _ = blocks.attn_fwd(p["attn"], cfg, h,
+                           jnp.zeros((1, 1), jnp.int32),
+                           causal=False, rope=False)
+    x = x + a
+    h = apply_norm(cfg.norm, x, p.get("ln_mlp"))
+    return x + blocks.mlp_fwd(p["mlp"], cfg, h)
+
+
+def encode(cfg: ModelConfig, params, frames):
+    """frames: (B, S, d) stub embeddings -> encoder states (B, S, d)."""
+    S = frames.shape[1]
+    x = frames.astype(cfg.cdtype) + sinusoidal_positions(
+        S, cfg.d_model).astype(cfg.cdtype)
+    x = constrain(x, "batch", "seq", "act_embed")
+
+    def unit(xc, p):
+        return _enc_layer(p, cfg, xc), None
+
+    if cfg.scan_layers:
+        from repro.models.lm import _remat_wrap
+        x, _ = jax.lax.scan(_remat_wrap(cfg, unit), x, params["encoder"])
+    else:
+        for i in range(cfg.n_layers):
+            x, _ = unit(x, jax.tree.map(lambda a: a[i], params["encoder"]))
+    return apply_norm(cfg.norm, x, params.get("ln_enc_final"))
+
+
+def _dec_layer(p, cfg, x, positions, enc_kv, *, mode, cache, kv_len):
+    h = apply_norm(cfg.norm, x, p.get("ln_self"))
+    if mode == "decode":
+        a, self_cache = blocks.attn_decode(
+            p["self_attn"]["attn"], cfg, h, cache["self"], kv_len,
+            rope=False)
+    else:
+        a, (k, v) = blocks.attn_fwd(p["self_attn"]["attn"], cfg, h,
+                                    positions, causal=True, rope=False)
+        self_cache = {"k": k, "v": v} if mode == "prefill" else None
+    x = x + a
+    h = apply_norm(cfg.norm, x, p.get("ln_cross"))
+    if mode == "decode":
+        a, _ = blocks.attn_decode(
+            p["cross_attn"]["attn"], cfg, h,
+            {"k": enc_kv[0], "v": enc_kv[1]},
+            kv_len=enc_kv[0].shape[1], rope=False, cross=True)
+    else:
+        a, _ = blocks.attn_fwd(p["cross_attn"]["attn"], cfg, h, positions,
+                               causal=False, rope=False, kv=enc_kv)
+    x = x + a
+    h = apply_norm(cfg.norm, x, p.get("ln_mlp"))
+    x = x + blocks.mlp_fwd(p["mlp"], cfg, h)
+    new_cache = None if mode == "train" else {"self": self_cache}
+    return x, new_cache
+
+
+def cross_kv(cfg, params, enc_out):
+    """Project encoder states to per-layer cross K/V once (at prefill)."""
+    kc = jnp.einsum("bsd,ldhk->lbshk", enc_out,
+                    params["decoder"]["cross_attn"]["attn"]["wk"])
+    vc = jnp.einsum("bsd,ldhk->lbshk", enc_out,
+                    params["decoder"]["cross_attn"]["attn"]["wv"])
+    return kc, vc
+
+
+def _decoder(cfg, params, tokens, enc_kv, *, mode, cache=None,
+             kv_len=None):
+    B, S = tokens.shape
+    x = params["embed"][tokens].astype(cfg.cdtype)
+    if mode == "decode":
+        pos0 = jnp.asarray(kv_len, jnp.int32).reshape(-1, 1)
+        pe = sinusoidal_positions(cache["self"]["k"].shape[2] + 1,
+                                  cfg.d_model).astype(cfg.cdtype)
+        x = x + pe[pos0[:, 0]][:, None]
+        positions = pos0
+    else:
+        x = x + sinusoidal_positions(S, cfg.d_model).astype(cfg.cdtype)[None]
+        positions = jnp.arange(S, dtype=jnp.int32)[None]
+    x = constrain(x, "batch", "seq", "act_embed")
+    kc, vc = enc_kv
+
+    def unit(xc, inp):
+        p, kvl, unit_cache = inp
+        h, c = _dec_layer(p, cfg, xc, positions, kvl, mode=mode,
+                          cache=unit_cache, kv_len=kv_len)
+        return h, c
+
+    from repro.models.lm import _remat_wrap
+    unit = _remat_wrap(cfg, unit)
+    x, new_cache = jax.lax.scan(
+        unit, x, (params["decoder"], (kc, vc), cache))
+    x = apply_norm(cfg.norm, x, params.get("ln_dec_final"))
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    return constrain(logits, "batch", "seq", "vocab"), new_cache
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    """batch: {"frames": (B, S_enc, d), "tokens": (B, dec_len)}."""
+    enc_out = encode(cfg, params, batch["frames"])
+    tokens = batch["tokens"]
+    labels = jnp.concatenate(
+        [tokens[:, 1:], jnp.full_like(tokens[:, :1], -1)], axis=1)
+    logits, _ = _decoder(cfg, params, tokens, cross_kv(cfg, params, enc_out),
+                         mode="train")
+    loss = cross_entropy(logits, labels)
+    return loss, {"loss": loss, "ce": loss}
+
+
+def prefill(cfg: ModelConfig, params, frames, tokens):
+    """Encode + decoder prefill.  Returns (state, last_logits).
+
+    state = {"enc_kv": (kc, vc), "cache": {"self": stacked k/v}} — the
+    cross-attention K/V are projected ONCE here; decode reuses them.
+    """
+    enc_out = encode(cfg, params, frames)
+    enc_kv = cross_kv(cfg, params, enc_out)
+    logits, cache = _decoder(cfg, params, tokens, enc_kv, mode="prefill")
+    return {"enc_kv": enc_kv, "cache": cache}, logits[:, -1:]
+
+
+def decode(cfg: ModelConfig, params, state, token, kv_len):
+    logits, new_cache = _decoder(
+        cfg, params, token[:, None], state["enc_kv"], mode="decode",
+        cache=state["cache"], kv_len=kv_len)
+    return logits, dict(state, cache=new_cache)
+
+
+def make_cache(cfg: ModelConfig, batch: int, dec_len: int, enc_len: int,
+               dtype=None):
+    dtype = dtype or cfg.cdtype
+    n_dec = cfg.n_dec_layers or cfg.n_layers
+    hkv, dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    cache = {"self": {
+        "k": jnp.zeros((n_dec, batch, dec_len, hkv, dh), dtype),
+        "v": jnp.zeros((n_dec, batch, dec_len, hkv, dh), dtype),
+    }}
+    axes = {"self": {
+        "k": ("layers", "batch", None, "heads", None),
+        "v": ("layers", "batch", None, "heads", None),
+    }}
+    return cache, axes

@@ -1,0 +1,5 @@
+from repro.optim.adamw import AdamWConfig, apply, init, state_axes, global_norm
+from repro.optim.schedule import warmup_cosine, linear_warmup
+
+__all__ = ["AdamWConfig", "apply", "init", "state_axes", "global_norm",
+           "warmup_cosine", "linear_warmup"]

@@ -1,0 +1,6 @@
+from repro.runtime.ft_loop import FTLoop, FTLoopConfig, SimulatedFailure
+from repro.runtime.straggler import StragglerDetector
+from repro.runtime.elastic import plan_remesh, remesh, reshard_tree
+
+__all__ = ["FTLoop", "FTLoopConfig", "SimulatedFailure",
+           "StragglerDetector", "plan_remesh", "remesh", "reshard_tree"]

@@ -1,0 +1,95 @@
+"""Fault-tolerant training loop: checkpoint/resume, straggler accounting,
+simulated failure injection.
+
+Resumability is by construction: the loop state is (params, opt_state,
+step) and the data loader is a pure function of step — a restart restores
+the latest checkpoint and continues on the exact batch sequence (tested:
+crash-and-resume reproduces the uninterrupted loss trajectory bitwise on
+CPU).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+
+from repro import checkpoint as ckpt
+from repro.runtime.straggler import StragglerDetector
+
+
+class SimulatedFailure(RuntimeError):
+    pass
+
+
+@dataclass
+class FTLoopConfig:
+    ckpt_dir: str
+    ckpt_every: int = 50
+    keep: int = 3
+    async_ckpt: bool = True
+    fail_at_step: int | None = None     # inject a crash (tests)
+    straggler_z: float = 3.0
+
+
+@dataclass
+class FTLoop:
+    """Drives (state, batch) -> state train steps with FT plumbing."""
+
+    config: FTLoopConfig
+    train_step: Callable[[Any, Any], tuple[Any, dict]]
+    batch_fn: Callable[[int], Any]       # step -> batch (pure)
+    detector: StragglerDetector = field(default=None)
+    pending: Any = None
+
+    def __post_init__(self):
+        if self.detector is None:
+            self.detector = StragglerDetector(
+                z_threshold=self.config.straggler_z)
+
+    def resume_or(self, init_state):
+        step = ckpt.latest_step(self.config.ckpt_dir)
+        if step is None:
+            return init_state, 0
+        state = ckpt.restore(self.config.ckpt_dir, step, init_state)
+        return state, step
+
+    def _maybe_checkpoint(self, state, step: int, force: bool = False):
+        if force or (step > 0 and step % self.config.ckpt_every == 0):
+            if self.pending is not None:
+                self.pending.result()     # back-pressure: one in flight
+                self.pending = None
+            fut = ckpt.save(self.config.ckpt_dir, step, state,
+                            keep=self.config.keep,
+                            async_=self.config.async_ckpt)
+            self.pending = fut
+
+    def run(self, init_state, num_steps: int, *, log_every: int = 0):
+        """Run to ``num_steps`` total (resuming if checkpoints exist)."""
+        state, start = self.resume_or(init_state)
+        history = []
+        for step in range(start, num_steps):
+            if self.config.fail_at_step is not None and (
+                    step == self.config.fail_at_step):
+                raise SimulatedFailure(f"injected failure at step {step}")
+            t0 = time.perf_counter()
+            batch = self.batch_fn(step)
+            state, metrics = self.train_step(state, batch)
+            jax.block_until_ready(jax.tree.leaves(metrics)[0])
+            dt = time.perf_counter() - t0
+            self.detector.observe(step, dt)
+            history.append(
+                {k: float(v) for k, v in metrics.items()} | {
+                    "step": step, "seconds": dt})
+            self._maybe_checkpoint(state, step + 1)
+            if log_every and step % log_every == 0:
+                m = history[-1]
+                print(f"step {step}: " + " ".join(
+                    f"{k}={v:.4g}" for k, v in sorted(m.items())
+                    if k != "step"))
+        self._maybe_checkpoint(state, num_steps, force=True)
+        if self.pending is not None:
+            self.pending.result()
+            self.pending = None
+        return state, history

@@ -1,0 +1,48 @@
+"""Straggler detection: per-step timing EMA + z-score flagging.
+
+At pod scale a slow host shows up as a slow *global* step (collectives
+synchronize).  The detector keeps an exponential moving mean/variance of
+step wall-time and flags steps whose z-score exceeds a threshold; the
+mitigation hook is pluggable (real deployment: trigger elastic re-mesh or
+within-step work re-balancing; here: structured log + counters that the
+FT loop exports).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass
+class StragglerDetector:
+    alpha: float = 0.1          # EMA factor
+    z_threshold: float = 3.0
+    warmup_steps: int = 5
+    mean: float = 0.0
+    var: float = 0.0
+    n: int = 0
+    flagged: list = field(default_factory=list)
+
+    def observe(self, step: int, seconds: float) -> bool:
+        """Record a step time; returns True if flagged as straggler."""
+        self.n += 1
+        if self.n <= self.warmup_steps:
+            # Prime the EMA.
+            self.mean = (self.mean * (self.n - 1) + seconds) / self.n
+            self.var = max(self.var, (seconds - self.mean) ** 2)
+            return False
+        std = max(self.var**0.5, 1e-6, 0.05 * self.mean)
+        z = (seconds - self.mean) / std
+        is_straggler = z > self.z_threshold
+        if is_straggler:
+            self.flagged.append((step, seconds, z))
+        else:
+            # Only track healthy steps in the EMA (stragglers would
+            # poison the baseline).
+            d = seconds - self.mean
+            self.mean += self.alpha * d
+            self.var = (1 - self.alpha) * (self.var + self.alpha * d * d)
+        return is_straggler
+
+    @property
+    def num_flagged(self) -> int:
+        return len(self.flagged)

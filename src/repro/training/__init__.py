@@ -1,0 +1,8 @@
+from repro.training.step import (
+    TrainConfig, init_state, make_train_step, make_prefill_step,
+    make_decode_step, shard_train_step, state_axes, batch_specs,
+)
+
+__all__ = ["TrainConfig", "init_state", "make_train_step",
+           "make_prefill_step", "make_decode_step", "shard_train_step",
+           "state_axes", "batch_specs"]

@@ -1,0 +1,197 @@
+"""Train / prefill / decode step builders (the units the dry-run lowers).
+
+``make_train_step`` returns a pure (state, batch) -> (state, metrics)
+function: fwd+bwd (remat per config), grad accumulation (microbatching),
+AdamW (optionally int8 moments), warmup-cosine LR.  Sharding enters only
+through in/out_shardings at jit time (``shard_train_step``).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import optim
+from repro.models import lm, whisper
+from repro.models.config import ModelConfig
+from repro.models.sharding import DEFAULT_RULES, tree_specs, spec_for
+from repro.optim.schedule import warmup_cosine
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    adamw: optim.AdamWConfig = optim.AdamWConfig()
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    microbatches: int = 1          # gradient accumulation
+    # int8 error-feedback gradient compression (optim/compress.py).
+    # Numerics applied here (quantize->dequantize with carried error);
+    # the on-wire byte reduction additionally needs the shard_map DP
+    # reduction (optim.compress.compressed_psum) on a real pod.
+    grad_compression: bool = False
+
+
+def loss_for(cfg: ModelConfig):
+    if cfg.encdec:
+        return functools.partial(whisper.loss_fn, cfg)
+    return functools.partial(lm.loss_fn, cfg)
+
+
+def init_state(cfg: ModelConfig, tcfg: TrainConfig, key):
+    if cfg.encdec:
+        params, axes = whisper.init(cfg, key)
+    else:
+        params, axes = lm.init(cfg, key)
+    opt = optim.init(params, tcfg.adamw)
+    state = {"params": params, "opt": opt}
+    if tcfg.grad_compression:
+        from repro.optim import compress
+
+        state["grad_error"] = compress.init_error(params)
+    return state, axes
+
+
+def state_axes(cfg: ModelConfig, tcfg: TrainConfig, params_axes):
+    axes = {"params": params_axes,
+            "opt": optim.state_axes(params_axes, tcfg.adamw)}
+    if tcfg.grad_compression:
+        axes["grad_error"] = params_axes
+    return axes
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig):
+    loss_fn = loss_for(cfg)
+
+    def train_step(state, batch):
+        params, opt = state["params"], state["opt"]
+
+        def fwd(p, mb):
+            loss, metrics = loss_fn(p, mb)
+            return loss, metrics
+
+        if tcfg.microbatches > 1:
+            def split(x):
+                b = x.shape[0]
+                mb = tcfg.microbatches
+                return x.reshape(mb, b // mb, *x.shape[1:])
+
+            mbs = jax.tree.map(split, batch)
+
+            def acc_fn(carry, mb):
+                g_acc, m_acc = carry
+                (_, metrics), g = jax.value_and_grad(
+                    fwd, has_aux=True)(params, mb)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                m_acc = jax.tree.map(jnp.add, m_acc, metrics)
+                return (g_acc, m_acc), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            mb0 = jax.tree.map(lambda x: x[0], mbs)
+            (_, metrics0), _ = jax.value_and_grad(
+                fwd, has_aux=True)(params, mb0)
+            m0 = jax.tree.map(jnp.zeros_like, metrics0)
+            (grads, msum), _ = jax.lax.scan(acc_fn, (g0, m0), mbs)
+            grads = jax.tree.map(
+                lambda g: g / tcfg.microbatches, grads)
+            metrics = jax.tree.map(
+                lambda m: m / tcfg.microbatches, msum)
+        else:
+            (_, metrics), grads = jax.value_and_grad(
+                fwd, has_aux=True)(params, batch)
+
+        # Schedule on the post-increment step (step 0 would give lr=0
+        # and silently waste the first batch).
+        new_state = {}
+        if tcfg.grad_compression:
+            from repro.optim import compress
+
+            def comp(g, e):
+                q, scale, new_e = compress.ef_compress(g, e)
+                return compress.ef_decompress(q, scale), new_e
+
+            pairs = jax.tree.map(comp, grads, state["grad_error"])
+            grads = jax.tree.map(lambda pe: pe[0], pairs,
+                                 is_leaf=lambda x: isinstance(x, tuple))
+            new_state["grad_error"] = jax.tree.map(
+                lambda pe: pe[1], pairs,
+                is_leaf=lambda x: isinstance(x, tuple))
+
+        lr_scale = warmup_cosine(
+            opt["step"] + 1, warmup=tcfg.warmup_steps,
+            total=tcfg.total_steps)
+        new_params, new_opt, opt_metrics = optim.apply(
+            params, grads, opt, tcfg.adamw, lr_scale=lr_scale)
+        metrics = {**metrics, **opt_metrics}
+        return {**new_state, "params": new_params, "opt": new_opt}, \
+            metrics
+
+    return train_step
+
+
+# -- serving steps ---------------------------------------------------------------
+
+def make_prefill_step(cfg: ModelConfig, *, seq_shard: bool = False):
+    if cfg.encdec:
+        def prefill_step(params, batch):
+            state, logits = whisper.prefill(
+                cfg, params, batch["frames"], batch["tokens"])
+            return state, logits
+        return prefill_step
+
+    def prefill_step(params, batch):
+        cache, logits = lm.prefill(
+            cfg, params, batch["tokens"], None,
+            patches=batch.get("patches"), seq_shard=seq_shard)
+        return cache, logits
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, *, seq_shard: bool = False):
+    if cfg.encdec:
+        def decode_step(params, state, token, kv_len):
+            return whisper.decode(cfg, params, state, token, kv_len)
+        return decode_step
+
+    def decode_step(params, cache, token, kv_len):
+        return lm.decode(cfg, params, cache, token, kv_len,
+                         seq_shard=seq_shard)
+
+    return decode_step
+
+
+# -- sharded jit wrappers ----------------------------------------------------------
+
+def batch_specs(cfg: ModelConfig, batch_tree, mesh: Mesh, rules=None):
+    """P('pod','data') on the batch dim of every batch leaf."""
+    def spec(x):
+        axes = ("batch",) + (None,) * (len(x.shape) - 1)
+        return spec_for(axes, mesh, rules or DEFAULT_RULES)
+
+    return jax.tree.map(spec, batch_tree)
+
+
+def shard_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh: Mesh,
+                     axes, batch_like, rules=None, donate: bool = True):
+    """jit the train step with explicit in/out shardings for ``mesh``."""
+    rules = rules or DEFAULT_RULES
+    st_axes = state_axes(cfg, tcfg, axes)
+    st_specs = tree_specs(st_axes, mesh, rules)
+    st_shard = jax.tree.map(
+        lambda s: NamedSharding(mesh, s), st_specs,
+        is_leaf=lambda x: isinstance(x, P))
+    b_specs = batch_specs(cfg, batch_like, mesh, rules)
+    b_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), b_specs,
+                           is_leaf=lambda x: isinstance(x, P))
+    step = make_train_step(cfg, tcfg)
+    return jax.jit(
+        step,
+        in_shardings=(st_shard, b_shard),
+        out_shardings=(st_shard, None),
+        donate_argnums=(0,) if donate else (),
+    )

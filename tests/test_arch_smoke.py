@@ -1,0 +1,140 @@
+"""Per-assigned-architecture smoke tests: REDUCED config of the same
+family, one forward/train step on CPU, output shapes + no NaNs
+(the assignment's smoke-test requirement)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import optim
+from repro.configs import ARCH_IDS, get_config, get_reduced, input_specs
+from repro.models import lm, whisper
+from repro.models.config import SHAPE_CELLS
+from repro.training.step import TrainConfig, init_state, make_train_step
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_reduced_train_step(arch):
+    cfg = get_reduced(arch)
+    tcfg = TrainConfig(adamw=optim.AdamWConfig(lr=1e-3), warmup_steps=1)
+    state, axes = init_state(cfg, tcfg, jax.random.PRNGKey(0))
+    B, S = 2, 16
+    if cfg.encdec:
+        batch = {
+            "frames": np.random.RandomState(0).randn(
+                B, 24, cfg.d_model).astype(np.float32),
+            "tokens": np.random.RandomState(1).randint(
+                0, cfg.vocab_size, (B, cfg.dec_len)).astype(np.int32),
+        }
+    else:
+        batch = {"tokens": np.random.RandomState(1).randint(
+            0, cfg.vocab_size, (B, S)).astype(np.int32)}
+        if cfg.n_patches:
+            batch["patches"] = np.zeros((B, cfg.n_patches, cfg.d_model),
+                                        np.float32)
+    step = jax.jit(make_train_step(cfg, tcfg))
+    new_state, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"])), arch
+    # params actually changed
+    delta = jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32) -
+                                           b.astype(jnp.float32)))),
+        state["params"], new_state["params"])
+    assert max(jax.tree.leaves(delta)) > 0, arch
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCH_IDS
+                                  if a != "whisper-medium"])
+def test_reduced_decode_step(arch):
+    cfg = get_reduced(arch)
+    params, _ = lm.init(cfg, jax.random.PRNGKey(0))
+    B = 2
+    cache, _ = lm.make_cache(cfg, B, 16)
+    tokens = np.random.RandomState(0).randint(
+        0, cfg.vocab_size, (B, 8)).astype(np.int32)
+    patches = (jnp.zeros((B, cfg.n_patches, cfg.d_model))
+               if cfg.n_patches else None)
+    cache, logits = lm.prefill(cfg, params, jnp.asarray(tokens), cache,
+                               patches=patches)
+    total = 8 + (cfg.n_patches or 0)
+    tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+    lg, cache = lm.decode(cfg, params, cache, tok,
+                          jnp.full((B,), total, jnp.int32))
+    assert lg.shape == (B, 1, cfg.vocab_size)
+    assert np.isfinite(np.asarray(lg)).all(), arch
+
+
+def test_full_configs_match_assignment():
+    """The exact numbers from the assignment table."""
+    c = get_config("deepseek-v2-236b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.vocab_size) == (
+        60, 5120, 128, 102_400)
+    assert c.moe.n_experts == 160 and c.moe.top_k == 6
+    assert c.moe.n_shared == 2 and c.mla.kv_lora_rank == 512
+
+    c = get_config("llama4-maverick-400b-a17b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads,
+            c.vocab_size) == (48, 5120, 40, 8, 202_048)
+    assert c.moe.n_experts == 128 and c.moe.top_k == 1
+
+    c = get_config("phi3-medium-14b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size) == (40, 5120, 40, 10, 17920, 100_352)
+
+    c = get_config("olmo-1b")
+    assert (c.n_layers, c.d_model, c.d_ff, c.vocab_size) == (
+        16, 2048, 8192, 50_304)
+    assert c.norm == "nonparam_ln"
+
+    c = get_config("h2o-danube-1.8b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size) == (24, 2560, 32, 8, 6912, 32_000)
+    assert c.sliding_window == 4096
+
+    c = get_config("gemma-7b")
+    assert (c.n_layers, c.d_model, c.head_dim, c.d_ff, c.vocab_size) == (
+        28, 3072, 256, 24576, 256_000)
+    assert c.mlp == "geglu"
+
+    c = get_config("whisper-medium")
+    assert (c.n_layers, c.d_model, c.n_heads, c.d_ff, c.vocab_size) == (
+        24, 1024, 16, 4096, 51_865)
+    assert c.encdec
+
+    c = get_config("zamba2-2.7b")
+    assert (c.n_layers, c.d_model, c.d_ff, c.vocab_size) == (
+        54, 2560, 10240, 32_000)
+    assert c.ssm.d_state == 64 and c.shared_every == 6
+
+    c = get_config("mamba2-780m")
+    assert (c.n_layers, c.d_model, c.vocab_size) == (48, 1536, 50_280)
+    assert c.ssm.d_state == 128 and c.mlp == "none"
+
+    c = get_config("internvl2-2b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size) == (24, 2048, 16, 8, 8192, 92_553)
+
+
+def test_param_counts_near_nameplate():
+    from repro.launch.hlo_analysis import param_counts
+
+    for arch, total_b, active_b, tol in [
+        ("deepseek-v2-236b", 236e9, 21e9, 0.15),
+        ("llama4-maverick-400b-a17b", 400e9, 17e9, 0.25),
+        ("phi3-medium-14b", 14e9, 14e9, 0.15),
+        ("olmo-1b", 1.2e9, 1.2e9, 0.25),
+        ("mamba2-780m", 0.78e9, 0.78e9, 0.25),
+    ]:
+        counts = param_counts(get_config(arch))
+        assert abs(counts["total"] - total_b) / total_b < tol, (
+            arch, counts)
+        assert abs(counts["active"] - active_b) / active_b < tol + 0.15, (
+            arch, counts)
+
+
+def test_input_specs_cover_all_cells():
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for cell in SHAPE_CELLS:
+            specs = input_specs(cfg, cell)
+            assert all(hasattr(v, "shape") for v in specs.values())

@@ -1,0 +1,149 @@
+"""MinHash + LSH core properties (paper §3-§4)."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import jaccard, lsh, minhash, shingle
+
+
+def _docs_with_overlap(n_shared, n_a, n_b, seed=0):
+    rng = np.random.RandomState(seed)
+    shared = [f"s{i}" for i in range(n_shared)]
+    a = shared + [f"a{i}" for i in range(n_a)]
+    b = shared + [f"b{i}" for i in range(n_b)]
+    rng.shuffle(a)
+    rng.shuffle(b)
+    return a, b
+
+
+@given(st.integers(0, 200), st.integers(0, 100), st.integers(0, 100))
+@settings(max_examples=15, deadline=None)
+def test_minhash_estimates_jaccard(n_shared, n_a, n_b):
+    """m/M -> Jaccard within sampling error (paper §3.3-3.4)."""
+    a, b = _docs_with_overlap(n_shared, n_a, n_b)
+    if len(a) < 1 or len(b) < 1:
+        return
+    n = 2   # short n-gram so overlap survives shuffling boundaries
+    sa, sb = shingle.ngram_set(a, n), shingle.ngram_set(b, n)
+    true_j = jaccard.exact_jaccard(sa, sb)
+    packed = shingle.pack_documents([a, b])
+    ng, valid = shingle.ngram_hashes(
+        jnp.asarray(packed.tokens), jnp.asarray(packed.lengths), n=n)
+    seeds = minhash.default_seeds(256)
+    sig = np.asarray(minhash.signatures(ng, valid, jnp.asarray(seeds)))
+    est = float((sig[0] == sig[1]).mean())
+    tol = 4 * np.sqrt(max(true_j * (1 - true_j), 0.01) / 256) + 0.02
+    assert abs(est - true_j) <= tol, (true_j, est)
+
+
+def test_signature_oracle_agreement():
+    rng = np.random.RandomState(0)
+    tokens = rng.randint(0, 2**32, size=(13, 64), dtype=np.uint64
+                         ).astype(np.uint32)
+    lengths = rng.randint(1, 65, size=13).astype(np.int32)
+    ng, valid = shingle.ngram_hashes_np(tokens, lengths, 8)
+    ngj, validj = shingle.ngram_hashes(
+        jnp.asarray(tokens), jnp.asarray(lengths), n=8)
+    assert np.array_equal(np.asarray(validj), valid)
+    assert np.array_equal(np.asarray(ngj)[valid], ng[valid])
+    seeds = minhash.default_seeds(32)
+    sig = minhash.signatures_np(ng, valid, seeds)
+    sigj = np.asarray(minhash.signatures(
+        jnp.asarray(ng), jnp.asarray(valid), jnp.asarray(seeds)))
+    assert np.array_equal(sig, sigj)
+
+
+@given(st.floats(0.05, 0.95))
+@settings(max_examples=30, deadline=None)
+def test_candidate_probability_monotone(s):
+    """P = 1-(1-s^r)^b: increases with b, decreases with r (paper §4.4)."""
+    p_b10 = float(lsh.candidate_probability(s, r=2, b=10))
+    p_b50 = float(lsh.candidate_probability(s, r=2, b=50))
+    p_r4 = float(lsh.candidate_probability(s, r=4, b=50))
+    assert p_b50 >= p_b10 - 1e-9
+    assert p_r4 <= p_b50 + 1e-9
+    assert 0.0 <= p_b50 <= 1.0
+
+
+def test_band_values_oracle_and_discrimination():
+    rng = np.random.RandomState(1)
+    sig = rng.randint(0, 2**32, size=(64, 100), dtype=np.uint64
+                      ).astype(np.uint32)
+    sig[10] = sig[3]   # identical signatures
+    b = np.asarray(lsh.band_values(jnp.asarray(sig), 2))
+    bn = lsh.band_values_np(sig, 2)
+    assert np.array_equal(b, bn)
+    assert b.shape == (64, 50, 2)
+    assert np.array_equal(b[10], b[3])
+    # distinct signatures should (whp) not collide in any band
+    collisions = sum(
+        np.all(b[i] == b[j], axis=-1).any()
+        for i in range(20) for j in range(i + 1, 20) if (i, j) != (3, 10))
+    assert collisions == 0
+
+
+def test_star_edges_cover_runs():
+    """Star edges give the same connectivity as all-pairs enumeration."""
+    import networkx as nx
+
+    rng = np.random.RandomState(2)
+    vals = rng.randint(0, 4, size=(40, 2)).astype(np.uint32)  # many runs
+    docs = np.arange(40, dtype=np.int32)
+    order = np.lexsort((vals[:, 1], vals[:, 0]))
+    sv, sd = vals[order], docs[order]
+    pairs = lsh.enumerate_pairs_in_runs(sv, sd)
+    edges, mask = lsh.star_edges(jnp.asarray(sv), jnp.asarray(sd))
+    star = np.asarray(edges)[np.asarray(mask)]
+    g_full, g_star = nx.Graph(), nx.Graph()
+    g_full.add_nodes_from(range(40))
+    g_star.add_nodes_from(range(40))
+    g_full.add_edges_from(map(tuple, pairs))
+    g_star.add_edges_from(map(tuple, star))
+    comps_full = {frozenset(c) for c in nx.connected_components(g_full)}
+    comps_star = {frozenset(c) for c in nx.connected_components(g_star)}
+    assert comps_full == comps_star
+
+
+@given(st.integers(1, 6))
+@settings(max_examples=10, deadline=None)
+def test_lsh_params(r):
+    p = lsh.LSHParams(num_hashes=96, rows_per_band=r)
+    if 96 % r == 0:
+        assert p.num_bands == 96 // r
+        assert 0 < p.threshold_estimate() < 1
+
+
+def test_lsh_candidate_probability_matches_empirical():
+    """Statistical check of the §4.4 S-curve: empirical candidate rate
+    over many (document pair, hash seed-set) draws matches
+    1-(1-s^r)^b within binomial CI."""
+    rng = np.random.RandomState(7)
+    r, b = 2, 10
+    M = r * b
+    n_trials = 60
+    for target_s in (0.3, 0.6):
+        hits = 0
+        sims = []
+        for t in range(n_trials):
+            n_shared = 60
+            n_extra = int(n_shared * (1 - target_s) / target_s)
+            a, bdoc = _docs_with_overlap(n_shared, n_extra, n_extra,
+                                         seed=1000 + t)
+            sa, sb = shingle.ngram_set(a, 2), shingle.ngram_set(bdoc, 2)
+            s = jaccard.exact_jaccard(sa, sb)
+            sims.append(s)
+            packed = shingle.pack_documents([a, bdoc])
+            ng, valid = shingle.ngram_hashes(
+                jnp.asarray(packed.tokens), jnp.asarray(packed.lengths),
+                n=2)
+            seeds = minhash.make_seeds(M, key=t)
+            sig = np.asarray(minhash.signatures(
+                ng, valid, jnp.asarray(seeds)))
+            bands = lsh.band_values_np(sig, r)
+            hits += int(np.any(np.all(bands[0] == bands[1], axis=-1)))
+        p_pred = float(np.mean(
+            [lsh.candidate_probability(s, r=r, b=b) for s in sims]))
+        p_emp = hits / n_trials
+        sigma = np.sqrt(max(p_pred * (1 - p_pred), 0.01) / n_trials)
+        assert abs(p_emp - p_pred) < 4 * sigma + 0.05, (
+            target_s, p_emp, p_pred)

@@ -1,0 +1,195 @@
+"""Model-family correctness: every family trains, and incremental decode
+matches teacher-forced forward logits exactly."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models import lm, whisper
+from repro.models.config import MLACfg, ModelConfig, MoECfg, SSMCfg
+
+
+def tiny(name, **kw):
+    base = dict(name=name, family="dense", n_layers=4, d_model=32,
+                n_heads=4, n_kv_heads=2, d_ff=64, vocab_size=128,
+                param_dtype="float32", compute_dtype="float32",
+                remat="none")
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+FAMILIES = [
+    tiny("dense"),
+    tiny("moe", family="moe",
+         moe=MoECfg(n_experts=8, top_k=2, n_shared=1, d_expert=64)),
+    tiny("dense_moe", family="moe",
+         moe=MoECfg(n_experts=4, top_k=1, n_shared=1, d_expert=64,
+                    every=2)),
+    tiny("mla", family="moe", n_kv_heads=4,
+         mla=MLACfg(kv_lora_rank=16, q_lora_rank=24, nope_head_dim=8,
+                    rope_head_dim=4, v_head_dim=8),
+         moe=MoECfg(n_experts=8, top_k=2, n_shared=2, d_expert=32)),
+    tiny("ssm", family="ssm", mlp="none",
+         ssm=SSMCfg(d_state=16, expand=2, head_dim=8, chunk=8)),
+    tiny("hybrid", family="hybrid", shared_every=2,
+         ssm=SSMCfg(d_state=8, expand=2, head_dim=8, chunk=8)),
+    tiny("swa", sliding_window=8),
+    tiny("nonparam", norm="nonparam_ln"),
+    tiny("geglu", mlp="geglu", head_dim=16),
+    tiny("vlm", family="vlm", n_patches=4),
+]
+
+
+@pytest.mark.parametrize("cfg", FAMILIES, ids=lambda c: c.name)
+def test_family_train_prefill_decode(cfg):
+    B, S = 2, 16
+    params, axes = lm.init(cfg, jax.random.PRNGKey(0))
+    assert jax.tree.structure(params) == jax.tree.structure(
+        axes, is_leaf=lambda x: isinstance(x, tuple))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                cfg.vocab_size)
+    batch = {"tokens": tokens}
+    if cfg.n_patches:
+        batch["patches"] = jax.random.normal(
+            jax.random.PRNGKey(2), (B, cfg.n_patches, cfg.d_model))
+    loss, metrics = lm.loss_fn(cfg, params, batch)
+    assert np.isfinite(float(loss))
+    cache, _ = lm.make_cache(cfg, B, 32)
+    cache, logits_p = lm.prefill(cfg, params, tokens, cache,
+                                 patches=batch.get("patches"))
+    assert np.isfinite(np.asarray(logits_p)).all()
+    total = S + (cfg.n_patches or 0)
+    tok = jnp.argmax(logits_p[:, -1], -1).astype(jnp.int32)
+    logits_d, cache = lm.decode(cfg, params, cache, tok,
+                                jnp.full((B,), total, jnp.int32))
+    assert logits_d.shape == (B, 1, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits_d)).all()
+
+
+@pytest.mark.parametrize(
+    "cfg", [tiny("dense_c", n_layers=2),
+            tiny("swa_c", n_layers=2, sliding_window=8),
+            tiny("ssm_c", family="ssm", mlp="none", n_layers=2,
+                 ssm=SSMCfg(d_state=16, expand=2, head_dim=8, chunk=4))],
+    ids=lambda c: c.name)
+def test_decode_matches_teacher_forced(cfg):
+    from repro.models.lm import _embed, _head, forward
+
+    params, _ = lm.init(cfg, jax.random.PRNGKey(3))
+    T = 12
+    tokens = jax.random.randint(jax.random.PRNGKey(4), (1, T), 0,
+                                cfg.vocab_size)
+    x = _embed(cfg, params, tokens)
+    pos = jnp.arange(T, dtype=jnp.int32)[None]
+    xf, _, _ = forward(cfg, params, x, pos, mode="train")
+    full_logits = _head(cfg, params, xf)
+
+    cache, _ = lm.make_cache(cfg, 1, 16)
+    cache, lp = lm.prefill(cfg, params, tokens[:, :8], cache)
+    np.testing.assert_allclose(np.asarray(lp[:, -1]),
+                               np.asarray(full_logits[:, 7]),
+                               rtol=2e-4, atol=2e-4)
+    for t in range(8, T):
+        lg, cache = lm.decode(cfg, params, cache, tokens[:, t],
+                              jnp.array([t], jnp.int32))
+        np.testing.assert_allclose(np.asarray(lg[:, 0]),
+                                   np.asarray(full_logits[:, t]),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_chunked_equals_sequential():
+    from repro.models.layers import Builder
+    from repro.models.ssm import (make_ssm, ssd_decode, ssd_forward,
+                                  ssm_cache_shape)
+
+    cfg = tiny("ssm_eq", family="ssm", mlp="none",
+               ssm=SSMCfg(d_state=16, expand=2, head_dim=8, chunk=8))
+    b = Builder(jax.random.PRNGKey(0), jnp.float32)
+    make_ssm(b, cfg)
+    p = dict(b.params["ssm"])
+    p["a_log"] = jnp.asarray(
+        np.random.RandomState(0).uniform(-1, 0.5, p["a_log"].shape),
+        jnp.float32)
+    B, S = 2, 32
+    x = jax.random.normal(jax.random.PRNGKey(2), (B, S, cfg.d_model))
+    out_chunked, cache = ssd_forward(p, cfg, x)
+    shapes = ssm_cache_shape(cfg, B)
+    c = {"state": jnp.zeros(shapes["state"], jnp.float32),
+         "conv": jnp.zeros(shapes["conv"], jnp.float32)}
+    outs = []
+    for t in range(S):
+        o, c = ssd_decode(p, cfg, x[:, t:t + 1], c)
+        outs.append(o)
+    seq = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(out_chunked), np.asarray(seq),
+                               atol=1e-3)
+    np.testing.assert_allclose(np.asarray(cache["state"]),
+                               np.asarray(c["state"]), atol=1e-3)
+
+
+def test_whisper_train_and_decode_consistency():
+    cfg = ModelConfig(
+        name="whisper_t", family="audio", n_layers=2, d_model=32,
+        n_heads=4, n_kv_heads=4, d_ff=64, vocab_size=96, mlp="gelu",
+        norm="layernorm", encdec=True, n_dec_layers=2, dec_len=12,
+        param_dtype="float32", compute_dtype="float32", remat="none")
+    params, _ = whisper.init(cfg, jax.random.PRNGKey(0))
+    B, Se, Sd = 2, 24, 12
+    frames = jax.random.normal(jax.random.PRNGKey(1), (B, Se, cfg.d_model))
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (B, Sd), 0,
+                                cfg.vocab_size)
+    loss, _ = whisper.loss_fn(cfg, params,
+                              {"frames": frames, "tokens": tokens})
+    assert np.isfinite(float(loss))
+
+    from repro.models.whisper import _decoder, cross_kv, encode
+
+    enc_out = encode(cfg, params, frames)
+    full_logits, _ = _decoder(cfg, params, tokens,
+                              cross_kv(cfg, params, enc_out), mode="train")
+    state, lp = whisper.prefill(cfg, params, frames, tokens[:, :6])
+    pad = lambda a: jnp.pad(
+        a, ((0, 0), (0, 0), (0, 16 - a.shape[2]), (0, 0), (0, 0)))
+    state["cache"] = jax.tree.map(pad, state["cache"])
+    np.testing.assert_allclose(np.asarray(lp[:, -1]),
+                               np.asarray(full_logits[:, 5]),
+                               rtol=3e-4, atol=3e-4)
+    for t in range(6, Sd):
+        lg, state = whisper.decode(cfg, params, state, tokens[:, t],
+                                   jnp.full((B,), t, jnp.int32))
+        np.testing.assert_allclose(np.asarray(lg[:, 0]),
+                                   np.asarray(full_logits[:, t]),
+                                   rtol=3e-4, atol=3e-4)
+
+
+def test_blockwise_attention_vs_reference():
+    from repro.models.attention import blockwise_attention, decode_attention
+
+    B, Sq, H, Hkv, Dh = 2, 37, 8, 2, 16
+    rng = jax.random.PRNGKey(0)
+    q = jax.random.normal(rng, (B, Sq, H, Dh))
+    k = jax.random.normal(jax.random.fold_in(rng, 1), (B, Sq, Hkv, Dh))
+    v = jax.random.normal(jax.random.fold_in(rng, 2), (B, Sq, Hkv, Dh))
+
+    def ref_attn(window=None):
+        g = H // Hkv
+        kk = jnp.repeat(k, g, axis=2)
+        vv = jnp.repeat(v, g, axis=2)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, kk) * Dh**-0.5
+        qp = jnp.arange(Sq)
+        kp = jnp.arange(Sq)
+        m = kp[None, :] <= qp[:, None]
+        if window:
+            m = m & (kp[None, :] > qp[:, None] - window)
+        s = jnp.where(m[None, None], s, -jnp.inf)
+        return jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(s, -1), vv)
+
+    for blk, window in [(16, None), (8, 9), (64, None)]:
+        got = blockwise_attention(q, k, v, causal=True, window=window,
+                                  block_kv=blk)
+        np.testing.assert_allclose(np.asarray(got),
+                                   np.asarray(ref_attn(window)),
+                                   atol=2e-5)
+    outd = decode_attention(q[:, -1], k, v, Sq)
+    np.testing.assert_allclose(np.asarray(outd),
+                               np.asarray(ref_attn())[:, -1], atol=2e-5)

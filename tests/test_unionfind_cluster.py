@@ -1,0 +1,126 @@
+"""Disjoint-set clustering invariants (paper §6) — the central guarantee:
+every pair inside a cluster has Jaccard >= tree_threshold."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import jaccard, shingle
+from repro.core.cluster import cluster_bands, modularity
+from repro.core.unionfind import (
+    ThresholdUnionFind, connected_components, cluster_min_score_audit,
+)
+from repro.data.corpus import make_i2b2_like, inject_near_duplicates
+
+
+def test_triangle_inequality_property():
+    """Jaccard distance is a metric (paper §6.1, Lipkus 1999)."""
+    rng = np.random.RandomState(0)
+    universe = list(range(50))
+    for _ in range(200):
+        a = set(rng.choice(universe, rng.randint(1, 40), replace=False))
+        b = set(rng.choice(universe, rng.randint(1, 40), replace=False))
+        c = set(rng.choice(universe, rng.randint(1, 40), replace=False))
+        dab = jaccard.jaccard_distance(a, b)
+        dbc = jaccard.jaccard_distance(b, c)
+        dac = jaccard.jaccard_distance(a, c)
+        assert dab + dbc >= dac - 1e-12
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=10, deadline=None)
+def test_tree_threshold_guarantee(seed):
+    """Any two documents in one cluster have exact Jaccard >= threshold."""
+    rng = np.random.RandomState(seed)
+    n = 24
+    universe = list(range(60))
+    sets = [set(rng.choice(universe, rng.randint(5, 50), replace=False))
+            for _ in range(n)]
+    tree_t = 0.4
+    uf = ThresholdUnionFind(n, tree_t)
+    # Union random pairs with their exact similarity, in random order.
+    for _ in range(80):
+        i, j = rng.randint(n), rng.randint(n)
+        if i == j:
+            continue
+        ri, rj = uf.find(i), uf.find(j)
+        if ri == rj:
+            continue
+        sim = jaccard.exact_jaccard(sets[ri], sets[rj])
+        if sim > 0.5:   # edge threshold
+            uf.union(i, j, sim)
+    labels = uf.components()
+    for i in range(n):
+        for j in range(i + 1, n):
+            if labels[i] == labels[j]:
+                s = jaccard.exact_jaccard(sets[i], sets[j])
+                assert s >= tree_t - 1e-9, (i, j, s)
+
+
+def test_union_respects_threshold_rejection():
+    uf = ThresholdUnionFind(3, tree_threshold=0.8)
+    assert uf.union(0, 1, 0.9)
+    # 0-1 bound now 0.9; adding 2 with sim 0.85 to the root gives
+    # leaf-to-leaf 0.9 + 1.0 + 0.85 - 2 = 0.75 < 0.8 -> reject.
+    assert not uf.union(1, 2, 0.85)
+    assert uf.n_rejected == 1
+
+
+def test_parallel_cc_matches_networkx():
+    import networkx as nx
+
+    rng = np.random.RandomState(3)
+    n, e = 200, 300
+    edges = rng.randint(0, n, size=(e, 2)).astype(np.int32)
+    mask = rng.rand(e) < 0.7
+    labels = np.asarray(connected_components(
+        jnp.asarray(edges), jnp.asarray(mask), n))
+    g = nx.Graph()
+    g.add_nodes_from(range(n))
+    g.add_edges_from(edges[mask])
+    want = {}
+    for comp in nx.connected_components(g):
+        rep = min(comp)
+        for v in comp:
+            want[v] = rep
+    got = {}
+    for v in range(n):
+        got.setdefault(labels[v], set()).add(v)
+    comps_got = {frozenset(c) for c in got.values()}
+    comps_want = {frozenset(c) for c in nx.connected_components(g)}
+    assert comps_got == comps_want
+
+
+def test_cluster_bands_excludes_pairs_and_matches_paper_shape():
+    """§6.5: clustering reduces Jaccard evaluations vs no clustering."""
+    from repro.core.pipeline import DedupConfig, DedupPipeline
+
+    notes = make_i2b2_like(60, seed=5)
+    notes, _ = inject_near_duplicates(notes, 60, seed=6)
+    pipe = DedupPipeline(DedupConfig(edge_threshold=0.75))
+    toks = pipe.tokenize(notes)
+    sig = pipe.compute_signatures(toks)
+    bands = pipe.compute_bands(sig)
+    sets = [shingle.ngram_set(t, 8) for t in toks]
+    simfn = lambda a, b: jaccard.exact_jaccard(sets[a], sets[b])
+
+    uf_on, st_on, _ = cluster_bands(bands, simfn, 0.75, 0.4, True)
+    uf_off, st_off, _ = cluster_bands(bands, simfn, 0.75, 0.4, False)
+    assert st_on.pairs_evaluated <= st_off.pairs_evaluated
+    assert st_on.pairs_excluded >= st_off.pairs_excluded
+    # the guarantee on the resulting clusters
+    labels = uf_on.components()
+    for i in range(len(notes)):
+        for j in range(i + 1, len(notes)):
+            if labels[i] == labels[j]:
+                assert simfn(i, j) >= 0.4 - 1e-9
+
+
+def test_min_score_audit_on_cc_output():
+    edges = np.array([[0, 1], [1, 2], [3, 4]], dtype=np.int32)
+    sims = np.array([0.9, 0.85, 0.95])
+    labels = np.array([0, 0, 0, 3, 3])
+    audit = cluster_min_score_audit(labels, edges, sims, 0.4)
+    assert audit["property_holds"]
+    assert audit["n_clusters"] == 2
+    # bound along 0-1-2 = 1 - (0.1 + 0.15) = 0.75
+    assert abs(audit["min_bound"] - 0.75) < 1e-9
