@@ -1,6 +1,9 @@
 """Paper §10 Tables 5-6 + §10.2 Table 7 (Louvain comparison), on the
 clustering test set (521 notes + 500 injected near-duplicates, 0-20%
-word changes)."""
+word changes).  Runs on the staged engine (CandidateSource ->
+BatchVerifier -> ThresholdUnionFind) and additionally reports
+batched-verification throughput: scalar per-pair callback vs the
+batched exact / signature-estimate verifiers (numpy / jnp / pallas)."""
 from __future__ import annotations
 
 import time
@@ -10,8 +13,12 @@ import jax.numpy as jnp
 
 from benchmarks.common import emit, section
 from repro.core import jaccard, shingle
+from repro.core.candidates import BandMatrixSource, candidate_pairs
 from repro.core.cluster import cluster_bands, modularity
 from repro.core.pipeline import DedupConfig, DedupPipeline
+from repro.core.verify import (
+    CallbackVerifier, ExactJaccardVerifier, SignatureVerifier,
+)
 from repro.data import clustering_testset
 
 
@@ -22,16 +29,17 @@ def _prepare():
     sig = pipe.compute_signatures(toks)
     bands = pipe.compute_bands(sig)
     sets = [shingle.ngram_set(t, 8) for t in toks]
-    return notes, sets, bands
+    return notes, toks, sets, sig, bands
 
 
 def run():
-    notes, sets, bands = _prepare()
-    simfn = lambda a, b: jaccard.exact_jaccard(sets[a], sets[b])
+    notes, toks, sets, sig, bands = _prepare()
+    verifier = ExactJaccardVerifier.from_token_lists(toks, 8)
 
     section("table 5/6: pairs excluded, modularity vs edge threshold")
     # Baseline without disjoint sets (paper: 6388 pairs on their data).
-    _, st_off, pairs_off = cluster_bands(bands, simfn, 0.60, 0.40, False)
+    _, st_off, pairs_off = cluster_bands(bands, verifier, 0.60, 0.40,
+                                         False)
     emit("cluster_no_ds_pairs", 0.0,
          f"evaluated={st_off.pairs_evaluated}")
 
@@ -39,7 +47,8 @@ def run():
     for edge_pct in (60, 65, 70, 75, 80, 85, 90, 95):
         edge_t = edge_pct / 100
         t0 = time.perf_counter()
-        uf, st, pairs = cluster_bands(bands, simfn, edge_t, tree_t, True)
+        uf, st, pairs = cluster_bands(bands, verifier, edge_t, tree_t,
+                                      True)
         dt = time.perf_counter() - t0
         labels = uf.components()
         excluded = st_off.pairs_evaluated - st.pairs_evaluated
@@ -63,14 +72,73 @@ def run():
              f"Q={q:.3f};clusters={n_clusters}")
 
 
+def run_verify_throughput():
+    """Batched verification vs the scalar per-pair callback it replaced."""
+    notes, toks, sets, sig, bands = _prepare()
+    pairs = candidate_pairs(BandMatrixSource(bands))
+    section(f"batched pair verification throughput ({len(pairs)} "
+            "candidate pairs)")
+
+    verifiers = [
+        ("scalar_exact_callback",
+         CallbackVerifier(
+             lambda a, b: jaccard.exact_jaccard(sets[a], sets[b]))),
+        ("batched_exact",
+         ExactJaccardVerifier.from_token_lists(toks, 8)),
+        ("scalar_estimate_callback",
+         CallbackVerifier(lambda a, b: float((sig[a] == sig[b]).mean()))),
+        ("batched_estimate_numpy", SignatureVerifier(sig, "numpy")),
+        ("batched_estimate_jnp", SignatureVerifier(sig, "jnp")),
+        ("batched_estimate_pallas", SignatureVerifier(sig, "pallas")),
+    ]
+    ref = None
+    for name, v in verifiers:
+        v(pairs)  # full-size warm-up: jit of the real bucket shapes
+        v.n_pairs, v.n_batches, v.seconds = 0, 0, 0.0
+        sims = v(pairs)
+        if "exact" in name:
+            if ref is None:
+                ref = sims
+            else:
+                np.testing.assert_allclose(sims, ref, atol=1e-6)
+        emit(f"verify_{name}", v.seconds * 1e6,
+             f"pairs={v.n_pairs};batches={v.n_batches};"
+             f"pairs_per_s={v.pairs_per_second:.0f}")
+
+
+def run_engine_end_to_end():
+    """Full staged engine, batched vs scalar verification (host path)."""
+    notes, toks, sets, sig, bands = _prepare()
+    section("staged engine end-to-end (edge=75)")
+    for name, verifier, batch in (
+            ("scalar_callback",
+             CallbackVerifier(
+                 lambda a, b: jaccard.exact_jaccard(sets[a], sets[b])),
+             "run"),
+            ("batched_exact",
+             ExactJaccardVerifier.from_token_lists(toks, 8), "run"),
+            ("batched_exact_bandmode",
+             ExactJaccardVerifier.from_token_lists(toks, 8), "band")):
+        t0 = time.perf_counter()
+        uf, st, _ = cluster_bands(bands, verifier, 0.75, 0.40, True,
+                                  batch=batch)
+        dt = time.perf_counter() - t0
+        emit(f"engine_{name}", dt * 1e6,
+             f"evaluated={st.pairs_evaluated};"
+             f"excluded={st.pairs_excluded};"
+             f"verify_s={st.verify_seconds:.4f};"
+             f"verify_pairs_per_s={st.verify_pairs_per_second:.0f};"
+             f"clusters={len(uf.clusters())}")
+
+
 def run_louvain():
     import networkx as nx
 
-    notes, sets, bands = _prepare()
-    simfn = lambda a, b: jaccard.exact_jaccard(sets[a], sets[b])
+    notes, toks, sets, sig, bands = _prepare()
+    verifier = ExactJaccardVerifier.from_token_lists(toks, 8)
     section("table 7: comparison with the Louvain method (edge=75)")
 
-    _, _, pairs = cluster_bands(bands, simfn, 0.0, 0.0, False)
+    _, _, pairs = cluster_bands(bands, verifier, 0.0, 0.0, False)
     g = nx.Graph()
     g.add_nodes_from(range(len(notes)))
     for a, b, s in pairs:
@@ -84,7 +152,7 @@ def run_louvain():
         for v in comm:
             lv_label[v] = ci
 
-    uf, st, pairs_ds = cluster_bands(bands, simfn, 0.75, 0.40, True)
+    uf, st, pairs_ds = cluster_bands(bands, verifier, 0.75, 0.40, True)
     ds_label = uf.components()
 
     def categories(labels):
@@ -118,4 +186,6 @@ def run_louvain():
 
 if __name__ == "__main__":
     run()
+    run_verify_throughput()
+    run_engine_end_to_end()
     run_louvain()

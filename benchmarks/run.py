@@ -37,6 +37,8 @@ def main(argv=None) -> None:
     if want("clustering"):
         from benchmarks import clustering
         clustering.run()
+        clustering.run_verify_throughput()
+        clustering.run_engine_end_to_end()
         clustering.run_louvain()
     if want("scale"):
         from benchmarks import scale

@@ -19,7 +19,46 @@ import threading
 from concurrent.futures import Future, ThreadPoolExecutor
 
 import numpy as np
-import zstandard
+
+import zlib
+
+try:
+    import zstandard
+    _HAS_ZSTD = True
+except ImportError:  # container without zstandard: zlib shim, same API
+    _HAS_ZSTD = False
+    class _ZlibCompressor:
+        def __init__(self, level: int = 3):
+            self.level = level
+
+        def compress(self, data: bytes) -> bytes:
+            return zlib.compress(data, self.level)
+
+    class _ZlibDecompressor:
+        def decompress(self, data: bytes) -> bytes:
+            return zlib.decompress(data)
+
+    class zstandard:  # type: ignore[no-redef]
+        ZstdCompressor = _ZlibCompressor
+        ZstdDecompressor = _ZlibDecompressor
+
+
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
+
+
+def _decompress(data: bytes) -> bytes:
+    """Decompress a leaf written by either codec (zstd or zlib shim).
+
+    Frames are sniffed by magic so checkpoints stay readable across
+    environments with and without zstandard installed.
+    """
+    if data[:4] == _ZSTD_MAGIC:
+        if not _HAS_ZSTD:
+            raise RuntimeError(
+                "checkpoint leaf is zstd-compressed but the zstandard "
+                "module is unavailable in this environment")
+        return zstandard.ZstdDecompressor().decompress(data)
+    return zlib.decompress(data)
 
 import jax
 
@@ -102,11 +141,10 @@ def restore(directory: str, step: int, like):
     path = os.path.join(directory, f"step_{step:08d}")
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
-    dctx = zstandard.ZstdDecompressor()
     by_key = {}
     for entry in manifest["leaves"]:
         with open(os.path.join(path, entry["file"]), "rb") as f:
-            raw = dctx.decompress(f.read())
+            raw = _decompress(f.read())
         by_key[entry["key"]] = np.frombuffer(
             raw, dtype=np.dtype(entry["dtype"])
         ).reshape(entry["shape"])

@@ -1,8 +1,31 @@
-"""Core library: MinHash-LSH deduplication (the paper's contribution)."""
+"""Core library: MinHash-LSH deduplication (the paper's contribution).
+
+The dedup hot path is a staged engine (``engine.cluster_source``)::
+
+    CandidateSource  ->  BatchVerifier  ->  ThresholdUnionFind
+    (candidates.py)      (verify.py)        (unionfind.py)
+
+with three thin drivers: ``DedupPipeline`` (host, in-memory),
+``StreamingDedup`` (out-of-core band store) and ``dist_lsh`` (sharded,
+on-device).
+"""
 from repro.core.pipeline import DedupConfig, DedupPipeline, DedupResult
 from repro.core.lsh import LSHParams, candidate_probability
 from repro.core.unionfind import ThresholdUnionFind, connected_components
 from repro.core.dist_lsh import DistLSHConfig, make_dedup_step, docs_mesh
+from repro.core.candidates import (
+    BandMatrixSource,
+    CandidateSource,
+    StoreBandSource,
+    candidate_pairs,
+)
+from repro.core.engine import ClusterStats, cluster_source
+from repro.core.verify import (
+    BatchVerifier,
+    CallbackVerifier,
+    ExactJaccardVerifier,
+    SignatureVerifier,
+)
 
 __all__ = [
     "DedupConfig",
@@ -15,4 +38,14 @@ __all__ = [
     "DistLSHConfig",
     "make_dedup_step",
     "docs_mesh",
+    "BandMatrixSource",
+    "CandidateSource",
+    "StoreBandSource",
+    "candidate_pairs",
+    "ClusterStats",
+    "cluster_source",
+    "BatchVerifier",
+    "CallbackVerifier",
+    "ExactJaccardVerifier",
+    "SignatureVerifier",
 ]

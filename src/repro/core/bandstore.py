@@ -115,18 +115,13 @@ class Design2Store:
 
 def candidate_pairs_from_store(store, num_bands: int,
                                max_pairs_per_band=None):
-    """Band-major candidate generation over either store design."""
-    from repro.core.lsh import enumerate_pairs_in_runs
+    """Band-major candidate generation over either store design.
 
-    seen = set()
-    for j in range(num_bands):
-        docs, vals = store.read_band(j)
-        if len(docs) < 2:
-            continue
-        order = np.lexsort((vals[:, 1], vals[:, 0]))
-        pairs = enumerate_pairs_in_runs(
-            vals[order], docs[order].astype(np.int32),
-            max_pairs_per_band)
-        seen.update(map(tuple, pairs.tolist()))
-    return np.array(sorted(seen), dtype=np.int32) if seen else \
-        np.zeros((0, 2), np.int32)
+    Delegates to the shared staged-engine candidate layer
+    (``candidates.StoreBandSource``); ``num_docs`` is not needed for
+    pair enumeration, so 0 is passed.
+    """
+    from repro.core.candidates import StoreBandSource, candidate_pairs
+
+    return candidate_pairs(
+        StoreBandSource(store, num_bands, 0), max_pairs_per_band)

@@ -1,102 +1,60 @@
 """Clustering driver: the paper §6.5 ``find_candidate_pairs`` procedure.
 
-For each band: sort, find equal runs, path-compress members to their set
-roots, evaluate Jaccard only for pairs not already co-clustered, and Union
-when sim > edge_threshold.  Pairs whose endpoints already share a root are
-*excluded* from Jaccard evaluation — the paper's headline saving
+Thin driver over the staged engine (``engine.cluster_source``):
+``CandidateSource -> BatchVerifier -> ThresholdUnionFind``.  For each
+band: sort, find equal runs, path-compress members to their set roots,
+batch-verify Jaccard only for pairs not already co-clustered, and Union
+when sim > edge_threshold.  Pairs whose endpoints already share a root
+are *excluded* from Jaccard evaluation — the paper's headline saving
 (Table 5: ~53% of evaluations eliminated at edge threshold 75%).
+
+``ClusterStats`` lives in ``engine`` and is re-exported here for
+backward compatibility.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
 from typing import Callable
 
 import numpy as np
 
+from repro.core.candidates import BandMatrixSource
+from repro.core.engine import ClusterStats, cluster_source
 from repro.core.unionfind import ThresholdUnionFind
+from repro.core.verify import BatchVerifier
 
-
-@dataclass
-class ClusterStats:
-    pairs_generated: int = 0
-    pairs_evaluated: int = 0
-    pairs_excluded: int = 0  # skipped Jaccard computations (paper Table 5)
-    pairs_above_edge: int = 0
-    unions_done: int = 0
-    unions_rejected: int = 0
+__all__ = ["ClusterStats", "cluster_bands", "modularity"]
 
 
 def cluster_bands(
     bands: np.ndarray,
-    similarity_fn: Callable[[int, int], float],
+    similarity_fn: Callable[[int, int], float] | BatchVerifier,
     edge_threshold: float,
     tree_threshold: float,
     use_disjoint_sets: bool = True,
+    *,
+    batch: str = "run",
+    max_batch_pairs: int = 8192,
 ) -> tuple[ThresholdUnionFind, ClusterStats, list[tuple[int, int, float]]]:
-    """Run paper §6.5 over all bands.
+    """Run paper §6.5 over an in-memory band matrix.
 
     bands: (D, b, 2) uint32 band matrix.
-    similarity_fn(a_doc, b_doc) -> exact Jaccard (evaluated lazily).
+    similarity_fn: a ``verify.BatchVerifier`` (batched, preferred) or a
+    scalar ``fn(a_doc, b_doc) -> exact Jaccard`` callable (wrapped).
     Returns (union-find, stats, evaluated_pairs [(a, b, sim), ...]).
 
     With ``use_disjoint_sets=False`` every candidate pair is evaluated
     (the paper's non-clustered baseline used for Table 5's "6388 pairs").
+    See ``engine.cluster_source`` for the ``batch`` granularity knob.
     """
-    D, b, _ = bands.shape
-    uf = ThresholdUnionFind(D, tree_threshold)
-    stats = ClusterStats()
-    evaluated: dict[tuple[int, int], float] = {}
-    doc_ids = np.arange(D, dtype=np.int64)
-
-    for j in range(b):
-        order = np.lexsort((bands[:, j, 1], bands[:, j, 0]))
-        vals = bands[order, j, :]
-        docs = doc_ids[order]
-        heads = np.ones(D, dtype=bool)
-        heads[1:] = np.any(vals[1:] != vals[:-1], axis=-1)
-        starts = np.flatnonzero(heads)
-        ends = np.append(starts[1:], D)
-        for s, e in zip(starts, ends):
-            if e - s < 2:
-                continue
-            members = docs[s:e]
-            if use_disjoint_sets:
-                # "replace D with D.find()" — compress to current roots.
-                roots = np.array([uf.find(int(d)) for d in members])
-                uniq = np.unique(roots)
-            else:
-                uniq = np.sort(members)
-            k = len(uniq)
-            stats.pairs_generated += (e - s) * (e - s - 1) // 2
-            if k < 2:
-                # All members already co-clustered: every pair excluded.
-                stats.pairs_excluded += (e - s) * (e - s - 1) // 2
-                continue
-            # Pairs collapsed by prior clustering are excluded too.
-            stats.pairs_excluded += (
-                (e - s) * (e - s - 1) // 2 - k * (k - 1) // 2
-            )
-            for ii in range(k):
-                for jj in range(ii + 1, k):
-                    a, c = int(uniq[ii]), int(uniq[jj])
-                    key = (min(a, c), max(a, c))
-                    if key in evaluated:
-                        stats.pairs_excluded += 1
-                        continue
-                    sim = float(similarity_fn(*key))
-                    evaluated[key] = sim
-                    stats.pairs_evaluated += 1
-                    if sim > edge_threshold:
-                        stats.pairs_above_edge += 1
-                        if use_disjoint_sets:
-                            before = uf.n_unions
-                            uf.union(a, c, sim)
-                            if uf.n_unions > before:
-                                stats.unions_done += 1
-                            else:
-                                stats.unions_rejected += 1
-    pairs = [(a, b_, s) for (a, b_), s in sorted(evaluated.items())]
-    return uf, stats, pairs
+    return cluster_source(
+        BandMatrixSource(bands),
+        similarity_fn,
+        edge_threshold,
+        tree_threshold,
+        use_disjoint_sets=use_disjoint_sets,
+        batch=batch,
+        max_batch_pairs=max_batch_pairs,
+    )
 
 
 def modularity(

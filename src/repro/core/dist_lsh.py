@@ -15,6 +15,12 @@ Maps the paper's database designs onto a TPU pod (DESIGN.md §2):
 Everything is static-shape: buckets have fixed capacity with overflow
 *counted* (never silently dropped — callers re-salt and retry or fall back
 to the host path for the overflow docs).
+
+This is the sharded sibling of the staged engine in ``core.engine``
+(CandidateSource -> BatchVerifier -> ThresholdUnionFind): candidate
+generation is the on-device all_to_all + sort, verification is the
+on-device signature-prefix compare.  ROADMAP "Open items" tracks porting
+this path onto the shared ``verify.py`` layer.
 """
 from __future__ import annotations
 
@@ -24,8 +30,9 @@ from dataclasses import dataclass
 import numpy as np
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.jaxcompat import shard_map_compat
 
 from repro.core.hashing import GOLDEN32, U32_MAX, fmix32
 from repro.core.lsh import band_values
@@ -70,7 +77,7 @@ def _bucket_scatter(entries: jnp.ndarray, bucket: jnp.ndarray,
     se = entries[order]
     idx = jnp.arange(d_loc, dtype=jnp.int32)
     heads = jnp.concatenate([jnp.array([True]), sb[1:] != sb[:-1]])
-    seg_start = jnp.maximum.accumulate(jnp.where(heads, idx, 0))
+    seg_start = jax.lax.cummax(jnp.where(heads, idx, 0), axis=0)
     pos = idx - seg_start
     ok = pos < cap
     overflow = jnp.sum(~ok)
@@ -117,7 +124,7 @@ def _band_exchange_and_edges(band_hi, band_lo, doc_ids, sig_k, cfg,
     same = (hi_s[1:] == hi_s[:-1]) & (lo_s[1:] == lo_s[:-1]) & valid_s[1:]
     heads = jnp.concatenate([jnp.array([True]), ~same])
     idx = jnp.arange(hi_s.shape[0], dtype=jnp.int32)
-    head_idx = jnp.maximum.accumulate(jnp.where(heads, idx, 0))
+    head_idx = jax.lax.cummax(jnp.where(heads, idx, 0), axis=0)
     head_doc = doc_s[head_idx]
     head_sig = sig_s[head_idx]
     cand_mask = (~heads) & valid_s            # member of a run
@@ -176,12 +183,12 @@ def make_dedup_step(cfg: DistLSHConfig, mesh: Mesh):
             [count, n_cand, ovf]).astype(jnp.int32)[None]  # (1, 3)
         return buf, buf_sim, emask, stats
 
-    sharded = shard_map(
+    sharded = shard_map_compat(
         local_step,
         mesh=mesh,
         in_specs=(P(axis), P(axis), P()),
         out_specs=(P(axis), P(axis), P(axis), P(axis)),
-        check_vma=False,
+        check_replication=False,
     )
 
     @jax.jit

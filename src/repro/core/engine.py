@@ -1,0 +1,214 @@
+"""The staged dedup engine: CandidateSource -> BatchVerifier -> UnionFind.
+
+This is the single implementation of the paper's §6.5
+``find_candidate_pairs`` procedure that all three execution paths drive:
+
+* host in-memory      — ``pipeline.DedupPipeline`` (``BandMatrixSource``)
+* out-of-core / streaming — ``streaming.StreamingDedup``
+  (``StoreBandSource`` over a Design-1/2 band store)
+* sharded (shard_map) — ``dist_lsh`` keeps verification on-device inside
+  the all_to_all step; its host-side merge reuses this module's
+  union-find stage (see ROADMAP "Open items").
+
+For each band the engine walks equal-value runs, path-compresses run
+members to their current union-find roots, and collects not-yet-evaluated
+root pairs into a batch buffer that is flushed through the verifier in
+device-sized dispatches — the scalar ``similarity_fn(a, b)`` inner loop
+of the previous three copies is gone.
+
+``batch`` granularity:
+
+* ``"run"``  (default) — flush at every run boundary.  Bit-identical to
+  the historical scalar loop: unions from one run are visible to the
+  next run's root compression, so the exclusion statistics (paper
+  Table 5) and the union-find lower-bound guarantee are unchanged.
+* ``"band"`` — flush at band boundaries (or when the buffer reaches
+  ``max_batch_pairs``).  Larger dispatches, maximum throughput; pairs
+  that a same-band union would have excluded may be evaluated, and a
+  union's ``sim`` is the one measured against collection-time roots, so
+  the tree-threshold guarantee becomes approximate (audit with
+  ``unionfind.cluster_min_score_audit`` if it matters).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.candidates import CandidateSource
+from repro.core.unionfind import ThresholdUnionFind
+from repro.core.verify import BatchVerifier, as_verifier
+
+
+@dataclass
+class ClusterStats:
+    """Engine counters (superset of the paper's Table 5 accounting)."""
+
+    pairs_generated: int = 0
+    pairs_evaluated: int = 0
+    pairs_excluded: int = 0  # skipped Jaccard computations (paper Table 5)
+    pairs_above_edge: int = 0
+    unions_done: int = 0
+    unions_rejected: int = 0
+    verify_batches: int = 0
+    verify_seconds: float = 0.0
+
+    @property
+    def verify_pairs_per_second(self) -> float:
+        if self.verify_seconds <= 0:
+            return 0.0
+        return self.pairs_evaluated / self.verify_seconds
+
+
+def cluster_source(
+    source: CandidateSource,
+    verifier,
+    edge_threshold: float,
+    tree_threshold: float,
+    *,
+    use_disjoint_sets: bool = True,
+    batch: str = "run",
+    max_batch_pairs: int = 8192,
+) -> tuple[ThresholdUnionFind, ClusterStats, list[tuple[int, int, float]]]:
+    """Run the staged engine over a candidate source.
+
+    ``verifier`` is a ``verify.BatchVerifier`` or a scalar
+    ``fn(a, b) -> float`` (wrapped via ``verify.as_verifier``).
+    Returns (union-find, stats, evaluated_pairs [(a, b, sim), ...]) —
+    the same contract the historical ``cluster_bands`` had.
+
+    With ``use_disjoint_sets=False`` every candidate pair is evaluated
+    (the paper's non-clustered baseline behind Table 5's "6388 pairs").
+    """
+    if batch not in ("run", "band"):
+        raise ValueError(f"unknown batch granularity {batch!r}")
+    verifier = as_verifier(verifier)
+    # Snapshot the verifier's lifetime counters so stats report THIS
+    # run's batches/seconds even when the verifier instance is reused
+    # (e.g. re-clustering at a second threshold).
+    batches0, seconds0 = verifier.n_batches, verifier.seconds
+    uf = ThresholdUnionFind(source.num_docs, tree_threshold)
+    stats = ClusterStats()
+    evaluated: dict[tuple[int, int], float] = {}
+    pending: list[tuple[int, int]] = []
+    pending_set: set[tuple[int, int]] = set()
+
+    def flush():
+        if not pending:
+            return
+        sims = verifier(np.array(pending, dtype=np.int64))
+        for (a, c), sim in zip(pending, sims):
+            sim = float(sim)
+            evaluated[(a, c)] = sim
+            stats.pairs_evaluated += 1
+            if sim > edge_threshold:
+                stats.pairs_above_edge += 1
+                if use_disjoint_sets:
+                    before = uf.n_unions
+                    uf.union(a, c, sim)
+                    if uf.n_unions > before:
+                        stats.unions_done += 1
+                    else:
+                        stats.unions_rejected += 1
+        pending.clear()
+        pending_set.clear()
+
+    for band_runs in source.iter_bands():
+        for members in band_runs.iter_groups():
+            m = len(members)
+            stats.pairs_generated += m * (m - 1) // 2
+            if use_disjoint_sets:
+                # "replace D with D.find()" — compress to current roots.
+                uniq = np.unique([uf.find(int(d)) for d in members])
+            else:
+                uniq = np.sort(members)
+            k = len(uniq)
+            if k < 2:
+                # All members already co-clustered: every pair excluded.
+                stats.pairs_excluded += m * (m - 1) // 2
+                continue
+            # Pairs collapsed by prior clustering are excluded too.
+            stats.pairs_excluded += m * (m - 1) // 2 - k * (k - 1) // 2
+            for ii in range(k):
+                for jj in range(ii + 1, k):
+                    key = (int(uniq[ii]), int(uniq[jj]))
+                    if key in evaluated or key in pending_set:
+                        stats.pairs_excluded += 1
+                        continue
+                    pending.append(key)
+                    pending_set.add(key)
+            if batch == "run" or len(pending) >= max_batch_pairs:
+                flush()
+        if batch == "band":
+            flush()
+    flush()
+
+    stats.verify_batches = verifier.n_batches - batches0
+    stats.verify_seconds = verifier.seconds - seconds0
+    pairs = [(a, b, s) for (a, b), s in sorted(evaluated.items())]
+    return uf, stats, pairs
+
+
+def merge_cluster_rounds(
+    uf: ThresholdUnionFind,
+    verifier,
+    edge_threshold: float,
+    *,
+    max_batch_pairs: int = 8192,
+) -> int:
+    """Paper §10's second clustering round, batch-verified.
+
+    Compares cluster REPRESENTATIVES and merges clusters whose reps are
+    highly similar (fixes the over-partitioning the disjoint-set pass can
+    produce — Table 7's 56 'diff-set high-similarity' pairs).  The (i, j)
+    sweep is processed in blocks of ``max_batch_pairs``: each block's
+    still-distinct current-root pairs go through the verifier in one
+    dispatch, then the block's merges are applied in sweep order (rare
+    pairs whose roots changed mid-block fall back to a singleton
+    dispatch).  Semantics match the historical O(roots^2) scalar loop —
+    sims are always between *current* roots at union time — with O(block)
+    memory instead of materializing every pair.  Returns #merges.
+    """
+    verifier = as_verifier(verifier)
+    roots = sorted({uf.find(i) for i in range(len(uf.parent))})
+    if len(roots) < 2:
+        return 0
+
+    def blocks():
+        block = []
+        for i in range(len(roots)):
+            for j in range(i + 1, len(roots)):
+                block.append((i, j))
+                if len(block) >= max_batch_pairs:
+                    yield block
+                    block = []
+        if block:
+            yield block
+
+    merges = 0
+    for block in blocks():
+        sim_at: dict[tuple[int, int], float] = {}
+        want = []
+        for i, j in block:
+            a, b = uf.find(roots[i]), uf.find(roots[j])
+            key = (min(a, b), max(a, b))
+            if a != b and key not in sim_at:
+                sim_at[key] = -1.0  # placeholder, filled below
+                want.append(key)
+        if want:
+            for key, s in zip(want, verifier(np.array(want,
+                                                      dtype=np.int64))):
+                sim_at[key] = float(s)
+        for i, j in block:
+            a, b = uf.find(roots[i]), uf.find(roots[j])
+            if a == b:
+                continue
+            key = (min(a, b), max(a, b))
+            sim = sim_at.get(key)
+            if sim is None or sim < 0.0:
+                # Roots changed due to a union earlier in this block.
+                sim = float(verifier(np.array([key], dtype=np.int64))[0])
+                sim_at[key] = sim
+            if sim > edge_threshold and uf.union(a, b, sim):
+                merges += 1
+    return merges

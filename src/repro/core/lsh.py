@@ -108,7 +108,7 @@ def star_edges(sorted_vals: jnp.ndarray, sorted_docs: jnp.ndarray):
     """
     heads = run_heads(sorted_vals)
     idx = jnp.arange(sorted_docs.shape[0])
-    head_idx = jnp.maximum.accumulate(jnp.where(heads, idx, 0))
+    head_idx = jax.lax.cummax(jnp.where(heads, idx, 0), axis=0)
     head_doc = sorted_docs[head_idx]
     edges = jnp.stack([head_doc, sorted_docs], axis=-1).astype(jnp.int32)
     mask = ~heads
@@ -121,28 +121,11 @@ def enumerate_pairs_in_runs(
     """Paper-faithful all-pairs within equal runs (host path, ragged).
 
     Returns (P, 2) int32 array of candidate pairs (a < b by doc id).
+    Delegates to the shared staged-engine layer (``candidates.py``).
     """
-    heads = np.ones(len(sorted_docs), dtype=bool)
-    heads[1:] = np.any(sorted_vals[1:] != sorted_vals[:-1], axis=-1)
-    run_start = np.flatnonzero(heads)
-    run_end = np.append(run_start[1:], len(sorted_docs))
-    pairs = []
-    total = 0
-    for s, e in zip(run_start, run_end):
-        k = e - s
-        if k < 2:
-            continue
-        docs = np.sort(sorted_docs[s:e])
-        ii, jj = np.triu_indices(k, k=1)
-        p = np.stack([docs[ii], docs[jj]], axis=-1)
-        pairs.append(p)
-        total += len(p)
-        if max_pairs is not None and total >= max_pairs:
-            break
-    if not pairs:
-        return np.zeros((0, 2), dtype=np.int32)
-    out = np.concatenate(pairs).astype(np.int32)
-    return out[:max_pairs] if max_pairs is not None else out
+    from repro.core.candidates import pairs_in_runs
+
+    return pairs_in_runs(sorted_vals, sorted_docs, max_pairs)
 
 
 @dataclass(frozen=True)
@@ -167,17 +150,9 @@ def all_candidate_pairs(
 ) -> np.ndarray:
     """All candidate pairs across bands (host path; dedups across bands).
 
-    bands: (D, b, 2) uint32.
+    bands: (D, b, 2) uint32.  Delegates to the shared staged-engine
+    candidate layer (``candidates.BandMatrixSource``).
     """
-    D, b, _ = bands.shape
-    doc_ids = np.arange(D, dtype=np.int32)
-    seen: set[tuple[int, int]] = set()
-    for j in range(b):
-        order = np.lexsort((bands[:, j, 1], bands[:, j, 0]))
-        sv, sd = bands[order, j, :], doc_ids[order]
-        pairs = enumerate_pairs_in_runs(sv, sd, max_pairs_per_band)
-        for a, c in pairs:
-            seen.add((int(a), int(c)))
-    if not seen:
-        return np.zeros((0, 2), dtype=np.int32)
-    return np.array(sorted(seen), dtype=np.int32)
+    from repro.core.candidates import BandMatrixSource, candidate_pairs
+
+    return candidate_pairs(BandMatrixSource(bands), max_pairs_per_band)

@@ -4,9 +4,16 @@ text docs -> tokenize/stem -> pack -> n-gram hashes -> minhash signatures
 -> band matrix -> candidate pairs -> verified similarities -> threshold
 union-find clusters -> keep-list (one representative per cluster).
 
-Two execution styles:
-* ``DedupPipeline.run`` — host-orchestrated, paper-faithful (exact Jaccard
-  verification available), used by the accuracy benchmarks.
+Execution styles, all thin drivers over the staged engine
+(``CandidateSource -> BatchVerifier -> ThresholdUnionFind``, see
+``core.engine``):
+
+* ``DedupPipeline.run`` — host-orchestrated, paper-faithful; candidate
+  generation via ``candidates.BandMatrixSource``, verification via the
+  batched ``verify`` layer (exact Jaccard or signature estimate on a
+  selectable ``numpy`` / ``jnp`` / ``pallas`` backend).
+* ``StreamingDedup`` in ``core.streaming`` — out-of-core two-phase mode
+  over a band store (``candidates.StoreBandSource``), same engine.
 * ``dedup_step`` in ``core.dist_lsh`` — fully on-device sharded step for
   the production mesh (dry-run / roofline path).
 """
@@ -18,12 +25,13 @@ from dataclasses import dataclass, field
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import jaccard as jac
 from repro.core import lsh
 from repro.core import minhash
 from repro.core import shingle
-from repro.core.cluster import ClusterStats, cluster_bands
+from repro.core.candidates import BandMatrixSource
+from repro.core.engine import ClusterStats, cluster_source
 from repro.core.unionfind import ThresholdUnionFind
+from repro.core.verify import ExactJaccardVerifier, SignatureVerifier
 
 
 @dataclass(frozen=True)
@@ -38,11 +46,18 @@ class DedupConfig:
     use_disjoint_sets: bool = True
     exact_verification: bool = True  # exact Jaccard vs signature estimate
     use_pallas: bool = False  # route signature computation through kernels
+    verify_backend: str = "auto"  # estimate mode: numpy | jnp | pallas
+    verify_batch: str = "run"  # engine batch granularity: run | band
     seed: int = 0x5EED
 
     @property
     def num_bands(self) -> int:
         return self.num_hashes // self.rows_per_band
+
+    def resolved_backend(self) -> str:
+        if self.verify_backend != "auto":
+            return self.verify_backend
+        return "pallas" if self.use_pallas else "numpy"
 
 
 @dataclass
@@ -58,13 +73,9 @@ class DedupResult:
 
     @property
     def num_clusters(self) -> int:
-        roots = set(self.labels[~self.keep_mask]) | {
-            int(r) for r in self.labels
-        }
-        sizes: dict[int, int] = {}
-        for r in self.labels:
-            sizes[int(r)] = sizes.get(int(r), 0) + 1
-        return sum(1 for v in sizes.values() if v >= 2)
+        """Number of duplicate clusters, i.e. components of size >= 2."""
+        _, counts = np.unique(self.labels, return_counts=True)
+        return int((counts >= 2).sum())
 
     @property
     def num_duplicates_removed(self) -> int:
@@ -106,6 +117,15 @@ class DedupPipeline:
             lsh.band_values(jnp.asarray(sig), self.config.rows_per_band)
         )
 
+    def make_verifier(self, token_lists: list[list[str]],
+                      sig: np.ndarray):
+        """The batched pair verifier for this config (``verify`` layer)."""
+        cfg = self.config
+        if cfg.exact_verification:
+            return ExactJaccardVerifier.from_token_lists(
+                token_lists, cfg.ngram)
+        return SignatureVerifier(sig, backend=cfg.resolved_backend())
+
     # -- end to end ----------------------------------------------------------
 
     def run(self, texts: list[str]) -> DedupResult:
@@ -123,27 +143,21 @@ class DedupPipeline:
         bands = self.compute_bands(sig)
         timings["bands_s"] = time.perf_counter() - t0
 
-        if cfg.exact_verification:
-            ngram_sets = [
-                shingle.ngram_set(t, cfg.ngram) for t in token_lists
-            ]
-
-            def simfn(a: int, b: int) -> float:
-                return jac.exact_jaccard(ngram_sets[a], ngram_sets[b])
-
-        else:
-            def simfn(a: int, b: int) -> float:
-                return float((sig[a] == sig[b]).mean())
+        t0 = time.perf_counter()
+        verifier = self.make_verifier(token_lists, sig)
+        timings["verifier_build_s"] = time.perf_counter() - t0
 
         t0 = time.perf_counter()
-        uf, stats, pairs = cluster_bands(
-            bands,
-            simfn,
+        uf, stats, pairs = cluster_source(
+            BandMatrixSource(bands),
+            verifier,
             cfg.edge_threshold,
             cfg.tree_threshold,
             use_disjoint_sets=cfg.use_disjoint_sets,
+            batch=cfg.verify_batch,
         )
         timings["cluster_s"] = time.perf_counter() - t0
+        timings["verify_s"] = stats.verify_seconds
 
         labels = uf.components()
         keep = np.zeros(len(texts), dtype=bool)

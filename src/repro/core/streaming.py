@@ -7,8 +7,9 @@ band signatures to Cassandra (75 h), then reads band-major and clusters
   Phase 1 (write): stream document chunks -> signatures (JAX/Pallas) ->
     band values -> a Design-2 band store (sqlite stand-in; on the pod
     this is the all_to_all reshard in core.dist_lsh).
-  Phase 2 (read): band-major scan over the store -> candidate pairs ->
-    lazy exact/estimated verification -> ThresholdUnionFind clusters.
+  Phase 2 (read): band-major scan over the store via the staged engine
+    (``candidates.StoreBandSource`` -> batched ``verify`` ->
+    ``ThresholdUnionFind``; see ``core.engine``).
 
 Incremental by construction: Phase 1 can be appended to (new notes
 arrive), and Phase 2 can be re-run at different edge thresholds without
@@ -17,21 +18,25 @@ recomputing signatures — exactly the property the paper calls out
 
 Also implements the paper's §10 suggestion of a SECOND clustering round:
 merge clusters whose representatives are highly similar (the disjoint-set
-pass can over-partition; see Table 7's 56 diff-set-high pairs).
+pass can over-partition; see Table 7's 56 diff-set-high pairs) — batched
+through the same verifier layer (``engine.merge_cluster_rounds``).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, Iterable, Iterator
+from typing import Callable, Iterable
 
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import jaccard as jac
 from repro.core import lsh, minhash, shingle
-from repro.core.bandstore import Design2Store, candidate_pairs_from_store
+from repro.core.bandstore import Design2Store
+from repro.core.candidates import StoreBandSource
+from repro.core.engine import cluster_source
+from repro.core.engine import merge_cluster_rounds as _merge_rounds
 from repro.core.pipeline import DedupConfig
 from repro.core.unionfind import ThresholdUnionFind
+from repro.core.verify import BatchVerifier, SignatureVerifier, as_verifier
 
 
 @dataclass
@@ -53,9 +58,16 @@ class StreamingDedup:
 
     def ingest(self, texts: Iterable[str], keep_signatures: bool = True):
         """Stream documents into the band store, chunk by chunk."""
+        self.ingest_tokens(
+            (shingle.tokenize(t) for t in texts), keep_signatures)
+
+    def ingest_tokens(self, token_lists: Iterable[list[str]],
+                      keep_signatures: bool = True):
+        """Ingest pre-tokenized documents (avoids re-tokenizing when the
+        caller already has token lists, e.g. to build an exact verifier)."""
         buf: list[list[str]] = []
-        for t in texts:
-            buf.append(shingle.tokenize(t))
+        for toks in token_lists:
+            buf.append(toks)
             if len(buf) == self.chunk_docs:
                 self._flush(buf, keep_signatures)
                 buf = []
@@ -81,78 +93,56 @@ class StreamingDedup:
 
     # -- phase 2 -----------------------------------------------------------
 
+    def candidate_source(self) -> StoreBandSource:
+        """The staged-engine candidate source over the band store."""
+        return StoreBandSource(self.store, self.config.num_bands,
+                               self.n_docs)
+
+    def default_verifier(self) -> BatchVerifier:
+        """Signature-agreement verifier over the phase-1 cache."""
+        if len(self._sig_cache) < self.n_docs:
+            raise ValueError(
+                f"signature cache holds {len(self._sig_cache)} of "
+                f"{self.n_docs} docs — ingest with keep_signatures=True "
+                "or pass an explicit similarity_fn / verifier to cluster()")
+        sig = np.stack([self._sig_cache[i] for i in range(self.n_docs)])
+        return SignatureVerifier(
+            sig, backend=self.config.resolved_backend())
+
     def cluster(self, edge_threshold: float | None = None,
                 tree_threshold: float | None = None,
-                similarity_fn: Callable[[int, int], float] | None = None):
-        """Band-major read -> candidates -> verify -> union-find.
+                similarity_fn: Callable[[int, int], float]
+                | BatchVerifier | None = None):
+        """Band-major read -> candidates -> batched verify -> union-find.
 
-        ``similarity_fn`` defaults to signature agreement (phase-1 cache);
-        pass an exact-Jaccard closure for oracle verification.
-        Re-runnable at different thresholds without re-hashing (paper §12).
+        ``similarity_fn`` may be a ``verify.BatchVerifier`` or a scalar
+        callable; it defaults to batched signature agreement over the
+        phase-1 cache.  Re-runnable at different thresholds without
+        re-hashing (paper §12).
         """
         cfg = self.config
         edge_t = edge_threshold if edge_threshold is not None else \
             cfg.edge_threshold
         tree_t = tree_threshold if tree_threshold is not None else \
             cfg.tree_threshold
-        if similarity_fn is None:
-            def similarity_fn(a, b):
-                return float(
-                    (self._sig_cache[a] == self._sig_cache[b]).mean())
-
-        uf = ThresholdUnionFind(self.n_docs, tree_t)
-        evaluated: dict[tuple, float] = {}
-        n_excluded = 0
-        for j in range(cfg.num_bands):
-            docs, vals = self.store.read_band(j)
-            if len(docs) < 2:
-                continue
-            order = np.lexsort((vals[:, 1], vals[:, 0]))
-            sv, sd = vals[order], docs[order].astype(np.int64)
-            heads = np.ones(len(sd), dtype=bool)
-            heads[1:] = np.any(sv[1:] != sv[:-1], axis=-1)
-            starts = np.flatnonzero(heads)
-            ends = np.append(starts[1:], len(sd))
-            for s, e in zip(starts, ends):
-                if e - s < 2:
-                    continue
-                roots = np.unique(
-                    [uf.find(int(d)) for d in sd[s:e]])
-                if len(roots) < 2:
-                    n_excluded += (e - s) * (e - s - 1) // 2
-                    continue
-                for ii in range(len(roots)):
-                    for jj in range(ii + 1, len(roots)):
-                        key = (int(roots[ii]), int(roots[jj]))
-                        if key in evaluated:
-                            n_excluded += 1
-                            continue
-                        sim = similarity_fn(*key)
-                        evaluated[key] = sim
-                        if sim > edge_t:
-                            uf.union(*key, sim)
-        return uf, {"pairs_evaluated": len(evaluated),
-                    "pairs_excluded": n_excluded}
+        verifier = (self.default_verifier() if similarity_fn is None
+                    else as_verifier(similarity_fn))
+        uf, stats, _ = cluster_source(
+            self.candidate_source(), verifier, edge_t, tree_t,
+            use_disjoint_sets=True, batch=cfg.verify_batch)
+        return uf, {"pairs_evaluated": stats.pairs_evaluated,
+                    "pairs_excluded": stats.pairs_excluded,
+                    "verify_batches": stats.verify_batches,
+                    "verify_seconds": stats.verify_seconds}
 
 
 def merge_cluster_rounds(
     uf: ThresholdUnionFind,
-    similarity_fn: Callable[[int, int], float],
+    similarity_fn: Callable[[int, int], float] | BatchVerifier,
     edge_threshold: float,
 ) -> int:
-    """Paper §10's second clustering round: compare cluster REPRESENTATIVES
-    and merge clusters whose reps are highly similar (fixes the
-    over-partitioning the disjoint-set pass can produce — Table 7's 56
-    'diff-set high-similarity' pairs).  Returns #merges performed.
-    """
-    roots = sorted({uf.find(i) for i in range(len(uf.parent))})
-    merges = 0
-    for i in range(len(roots)):
-        for j in range(i + 1, len(roots)):
-            a, b = uf.find(roots[i]), uf.find(roots[j])
-            if a == b:
-                continue
-            sim = similarity_fn(a, b)
-            if sim > edge_threshold and uf.union(a, b, sim):
-                merges += 1
-    return merges
+    """Paper §10's second clustering round (see
+    ``engine.merge_cluster_rounds``): root-pair similarities are computed
+    in one batched dispatch instead of an O(roots^2) scalar loop.
+    Returns #merges performed."""
+    return _merge_rounds(uf, similarity_fn, edge_threshold)

@@ -1,0 +1,35 @@
+"""Version-compat shims for jax APIs that moved or were renamed.
+
+The container pins jax 0.4.37; newer releases moved ``shard_map`` from
+``jax.experimental.shard_map`` to ``jax.shard_map`` and renamed its
+``check_rep`` kwarg to ``check_vma``.  Importers use::
+
+    from repro.jaxcompat import shard_map_compat
+    f = shard_map_compat(body, mesh=mesh, in_specs=..., out_specs=...,
+                         check_replication=False)
+"""
+from __future__ import annotations
+
+import inspect
+
+try:  # old experimental location (jax <= 0.4.x)
+    from jax.experimental.shard_map import shard_map
+except ImportError:  # pragma: no cover - newer jax moved it to the top level
+    from jax import shard_map
+
+_PARAMS = inspect.signature(shard_map).parameters
+
+
+def shard_map_compat(f, *, mesh, in_specs, out_specs,
+                     check_replication: bool | None = None):
+    """``shard_map`` with the replication-check kwarg spelled correctly
+    for whichever jax is installed (``check_rep`` <= 0.4.x,
+    ``check_vma`` >= 0.5).  ``None`` leaves the jax default."""
+    kwargs = {}
+    if check_replication is not None:
+        if "check_rep" in _PARAMS:
+            kwargs["check_rep"] = check_replication
+        elif "check_vma" in _PARAMS:
+            kwargs["check_vma"] = check_replication
+    return shard_map(f, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, **kwargs)

@@ -1,6 +1,12 @@
-"""Dedup pipeline driver: host path or sharded (shard_map) path.
+"""Dedup driver: host, streaming (out-of-core), or sharded execution.
+
+All three modes are thin drivers over the staged engine
+(``CandidateSource -> BatchVerifier -> ThresholdUnionFind``; see
+``repro.core.engine``), with a selectable verification backend.
 
   PYTHONPATH=src python -m repro.launch.dedup --notes 500 --dups 300
+  PYTHONPATH=src python -m repro.launch.dedup --backend jnp --batch band
+  PYTHONPATH=src python -m repro.launch.dedup --streaming --chunk 128
   PYTHONPATH=src python -m repro.launch.dedup --sharded --devices 8
 """
 from __future__ import annotations
@@ -18,6 +24,17 @@ def main(argv=None):
     ap.add_argument("--edge-threshold", type=float, default=0.75)
     ap.add_argument("--tree-threshold", type=float, default=0.40)
     ap.add_argument("--use-pallas", action="store_true")
+    ap.add_argument("--backend", default="auto",
+                    choices=("auto", "numpy", "jnp", "pallas"),
+                    help="estimate-mode verification backend")
+    ap.add_argument("--batch", default="run", choices=("run", "band"),
+                    help="engine batch granularity (band = max throughput)")
+    ap.add_argument("--estimate", action="store_true",
+                    help="signature-estimate verification (vs exact)")
+    ap.add_argument("--streaming", action="store_true",
+                    help="two-phase out-of-core mode over a band store")
+    ap.add_argument("--chunk", type=int, default=128,
+                    help="streaming ingest chunk size")
     ap.add_argument("--sharded", action="store_true",
                     help="run the shard_map dedup step")
     ap.add_argument("--devices", type=int, default=0,
@@ -38,6 +55,14 @@ def main(argv=None):
     notes, prov = inject_near_duplicates(notes, args.dups)
     print(f"corpus: {len(notes)} notes ({args.dups} injected near-dups)")
 
+    cfg = DedupConfig(
+        edge_threshold=args.edge_threshold,
+        tree_threshold=args.tree_threshold,
+        use_pallas=args.use_pallas,
+        exact_verification=not args.estimate,
+        verify_backend=args.backend,
+        verify_batch=args.batch)
+
     if args.sharded:
         from repro.core import DistLSHConfig, docs_mesh, make_dedup_step
         from repro.core import minhash
@@ -48,13 +73,13 @@ def main(argv=None):
         pad = (-len(token_lists)) % ndev
         token_lists += [["pad"]] * pad
         packed = pack_documents(token_lists)
-        cfg = DistLSHConfig(edge_threshold=args.edge_threshold,
-                            edge_capacity=8192)
+        dcfg = DistLSHConfig(edge_threshold=args.edge_threshold,
+                             edge_capacity=8192)
         mesh = docs_mesh()
-        step = make_dedup_step(cfg, mesh)
+        step = make_dedup_step(dcfg, mesh)
         t0 = time.perf_counter()
         out = step(jnp.asarray(packed.tokens), jnp.asarray(packed.lengths),
-                   jnp.asarray(minhash.default_seeds(cfg.num_hashes)))
+                   jnp.asarray(minhash.default_seeds(dcfg.num_hashes)))
         jax.block_until_ready(out["edges"])
         dt = time.perf_counter() - t0
         em = np.asarray(out["edge_mask"])
@@ -63,17 +88,46 @@ def main(argv=None):
               f"{stats[1]} candidates, overflow={stats[2]}, {dt:.2f}s")
         return
 
-    pipe = DedupPipeline(DedupConfig(
-        edge_threshold=args.edge_threshold,
-        tree_threshold=args.tree_threshold,
-        use_pallas=args.use_pallas))
+    if args.streaming:
+        from repro.core.shingle import tokenize
+        from repro.core.streaming import StreamingDedup
+        from repro.core.verify import ExactJaccardVerifier
+
+        sd = StreamingDedup(cfg, chunk_docs=args.chunk)
+        token_lists = [tokenize(t) for t in notes]
+        t0 = time.perf_counter()
+        sd.ingest_tokens(token_lists)
+        t_ingest = time.perf_counter() - t0
+        # StreamingDedup's own default verifier is the signature
+        # estimate; honour exact_verification like the host path does.
+        verifier = None
+        if cfg.exact_verification:
+            verifier = ExactJaccardVerifier.from_token_lists(
+                token_lists, cfg.ngram)
+        t0 = time.perf_counter()
+        uf, stats = sd.cluster(similarity_fn=verifier)
+        t_cluster = time.perf_counter() - t0
+        labels = uf.components()
+        n_dup = len(notes) - len(set(labels.tolist()))
+        thr = (stats["pairs_evaluated"] / stats["verify_seconds"]
+               if stats["verify_seconds"] > 0 else 0.0)
+        print(f"streaming pipeline: {n_dup} duplicates, "
+              f"{stats['pairs_evaluated']} pairs verified in "
+              f"{stats['verify_batches']} batches "
+              f"({thr:.0f} pairs/s), "
+              f"ingest {t_ingest:.2f}s cluster {t_cluster:.2f}s")
+        return
+
+    pipe = DedupPipeline(cfg)
     t0 = time.perf_counter()
     res = pipe.run(notes)
     dt = time.perf_counter() - t0
     print(f"host pipeline: {res.num_clusters} clusters, "
           f"{res.num_duplicates_removed} duplicates removed, "
           f"{res.stats.pairs_evaluated} Jaccard evals "
-          f"({res.stats.pairs_excluded} excluded), {dt:.2f}s")
+          f"({res.stats.pairs_excluded} excluded; "
+          f"{res.stats.verify_batches} batches, "
+          f"{res.stats.verify_pairs_per_second:.0f} pairs/s), {dt:.2f}s")
     print("timings:", {k: round(v, 3) for k, v in res.timings.items()})
 
 

@@ -214,12 +214,14 @@ def _dot_flops(line: str, symbols: dict) -> float:
     out_elems = 1
     for d in rshape:
         out_elems *= d
-    # first operand name after "dot("
-    om = re.search(r"dot\((%[\w.\-]+)", line)
+    # First operand after "dot(": either "%name" or, on newer XLA text,
+    # "f32[128,128]{1,0} %name" with the type inline.
+    om = re.search(
+        r"dot\((?:(\w+\[[\d,]*\](?:\{[^}]*\})?)\s+)?(%[\w.\-]+)", line)
     cm = _LHS_CONTRACT_RE.search(line)
     if not om or not cm:
         return 2.0 * out_elems
-    lhs_sig = symbols.get(om.group(1))
+    lhs_sig = om.group(1) or symbols.get(om.group(2))
     if not lhs_sig:
         return 2.0 * out_elems
     shapes = _shape_list(lhs_sig)

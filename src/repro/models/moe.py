@@ -67,7 +67,7 @@ def moe_ffn(p, cfg: ModelConfig, x):
     se, st, sg = flat_e[order], flat_t[order], flat_g[order]
     idx = jnp.arange(T * K, dtype=jnp.int32)
     heads = jnp.concatenate([jnp.array([True]), se[1:] != se[:-1]])
-    seg_start = jnp.maximum.accumulate(jnp.where(heads, idx, 0))
+    seg_start = jax.lax.cummax(jnp.where(heads, idx, 0), axis=0)
     pos = idx - seg_start
     keep = pos < C
     drop_frac = 1.0 - jnp.mean(keep.astype(jnp.float32))

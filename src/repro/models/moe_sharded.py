@@ -24,8 +24,9 @@ import math
 import numpy as np
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
+
+from repro.jaxcompat import shard_map_compat
 
 from repro.models.config import ModelConfig, MoECfg
 from repro.models.layers import glu_act
@@ -38,7 +39,7 @@ def _segment_positions(sorted_keys):
     idx = jnp.arange(n, dtype=jnp.int32)
     heads = jnp.concatenate(
         [jnp.array([True]), sorted_keys[1:] != sorted_keys[:-1]])
-    seg_start = jnp.maximum.accumulate(jnp.where(heads, idx, 0))
+    seg_start = jax.lax.cummax(jnp.where(heads, idx, 0), axis=0)
     return idx - seg_start
 
 
@@ -177,12 +178,12 @@ def moe_ffn_ep(p, cfg: ModelConfig, x):
     body = lambda xt_, r_, wg_, wu_, wd_: _local_moe(
         xt_, r_, wg_, wu_, wd_, cfg=cfg, ep_axis=ep_axis, n_ep=n_ep,
         dp_axes=dp_axes)
-    out, lb, zl, dropf = shard_map(
+    out, lb, zl, dropf = shard_map_compat(
         body, mesh=mesh,
         in_specs=(P(token_axes, None),
                   P(), P(ep_axis), P(ep_axis), P(ep_axis)),
         out_specs=(P(token_axes, None), P(), P(), P()),
-        check_vma=False,
+        check_replication=False,
     )(xt, p["router"], p["w_gate"], p["w_up"], p["w_down"])
 
     out = out.reshape(B, S, d)

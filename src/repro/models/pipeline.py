@@ -21,8 +21,9 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.jaxcompat import shard_map_compat
 
 from repro.models import blocks
 from repro.models.config import ModelConfig
@@ -122,11 +123,11 @@ def make_pipelined_loss(cfg: ModelConfig, mesh: Mesh, *, n_micro: int,
         labels = jnp.concatenate(
             [tokens[:, :, 1:], jnp.full_like(tokens[:, :, :1], -1)],
             axis=2)
-        fn = shard_map(
+        fn = shard_map_compat(
             local_fn, mesh=mesh,
             in_specs=(P(), P(), P()),
             out_specs=P(),
-            check_vma=False,
+            check_replication=False,
         )
         return fn(params, tokens, labels)
 

@@ -1,6 +1,9 @@
 """Hash-family properties (paper §3.5: hashes as random permutations)."""
 import numpy as np
 import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.hashing import (

@@ -1,6 +1,9 @@
 """Pallas kernels vs pure-jnp refs: shape/dtype sweeps (hypothesis)."""
 import numpy as np
 import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ops, ref

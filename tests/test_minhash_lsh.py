@@ -1,6 +1,9 @@
 """MinHash + LSH core properties (paper §3-§4)."""
 import numpy as np
 import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import jaccard, lsh, minhash, shingle

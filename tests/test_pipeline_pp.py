@@ -13,6 +13,13 @@ def test_bubble_fraction():
 
 
 @pytest.mark.slow
+@pytest.mark.xfail(
+    not hasattr(__import__("jax"), "shard_map"),
+    reason="jax<0.5 experimental shard_map cannot infer output replication "
+    "through the fori_loop+ppermute schedule (_SpecError in grad); the "
+    "promoted jax.shard_map handles it",
+    strict=False,
+)
 def test_pipelined_loss_matches_reference():
     run_with_devices("""
         import numpy as np, jax, jax.numpy as jnp
