@@ -24,3 +24,15 @@ def timeit(fn, *, repeats: int = 3, number: int = 1) -> float:
 
 def section(title: str):
     print(f"\n# --- {title} ---")
+
+
+def write_json(path: str):
+    """Dump every emitted row as JSON (the ``BENCH_*.json`` artifact)."""
+    import json
+
+    with open(path, "w") as f:
+        json.dump(
+            [{"name": n, "us_per_call": u, "derived": d}
+             for n, u, d in ROWS],
+            f, indent=2)
+    print(f"# wrote {len(ROWS)} rows to {path}")

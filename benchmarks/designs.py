@@ -1,6 +1,8 @@
 """Paper Figs 5-7 (§9.2) + Fig 8 (§9.2.1) + §11: in-memory vs Database
 Design 1 vs Design 2 — time vs #notes / #words, memory, and the §11
-memory-limit table."""
+memory-limit table.  ``run_sharded`` adds the production-mesh analogue:
+the dist_lsh Design-2 shuffle vs the host engine on the same corpus
+(verify throughput + edge drift, which must be 0)."""
 from __future__ import annotations
 
 import time
@@ -14,7 +16,7 @@ from repro.core import lsh, minhash, shingle
 from repro.core.bandstore import (
     Design1Store, Design2Store, candidate_pairs_from_store,
 )
-from repro.data import make_i2b2_like
+from repro.data import inject_near_duplicates, make_i2b2_like
 
 
 def _bands_for(notes):
@@ -92,6 +94,89 @@ def run_memory():
     emit("limit_design2_notes", 0.0, f"{d2_limit}")         # ~100M
 
 
+def run_sharded(n_notes: int = 160, n_dups: int = 64):
+    """Sharded dist_lsh path vs host engine: verify parity + throughput.
+
+    Runs the two-stage sharded path (on-device prefix prescreen ->
+    ShardedEdgeSource -> ShardedEdgeVerifier -> cluster_source) and the
+    host engine (BandMatrixSource -> SignatureVerifier) over the same
+    corpus, then re-scores every sharded-path evaluated pair with the
+    host verifier: the edge-drift count MUST be 0 (same signatures,
+    same estimator), and clusters must be identical.
+    """
+    import jax
+
+    from repro.core.candidates import BandMatrixSource
+    from repro.core.dist_lsh import (
+        DistLSHConfig, cluster_step_output, docs_mesh, make_dedup_step,
+    )
+    from repro.core.engine import cluster_source
+    from repro.core.verify import ShardedEdgeVerifier, SignatureVerifier
+
+    ndev = len(jax.devices())
+    section(f"sharded dist_lsh vs host engine ({ndev} devices)")
+    notes = make_i2b2_like(n_notes, seed=3)
+    notes, _ = inject_near_duplicates(notes, n_dups, frac_low=0.0,
+                                      frac_high=0.01, seed=4)
+    token_lists = [shingle.tokenize(t) for t in notes]
+    token_lists += [["pad"]] * ((-len(token_lists)) % ndev)
+    packed = shingle.pack_documents(token_lists)
+    dcfg = DistLSHConfig(edge_threshold=0.75, bucket_slack=16.0)
+    step = make_dedup_step(dcfg, docs_mesh())
+
+    t0 = time.perf_counter()
+    out = step(jnp.asarray(packed.tokens), jnp.asarray(packed.lengths),
+               jnp.asarray(minhash.default_seeds(dcfg.num_hashes)))
+    jax.block_until_ready(out["edges"])
+    t_dev = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    res = cluster_step_output(out, dcfg, tree_threshold=0.40,
+                              num_docs=len(notes))
+    t_merge = time.perf_counter() - t0
+    emit("sharded_device_step", t_dev * 1e6,
+         f"edges={res.num_edges};overflow={res.overflow};"
+         f"retried={int(res.retried)}")
+    emit("sharded_verify_throughput", t_merge * 1e6,
+         f"pairs={res.stats.pairs_evaluated};"
+         f"batches={res.stats.verify_batches};"
+         f"pps={res.stats.verify_pairs_per_second:.0f}")
+
+    # Host engine over the step's own signatures (same corpus/estimator).
+    sig = np.asarray(out["sig"])[: len(notes)]
+    bands = np.asarray(lsh.band_values(jnp.asarray(sig),
+                                       dcfg.rows_per_band))
+    host_v = SignatureVerifier(sig)
+    t0 = time.perf_counter()
+    uf_h, st_h, _ = cluster_source(BandMatrixSource(bands), host_v,
+                                   dcfg.edge_threshold, 0.40)
+    t_host = time.perf_counter() - t0
+    emit("host_engine_verify_throughput", t_host * 1e6,
+         f"pairs={st_h.pairs_evaluated};"
+         f"pps={st_h.verify_pairs_per_second:.0f}")
+
+    # Edge drift: the sharded stage-2 verifier re-scores its evaluated
+    # pairs against the host verifier (same signatures, same backend).
+    drift = 0
+    if res.pairs:
+        pairs = np.array([(a, b) for a, b, _ in res.pairs],
+                         dtype=np.int64)
+        drift = ShardedEdgeVerifier(sig).drift_count(pairs, host_v)
+
+    def canon(labels):
+        # first-occurrence relabeling: partitions compare independently
+        # of which member union-by-rank picked as representative
+        first = {}
+        return [first.setdefault(int(l), i) for i, l in enumerate(labels)]
+
+    same_clusters = int(canon(res.labels()) == canon(uf_h.components()))
+    assert drift == 0, f"sharded-vs-host edge drift: {drift}"
+    emit("sharded_edge_drift", 0.0,
+         f"drift={drift};same_clusters={same_clusters};"
+         f"edges={len(res.pairs)}")
+
+
 if __name__ == "__main__":
     run()
     run_memory()
+    run_sharded()

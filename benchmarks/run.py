@@ -4,6 +4,7 @@ Prints ``name,us_per_call,derived`` CSV rows (the harness contract).
 
   PYTHONPATH=src python -m benchmarks.run            # everything
   PYTHONPATH=src python -m benchmarks.run --only accuracy,kernels
+  PYTHONPATH=src python -m benchmarks.run --smoke --json BENCH_smoke.json
 """
 from __future__ import annotations
 
@@ -17,6 +18,12 @@ def main(argv=None) -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: accuracy,designs,"
                          "clustering,scale,kernels,roofline")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-size CI smoke: sharded-vs-host parity + "
+                         "verify throughput only")
+    ap.add_argument("--json", default=None,
+                    help="also write emitted rows to this JSON file "
+                         "(the BENCH_*.json perf-trajectory artifact)")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
 
@@ -26,6 +33,16 @@ def main(argv=None) -> None:
     print("name,us_per_call,derived")
     t0 = time.perf_counter()
 
+    if args.smoke:
+        from benchmarks import designs
+        from benchmarks.common import write_json
+
+        designs.run_sharded(n_notes=96, n_dups=32)
+        if args.json:
+            write_json(args.json)
+        print(f"\n# benchmarks completed in {time.perf_counter()-t0:.1f}s")
+        return
+
     if want("accuracy"):
         from benchmarks import accuracy
         accuracy.run()
@@ -34,6 +51,7 @@ def main(argv=None) -> None:
         from benchmarks import designs
         designs.run()
         designs.run_memory()
+        designs.run_sharded()
     if want("clustering"):
         from benchmarks import clustering
         clustering.run()
@@ -50,6 +68,10 @@ def main(argv=None) -> None:
         from benchmarks import roofline
         roofline.run()
 
+    if args.json:
+        from benchmarks.common import write_json
+
+        write_json(args.json)
     print(f"\n# benchmarks completed in {time.perf_counter()-t0:.1f}s")
 
 

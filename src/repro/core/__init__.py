@@ -12,10 +12,17 @@ on-device).
 from repro.core.pipeline import DedupConfig, DedupPipeline, DedupResult
 from repro.core.lsh import LSHParams, candidate_probability
 from repro.core.unionfind import ThresholdUnionFind, connected_components
-from repro.core.dist_lsh import DistLSHConfig, make_dedup_step, docs_mesh
+from repro.core.dist_lsh import (
+    DistLSHConfig,
+    ShardedClusterResult,
+    cluster_step_output,
+    docs_mesh,
+    make_dedup_step,
+)
 from repro.core.candidates import (
     BandMatrixSource,
     CandidateSource,
+    ShardedEdgeSource,
     StoreBandSource,
     candidate_pairs,
 )
@@ -24,6 +31,7 @@ from repro.core.verify import (
     BatchVerifier,
     CallbackVerifier,
     ExactJaccardVerifier,
+    ShardedEdgeVerifier,
     SignatureVerifier,
 )
 
@@ -36,10 +44,13 @@ __all__ = [
     "ThresholdUnionFind",
     "connected_components",
     "DistLSHConfig",
+    "ShardedClusterResult",
+    "cluster_step_output",
     "make_dedup_step",
     "docs_mesh",
     "BandMatrixSource",
     "CandidateSource",
+    "ShardedEdgeSource",
     "StoreBandSource",
     "candidate_pairs",
     "ClusterStats",
@@ -47,5 +58,6 @@ __all__ = [
     "BatchVerifier",
     "CallbackVerifier",
     "ExactJaccardVerifier",
+    "ShardedEdgeVerifier",
     "SignatureVerifier",
 ]

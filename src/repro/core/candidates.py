@@ -19,6 +19,10 @@ differ in where the band values come from:
   ``read_band(j) -> (doc_ids, values)`` (``bandstore.Design1Store``,
   ``bandstore.Design2Store``), which is also how streamed chunks are
   consumed in ``StreamingDedup`` phase 2.
+* ``ShardedEdgeSource`` — the per-device prescreened-edge buffers the
+  ``dist_lsh`` all_to_all step emits; each surviving edge is a
+  two-member run, so the host-side merge of the sharded path drives the
+  very same engine.
 
 The engine in ``engine.py`` drives any source through batched
 verification; ``candidate_pairs`` below is the source-agnostic
@@ -143,6 +147,66 @@ class StoreBandSource:
         for j in range(self._num_bands):
             docs, vals = self.store.read_band(j)
             yield make_band_runs(j, vals, docs)
+
+
+class ShardedEdgeSource:
+    """Source over the per-device verified-edge buffers of ``dist_lsh``.
+
+    The sharded step's stage-1 prescreen emits bounded ``(head_doc,
+    member_doc)`` edge buffers, one per device (shape ``(n_dev * e_cap,
+    2)`` after the shard_map gather, with a matching validity mask).
+    Each surviving edge becomes a two-member run; ``iter_bands`` yields
+    one ``BandRuns`` per device buffer so the engine's run/band batching
+    maps onto device shards.  Driving this source through
+    ``engine.cluster_source`` gives the sharded path the same batched
+    stage-2 verification, exclusion accounting, and threshold union-find
+    as the host path.
+
+    Edges touching doc ids outside ``[0, num_docs)`` — padding documents
+    appended to make the corpus divisible by the device count — are
+    dropped here so they can never union with real documents.
+    """
+
+    def __init__(self, edges: np.ndarray, edge_mask: np.ndarray | None = None,
+                 *, num_docs: int, num_shards: int = 1):
+        edges = np.asarray(edges).reshape(-1, 2)
+        if edge_mask is None:
+            mask = np.ones(len(edges), dtype=bool)
+        else:
+            mask = np.asarray(edge_mask).reshape(-1).astype(bool)
+        assert len(mask) == len(edges), (edges.shape, mask.shape)
+        self._num_docs = int(num_docs)
+        self._shards: list[np.ndarray] = []
+        for e, m in zip(np.array_split(edges, num_shards),
+                        np.array_split(mask, num_shards)):
+            e = e[m].astype(np.int64)
+            e = e[(e >= 0).all(axis=-1) & (e < self._num_docs).all(axis=-1)]
+            self._shards.append(e)
+
+    @property
+    def num_docs(self) -> int:
+        return self._num_docs
+
+    @property
+    def num_bands(self) -> int:
+        return len(self._shards)
+
+    @property
+    def num_edges(self) -> int:
+        return sum(len(e) for e in self._shards)
+
+    def iter_bands(self) -> Iterator[BandRuns]:
+        for i, e in enumerate(self._shards):
+            n = len(e)
+            # Synthetic per-edge band value: run j is the doc pair of
+            # edge j, so the shared runs machinery sees each edge as a
+            # two-member candidate group.
+            vals = np.zeros((2 * n, 2), dtype=np.uint32)
+            vals[:, 0] = np.repeat(np.arange(n, dtype=np.uint32), 2)
+            starts = 2 * np.arange(n, dtype=np.int64)
+            yield BandRuns(band_id=i, sorted_vals=vals,
+                           sorted_docs=e.reshape(-1),
+                           run_starts=starts, run_ends=starts + 2)
 
 
 # ---------------------------------------------------------------------------

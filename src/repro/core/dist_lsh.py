@@ -9,18 +9,34 @@ Maps the paper's database designs onto a TPU pod (DESIGN.md §2):
   (value-range partitioning — the "select * where band_id = id" query
   becomes an ICI shuffle) followed by a local lexicographic sort and run
   detection — the paper's sort-based method (§3.6 method 2).
-* Star edges (member -> run head) + on-device signature-prefix
-  verification produce bounded, statically-shaped verified-edge buffers.
+* Star edges (member -> run head) go through a **two-stage verify**:
 
-Everything is static-shape: buckets have fixed capacity with overflow
-*counted* (never silently dropped — callers re-salt and retry or fall back
-to the host path for the overflow docs).
+  1. *On-device prefix prescreen* (inside the all_to_all): each run
+     member is compared to its run head over the exchanged
+     ``verify_k``-signature prefix; edges whose prefix estimate clears
+     ``edge_threshold - prescreen_margin`` survive into bounded,
+     statically-shaped per-device edge buffers.  The margin keeps the
+     prescreen high-recall: a k-row prefix is a noisy estimate of the
+     full M-row agreement, so the final thresholding is NOT done here.
+  2. *Batched full-signature verify on the host merge*: the step also
+     returns the full (D, M) signature matrix it computed, and
+     ``cluster_step_output`` drives the surviving edges through the
+     shared staged engine — ``candidates.ShardedEdgeSource`` ->
+     ``verify.ShardedEdgeVerifier`` (numpy / jnp /
+     ``kernels.sigjaccard`` backends) -> ``engine.cluster_source`` ->
+     ``ThresholdUnionFind`` — the exact same estimator, thresholds,
+     exclusion stats, and union-find semantics as the host and
+     streaming paths.
 
-This is the sharded sibling of the staged engine in ``core.engine``
-(CandidateSource -> BatchVerifier -> ThresholdUnionFind): candidate
-generation is the on-device all_to_all + sort, verification is the
-on-device signature-prefix compare.  ROADMAP "Open items" tracks porting
-this path onto the shared ``verify.py`` layer.
+Everything is static-shape: buckets and edge buffers have fixed capacity
+with overflow *counted* (never silently dropped) — when any device
+overflowed, ``cluster_step_output`` falls back through the SAME engine
+over a host ``BandMatrixSource`` built from the step's own signatures,
+accumulating into the same union-find, so no candidate is ever lost.
+
+Global doc ids come from a per-device ``doc_offsets`` input (default:
+the contiguous row offsets), so chunked or ragged corpora can assign
+collision-free ids across multiple step invocations.
 """
 from __future__ import annotations
 
@@ -49,13 +65,19 @@ class DistLSHConfig:
     rows_per_band: int = 2
     verify_k: int = 32          # signature prefix length exchanged for verify
     edge_threshold: float = 0.75
+    prescreen_margin: float = 0.15  # stage-1 keeps est >= edge_t - margin
     bucket_slack: float = 2.0   # capacity = slack * D_local / n_dev
-    edge_capacity: int = 4096   # verified-edge buffer per device
+    edge_capacity: int = 4096   # prescreened-edge buffer per device
     m_chunk: int = 16
 
     @property
     def num_bands(self) -> int:
         return self.num_hashes // self.rows_per_band
+
+    @property
+    def prescreen_threshold(self) -> float:
+        """Stage-1 on-device prefix-prescreen keep threshold."""
+        return max(0.0, self.edge_threshold - self.prescreen_margin)
 
 
 def docs_mesh(devices=None) -> Mesh:
@@ -89,13 +111,16 @@ def _bucket_scatter(entries: jnp.ndarray, bucket: jnp.ndarray,
 
 def _band_exchange_and_edges(band_hi, band_lo, doc_ids, sig_k, cfg,
                              axis_name: str, n_dev: int, cap: int):
-    """One band: bucket -> all_to_all -> sort -> star edges -> verify.
+    """One band: bucket -> all_to_all -> sort -> star edges -> prescreen.
 
     All inputs are per-device locals:
       band_hi/lo: (D_loc,) uint32; doc_ids: (D_loc,) uint32 global ids;
       sig_k: (D_loc, k) uint32.
-    Returns (edges (n_dev*cap, 2) uint32, sims (n_dev*cap,) f32,
-             edge_mask, n_candidates, overflow).
+    Returns (edges (n_dev*cap, 2) uint32, prefix ests (n_dev*cap,) f32,
+             edge_mask, n_candidates, overflow).  ``edge_mask`` marks
+    stage-1 survivors (prefix estimate >= prescreen threshold); the
+    final ``edge_threshold`` decision happens in stage 2 on the host
+    merge with full signatures (``cluster_step_output``).
     """
     k = cfg.verify_k
     shift = 32 - max(1, int(np.log2(n_dev))) if n_dev > 1 else 32
@@ -129,7 +154,7 @@ def _band_exchange_and_edges(band_hi, band_lo, doc_ids, sig_k, cfg,
     head_sig = sig_s[head_idx]
     cand_mask = (~heads) & valid_s            # member of a run
     est = jnp.mean((sig_s == head_sig).astype(jnp.float32), axis=-1)
-    edge_mask = cand_mask & (est >= cfg.edge_threshold)
+    edge_mask = cand_mask & (est >= cfg.prescreen_threshold)
     edges = jnp.stack([head_doc, doc_s], axis=-1)
     return edges, est, edge_mask, jnp.sum(cand_mask), overflow
 
@@ -137,21 +162,29 @@ def _band_exchange_and_edges(band_hi, band_lo, doc_ids, sig_k, cfg,
 def make_dedup_step(cfg: DistLSHConfig, mesh: Mesh):
     """Build the jit-able sharded dedup step for ``mesh`` ('docs' axis).
 
-    Signature: (tokens (D, L) uint32, lengths (D,) int32, seeds (M,))
-      -> dict(edges (n_dev*E_cap, 2), sims, edge_mask, stats)
+    Signature: (tokens (D, L) uint32, lengths (D,) int32, seeds (M,),
+                doc_offsets (n_dev,) uint32 | None)
+      -> dict(edges (n_dev*E_cap, 2), prescreen_sims, edge_mask,
+              sig (D, M), stats (n_dev, 3))
+
+    ``doc_offsets[i]`` is the global doc id of device i's first row;
+    it defaults to the contiguous row offsets ``i * D_loc``.  Callers
+    that process a ragged corpus in several chunks MUST pass offsets so
+    ids from different invocations cannot collide (the historical
+    ``dev * d_loc + arange(d_loc)`` assignment restarted at 0 for every
+    chunk and silently aliased distinct documents in the merged edges).
     """
     n_dev = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
     axis = mesh.axis_names[0]
 
-    def local_step(tokens, lengths, seeds):
-        # tokens: (D_loc, L) local shard.
+    def local_step(tokens, lengths, seeds, doc_offset):
+        # tokens: (D_loc, L) local shard; doc_offset: (1,) global base id.
         d_loc = tokens.shape[0]
         cap = max(1, int(np.ceil(cfg.bucket_slack * d_loc / n_dev)))
         ng, valid = ngram_hashes(tokens, lengths, n=cfg.ngram)
         sig = signatures(ng, valid, seeds, m_chunk=cfg.m_chunk)
         bands = band_values(sig, cfg.rows_per_band)  # (D_loc, b, 2)
-        dev = jax.lax.axis_index(axis).astype(jnp.uint32)
-        doc_ids = dev * jnp.uint32(d_loc) + jnp.arange(
+        doc_ids = doc_offset[0].astype(jnp.uint32) + jnp.arange(
             d_loc, dtype=jnp.uint32)
         sig_k = sig[:, : cfg.verify_k]
 
@@ -181,22 +214,27 @@ def make_dedup_step(cfg: DistLSHConfig, mesh: Mesh):
         emask = jnp.arange(e_cap) < count
         stats = jnp.stack(
             [count, n_cand, ovf]).astype(jnp.int32)[None]  # (1, 3)
-        return buf, buf_sim, emask, stats
+        return buf, buf_sim, emask, sig, stats
 
     sharded = shard_map_compat(
         local_step,
         mesh=mesh,
-        in_specs=(P(axis), P(axis), P()),
-        out_specs=(P(axis), P(axis), P(axis), P(axis)),
+        in_specs=(P(axis), P(axis), P(), P(axis)),
+        out_specs=(P(axis), P(axis), P(axis), P(axis), P(axis)),
         check_replication=False,
     )
 
     @jax.jit
-    def dedup_step(tokens, lengths, seeds):
-        edges, sims, emask, stats = sharded(tokens, lengths, seeds)
+    def dedup_step(tokens, lengths, seeds, doc_offsets=None):
+        if doc_offsets is None:
+            d_loc = tokens.shape[0] // n_dev
+            doc_offsets = jnp.uint32(d_loc) * jnp.arange(
+                n_dev, dtype=jnp.uint32)
+        edges, sims, emask, sig, stats = sharded(
+            tokens, lengths, seeds, doc_offsets.astype(jnp.uint32))
         return {
-            "edges": edges, "sims": sims, "edge_mask": emask,
-            "stats": stats,
+            "edges": edges, "prescreen_sims": sims, "edge_mask": emask,
+            "sig": sig, "stats": stats,
         }
 
     return dedup_step
@@ -209,3 +247,101 @@ def dedup_input_specs(cfg: DistLSHConfig, num_docs: int, max_len: int):
         "lengths": jax.ShapeDtypeStruct((num_docs,), jnp.int32),
         "seeds": jax.ShapeDtypeStruct((cfg.num_hashes,), jnp.uint32),
     }
+
+
+# ---------------------------------------------------------------------------
+# Host-side merge: stage-2 verify + clustering through the shared engine
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ShardedClusterResult:
+    """Outcome of ``cluster_step_output`` (sharded path, host merge)."""
+
+    uf: "ThresholdUnionFind"
+    stats: "ClusterStats"
+    pairs: list  # evaluated (a, b, sim) with full-signature sims
+    num_edges: int          # stage-1 survivors fed into the engine
+    overflow: int           # device bucket/edge-buffer overflow count
+    retried: bool           # True when the overflow fallback pass ran
+    device_stats: np.ndarray  # (n_dev, 3) [edge_count, candidates, ovf]
+
+    def labels(self) -> np.ndarray:
+        return self.uf.components()
+
+
+def cluster_step_output(
+    out: dict,
+    cfg: DistLSHConfig,
+    *,
+    tree_threshold: float = 0.40,
+    backend: str = "numpy",
+    batch: str = "run",
+    num_docs: int | None = None,
+    doc_id_base: int = 0,
+    overflow_fallback: bool = True,
+    batch_pairs: int = 8192,
+) -> ShardedClusterResult:
+    """Stage 2 of the sharded path: batched full-signature verify + merge.
+
+    Drives the step's prescreened per-device edge buffers through the
+    shared staged engine — ``ShardedEdgeSource`` ->
+    ``ShardedEdgeVerifier`` (full (D, M) signatures, same
+    numpy/jnp/pallas backends as the host path) ->
+    ``engine.cluster_source`` — so edge thresholds, estimator semantics,
+    and exclusion stats are identical to ``DedupPipeline``.
+
+    ``num_docs`` bounds real documents: edges touching padding rows
+    (appended for divisibility by the device count) are dropped.
+
+    ``doc_id_base`` must echo the base passed to the step via
+    ``doc_offsets`` when a chunk of a larger corpus was processed: edge
+    ids are global (``doc_id_base + row``) while ``sig`` rows are
+    chunk-local, so the merge shifts edges back before verification.
+    All returned ids (uf labels, pairs) are chunk-local row indices;
+    add ``doc_id_base`` to map them back into the global corpus.
+
+    If any device overflowed a bucket or its edge buffer, prescreen
+    edges were lost on device; with ``overflow_fallback`` the merge
+    re-derives candidates on the host from the step's own signatures
+    (``BandMatrixSource`` over ``lsh.band_values``) and accumulates them
+    through the SAME engine into the same union-find, so no candidate
+    is silently dropped.
+    """
+    from repro.core.candidates import BandMatrixSource, ShardedEdgeSource
+    from repro.core.engine import cluster_source
+    from repro.core.verify import ShardedEdgeVerifier
+
+    sig = np.asarray(out["sig"])
+    num_docs = sig.shape[0] if num_docs is None else int(num_docs)
+    device_stats = np.asarray(out["stats"])
+    overflow = int(device_stats[:, 2].sum())
+
+    verifier = ShardedEdgeVerifier(sig[:num_docs], backend=backend,
+                                   batch_pairs=batch_pairs)
+    # Shift global edge ids back to chunk-local rows; ids outside
+    # [0, num_docs) after the shift (padding, INVALID slots, other
+    # chunks' docs) are dropped by the source's range filter.
+    edges = np.asarray(out["edges"]).astype(np.int64) - int(doc_id_base)
+    source = ShardedEdgeSource(edges,
+                               np.asarray(out["edge_mask"]),
+                               num_docs=num_docs,
+                               num_shards=device_stats.shape[0])
+    uf, stats, pairs = cluster_source(
+        source, verifier, cfg.edge_threshold, tree_threshold, batch=batch)
+
+    retried = False
+    if overflow > 0 and overflow_fallback:
+        retried = True
+        bands = np.asarray(
+            band_values(jnp.asarray(sig[:num_docs]), cfg.rows_per_band))
+        _, stats2, pairs2 = cluster_source(
+            BandMatrixSource(bands), verifier, cfg.edge_threshold,
+            tree_threshold, batch=batch, uf=uf)
+        stats.add(stats2)
+        merged = {(a, b): s for a, b, s in pairs}
+        merged.update({(a, b): s for a, b, s in pairs2})
+        pairs = [(a, b, s) for (a, b), s in sorted(merged.items())]
+
+    return ShardedClusterResult(
+        uf=uf, stats=stats, pairs=pairs, num_edges=source.num_edges,
+        overflow=overflow, retried=retried, device_stats=device_stats)

@@ -6,9 +6,11 @@ This is the single implementation of the paper's §6.5
 * host in-memory      — ``pipeline.DedupPipeline`` (``BandMatrixSource``)
 * out-of-core / streaming — ``streaming.StreamingDedup``
   (``StoreBandSource`` over a Design-1/2 band store)
-* sharded (shard_map) — ``dist_lsh`` keeps verification on-device inside
-  the all_to_all step; its host-side merge reuses this module's
-  union-find stage (see ROADMAP "Open items").
+* sharded (shard_map) — ``dist_lsh`` prescreens edges on-device with a
+  signature-prefix compare inside the all_to_all, then its host-side
+  merge drives this engine over a ``ShardedEdgeSource`` with a
+  full-signature ``ShardedEdgeVerifier`` (``dist_lsh.cluster_step_output``),
+  so thresholds and verify semantics match the other paths exactly.
 
 For each band the engine walks equal-value runs, path-compresses run
 members to their current union-find roots, and collects not-yet-evaluated
@@ -59,6 +61,16 @@ class ClusterStats:
             return 0.0
         return self.pairs_evaluated / self.verify_seconds
 
+    def add(self, other: "ClusterStats") -> "ClusterStats":
+        """Accumulate another pass's counters (multi-source clustering)."""
+        for f in (
+            "pairs_generated", "pairs_evaluated", "pairs_excluded",
+            "pairs_above_edge", "unions_done", "unions_rejected",
+            "verify_batches", "verify_seconds",
+        ):
+            setattr(self, f, getattr(self, f) + getattr(other, f))
+        return self
+
 
 def cluster_source(
     source: CandidateSource,
@@ -69,6 +81,7 @@ def cluster_source(
     use_disjoint_sets: bool = True,
     batch: str = "run",
     max_batch_pairs: int = 8192,
+    uf: ThresholdUnionFind | None = None,
 ) -> tuple[ThresholdUnionFind, ClusterStats, list[tuple[int, int, float]]]:
     """Run the staged engine over a candidate source.
 
@@ -79,6 +92,11 @@ def cluster_source(
 
     With ``use_disjoint_sets=False`` every candidate pair is evaluated
     (the paper's non-clustered baseline behind Table 5's "6388 pairs").
+
+    Passing an existing ``uf`` accumulates this source's clustering into
+    it instead of starting fresh — the retry path for the sharded step's
+    overflow fallback: docs already co-clustered by a previous pass are
+    excluded up front, only the remainder is re-verified.
     """
     if batch not in ("run", "band"):
         raise ValueError(f"unknown batch granularity {batch!r}")
@@ -87,7 +105,18 @@ def cluster_source(
     # run's batches/seconds even when the verifier instance is reused
     # (e.g. re-clustering at a second threshold).
     batches0, seconds0 = verifier.n_batches, verifier.seconds
-    uf = ThresholdUnionFind(source.num_docs, tree_threshold)
+    if uf is None:
+        uf = ThresholdUnionFind(source.num_docs, tree_threshold)
+    else:
+        if len(uf.parent) < source.num_docs:
+            raise ValueError(
+                f"existing uf covers {len(uf.parent)} docs, source has "
+                f"{source.num_docs}")
+        if uf.tree_threshold != tree_threshold:
+            raise ValueError(
+                f"tree_threshold {tree_threshold} does not match the "
+                f"existing uf's {uf.tree_threshold}; unions are guarded "
+                "by the uf's own threshold")
     stats = ClusterStats()
     evaluated: dict[tuple[int, int], float] = {}
     pending: list[tuple[int, int]] = []

@@ -14,8 +14,9 @@ Execution styles, all thin drivers over the staged engine
   selectable ``numpy`` / ``jnp`` / ``pallas`` backend).
 * ``StreamingDedup`` in ``core.streaming`` — out-of-core two-phase mode
   over a band store (``candidates.StoreBandSource``), same engine.
-* ``dedup_step`` in ``core.dist_lsh`` — fully on-device sharded step for
-  the production mesh (dry-run / roofline path).
+* ``dedup_step`` in ``core.dist_lsh`` — sharded step for the production
+  mesh: on-device candidate shuffle + prefix prescreen, then the host
+  merge (``dist_lsh.cluster_step_output``) drives this same engine.
 """
 from __future__ import annotations
 

@@ -20,6 +20,10 @@ SignatureVerifier    signature-agreement estimate m/M (paper §3.4) over
 ExactJaccardVerifier exact set Jaccard (paper §2.1) vectorized over
                      pre-sorted n-gram id arrays (merge-count, no
                      Python set ops on the hot path)
+ShardedEdgeVerifier  full-signature re-verify of the ``dist_lsh``
+                     prefix-prescreen survivors (stage 2 of the sharded
+                     path's two-stage verify); same estimator/backends
+                     as SignatureVerifier by construction
 CallbackVerifier     compat shim around a scalar ``fn(a, b) -> float``
 ===================  =====================================================
 
@@ -136,8 +140,7 @@ class SignatureVerifier(BatchVerifier):
         else:
             from repro.kernels import ops as kops
 
-            est = kops.pair_estimate(self._sig_dev[a_idx],
-                                     self._sig_dev[b_idx])
+            est = kops.indexed_pair_estimate(self._sig_dev, a_idx, b_idx)
         return np.asarray(est)[:p]
 
 
@@ -145,6 +148,39 @@ class SignatureVerifier(BatchVerifier):
 def _gather_estimate_jit(sig, a_idx, b_idx):
     """Fused gather + agreement estimate (one dispatch per bucket)."""
     return minhash.estimate_jaccard(sig[a_idx], sig[b_idx])
+
+
+class ShardedEdgeVerifier(SignatureVerifier):
+    """Stage 2 of the sharded path's two-stage verify (``dist_lsh``).
+
+    Stage 1 is the cheap on-device prescreen inside the all_to_all: each
+    band run compares only the exchanged ``verify_k``-prefix of the
+    signatures and keeps edges whose prefix estimate clears
+    ``edge_threshold - prescreen_margin``.  The surviving edges land in
+    per-device buffers; this verifier re-scores them on the host side
+    against the **full** (D, M) signature matrix using the exact same
+    estimator and backends (numpy / jnp / ``kernels.sigjaccard``) as the
+    host path's ``SignatureVerifier`` — so edge thresholds and estimate
+    semantics cannot drift between the sharded and host engines.
+
+    Build it from a dedup-step output with ``from_step_output`` (the step
+    returns the signatures it computed, keeping device and host views
+    bit-identical).
+    """
+
+    @classmethod
+    def from_step_output(cls, out, backend: str = "numpy",
+                         batch_pairs: int = 8192) -> "ShardedEdgeVerifier":
+        return cls(np.asarray(out["sig"]), backend=backend,
+                   batch_pairs=batch_pairs)
+
+    def drift_count(self, pairs: np.ndarray,
+                    reference: BatchVerifier) -> int:
+        """#pairs whose estimate differs from ``reference``'s (expect 0)."""
+        pairs = np.asarray(pairs).reshape(-1, 2)
+        if pairs.size == 0:
+            return 0
+        return int(np.sum(self(pairs) != reference(pairs)))
 
 
 class ExactJaccardVerifier(BatchVerifier):

@@ -22,15 +22,7 @@ def _sigjac_kernel(a_ref, b_ref, out_ref, *, m: int):
     out_ref[...] = jnp.sum(eq, axis=1) * (1.0 / m)
 
 
-@functools.partial(jax.jit, static_argnames=("tp", "interpret"))
-def pair_estimate(
-    sig_a: jnp.ndarray,
-    sig_b: jnp.ndarray,
-    *,
-    tp: int = TP,
-    interpret: bool | None = None,
-) -> jnp.ndarray:
-    """(P, M), (P, M) uint32 -> (P,) float32 agreement fraction."""
+def _estimate(sig_a, sig_b, tp: int, interpret: bool | None):
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     P, M = sig_a.shape
@@ -55,3 +47,33 @@ def pair_estimate(
         interpret=interpret,
     )(a, b)
     return out[:P]
+
+
+@functools.partial(jax.jit, static_argnames=("tp", "interpret"))
+def pair_estimate(
+    sig_a: jnp.ndarray,
+    sig_b: jnp.ndarray,
+    *,
+    tp: int = TP,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """(P, M), (P, M) uint32 -> (P,) float32 agreement fraction."""
+    return _estimate(sig_a, sig_b, tp, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("tp", "interpret"))
+def indexed_pair_estimate(
+    sig: jnp.ndarray,
+    a_idx: jnp.ndarray,
+    b_idx: jnp.ndarray,
+    *,
+    tp: int = TP,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Fused gather + pair estimate: one dispatch per index batch.
+
+    sig (D, M) uint32, a_idx/b_idx (P,) int -> (P,) float32.  The row
+    gather runs on device inside the same jit as the kernel, so
+    verifiers never materialize the gathered operands on the host.
+    """
+    return _estimate(sig[a_idx], sig[b_idx], tp, interpret)

@@ -64,7 +64,8 @@ def main(argv=None):
         verify_batch=args.batch)
 
     if args.sharded:
-        from repro.core import DistLSHConfig, docs_mesh, make_dedup_step
+        from repro.core import (DistLSHConfig, cluster_step_output,
+                                docs_mesh, make_dedup_step)
         from repro.core import minhash
         from repro.core.shingle import pack_documents, tokenize
 
@@ -81,11 +82,26 @@ def main(argv=None):
         out = step(jnp.asarray(packed.tokens), jnp.asarray(packed.lengths),
                    jnp.asarray(minhash.default_seeds(dcfg.num_hashes)))
         jax.block_until_ready(out["edges"])
-        dt = time.perf_counter() - t0
-        em = np.asarray(out["edge_mask"])
-        stats = np.asarray(out["stats"]).sum(axis=0)
-        print(f"sharded over {ndev} devices: {em.sum()} verified edges, "
-              f"{stats[1]} candidates, overflow={stats[2]}, {dt:.2f}s")
+        t_dev = time.perf_counter() - t0
+        # Host-side merge through the shared staged engine (stage-2
+        # full-signature verify; same semantics as the host path).
+        t0 = time.perf_counter()
+        res = cluster_step_output(
+            out, dcfg, tree_threshold=args.tree_threshold,
+            backend=cfg.resolved_backend(), batch=args.batch,
+            num_docs=len(notes))
+        t_merge = time.perf_counter() - t0
+        labels = res.labels()
+        n_dup = len(notes) - len(set(labels.tolist()))
+        dev_stats = res.device_stats.sum(axis=0)
+        print(f"sharded over {ndev} devices: {res.num_edges} prescreened "
+              f"edges ({dev_stats[1]} candidates, overflow={res.overflow}"
+              f"{', retried via host fallback' if res.retried else ''}), "
+              f"{n_dup} duplicates, "
+              f"{res.stats.pairs_evaluated} full-signature verifies in "
+              f"{res.stats.verify_batches} batches "
+              f"({res.stats.verify_pairs_per_second:.0f} pairs/s), "
+              f"device {t_dev:.2f}s merge {t_merge:.2f}s")
         return
 
     if args.streaming:

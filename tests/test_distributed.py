@@ -34,45 +34,155 @@ def test_dist_lsh_cross_shard_duplicates():
 
 
 @pytest.mark.slow
-def test_dist_lsh_matches_host_pipeline():
+def test_sharded_engine_matches_host_pipeline():
+    """Ported sharded path == host path on the shared engine.
+
+    dist_lsh prescreened edges + ShardedEdgeSource -> cluster_source
+    must produce the same clusters as DedupPipeline (estimate mode) on
+    the same corpus, with identical per-edge similarity estimates for
+    every pair both paths evaluate (both verify against the full
+    signature matrix with the same estimator).
+    """
     run_with_devices("""
-        import numpy as np, jax, jax.numpy as jnp, networkx as nx
-        from repro.core.dist_lsh import (DistLSHConfig, docs_mesh,
-                                         make_dedup_step)
+        from collections import defaultdict
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core.dist_lsh import (DistLSHConfig, cluster_step_output,
+                                         docs_mesh, make_dedup_step)
         from repro.core.pipeline import DedupConfig, DedupPipeline
         from repro.core import shingle, minhash
         from repro.data import make_i2b2_like, inject_near_duplicates
         # Clean similarity margin: near-exact dups (J >= ~0.93) vs
         # template notes (J <= ~0.8); threshold 0.88 sits in the gap so
-        # estimate-vs-exact verification cannot flip borderline pairs.
+        # the verify_k=32 prefix prescreen (recall margin 0.15) cannot
+        # drop a true edge.
         notes = make_i2b2_like(56, seed=0)
         notes, _ = inject_near_duplicates(notes, 8, frac_low=0.0,
                                           frac_high=0.005, seed=1)
-        host = DedupPipeline(DedupConfig(edge_threshold=0.88)).run(notes)
-        host_pairs = {(min(a, b), max(a, b))
-                      for a, b, s in host.pairs if s > 0.88}
+        host = DedupPipeline(DedupConfig(
+            edge_threshold=0.88, exact_verification=False,
+            verify_backend="numpy")).run(notes)
 
         token_lists = [shingle.tokenize(t) for t in notes]
         packed = shingle.pack_documents(token_lists)
+        # bucket_slack sized so no device bucket overflows: the pure
+        # sharded edge path (no host fallback) must match on its own.
         cfg = DistLSHConfig(edge_capacity=4096, edge_threshold=0.88,
-                            verify_k=100)
+                            bucket_slack=16.0)
         step = make_dedup_step(cfg, docs_mesh())
         out = step(jnp.asarray(packed.tokens),
                    jnp.asarray(packed.lengths),
                    jnp.asarray(minhash.default_seeds(cfg.num_hashes)))
-        em = np.asarray(out["edge_mask"])
-        edges = np.asarray(out["edges"])[em]
-        g = nx.Graph(); g.add_nodes_from(range(len(notes)))
-        g.add_edges_from(map(tuple, edges.tolist()))
-        gh = nx.Graph(); gh.add_nodes_from(range(len(notes)))
-        gh.add_edges_from(host_pairs)
-        comp_d = {frozenset(c) for c in nx.connected_components(g)
-                  if len(c) > 1}
-        comp_h = {frozenset(c) for c in nx.connected_components(gh)
-                  if len(c) > 1}
-        # star-edge candidate generation must recover the same clusters
-        assert comp_d == comp_h, (comp_d, comp_h)
-        print("dist==host ok")
+        # device and host signature matrices are bit-identical
+        assert np.array_equal(np.asarray(out["sig"]), host.signatures)
+        res = cluster_step_output(out, cfg, tree_threshold=0.40,
+                                  num_docs=len(notes),
+                                  overflow_fallback=False)
+        assert res.overflow == 0, res.overflow
+        assert res.num_edges > 0
+
+        # identical per-edge similarity estimates on shared pairs
+        host_sims = {(a, b): s for a, b, s in host.pairs}
+        shared = [(a, b, s) for a, b, s in res.pairs
+                  if (a, b) in host_sims]
+        assert shared, "paths must evaluate overlapping pairs"
+        assert all(s == host_sims[(a, b)] for a, b, s in shared)
+
+        def comps(labels):
+            d = defaultdict(list)
+            for i, l in enumerate(labels):
+                d[int(l)].append(i)
+            return {frozenset(v) for v in d.values() if len(v) >= 2}
+        assert comps(res.labels()) == comps(host.labels)
+        print("sharded engine == host ok")
+    """, n_devices=8)
+
+
+@pytest.mark.slow
+def test_dist_lsh_doc_offsets_chunked():
+    """Regression: chunked invocations must not alias global doc ids.
+
+    The historical ``dev * d_loc + arange(d_loc)`` assignment restarted
+    at 0 for every step invocation, so edges from a second corpus chunk
+    collided with chunk-one ids.  ``doc_offsets`` pins the global base.
+    """
+    run_with_devices("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core.dist_lsh import (DistLSHConfig, docs_mesh,
+                                         make_dedup_step)
+        from repro.core import shingle, minhash
+        rng = np.random.RandomState(0)
+        vocab = [f"t{i}" for i in range(300)]
+        docs = [list(rng.choice(vocab, size=48)) for _ in range(8)]
+        docs[7] = docs[0]          # duplicate pair inside chunk B
+        packed = shingle.pack_documents(docs)
+        cfg = DistLSHConfig(edge_capacity=256, edge_threshold=0.5,
+                            bucket_slack=16.0)
+        step = make_dedup_step(cfg, docs_mesh())
+        seeds = jnp.asarray(minhash.default_seeds(cfg.num_hashes))
+        args = (jnp.asarray(packed.tokens), jnp.asarray(packed.lengths),
+                seeds)
+        # Default offsets: contiguous row ids (the old behaviour).
+        out_a = step(*args)
+        em = np.asarray(out_a["edge_mask"])
+        ids_a = set(np.asarray(out_a["edges"])[em].flatten().tolist())
+        assert ids_a and max(ids_a) < 8, ids_a
+        # Chunk B of a larger corpus, global docs 16..23: every edge id
+        # must land in [16, 24) — the old scheme returned 0..7 and
+        # silently collided with chunk A.
+        out_b = step(*args,
+                     jnp.uint32(16) + jnp.arange(8, dtype=jnp.uint32))
+        em = np.asarray(out_b["edge_mask"])
+        ids_b = set(np.asarray(out_b["edges"])[em].flatten().tolist())
+        assert ids_b and all(16 <= i < 24 for i in ids_b), ids_b
+        assert {16, 23} <= ids_b   # the injected duplicate pair
+        # The host merge composes with offsets: doc_id_base shifts the
+        # global edge ids back onto the chunk-local signature rows.
+        from repro.core.dist_lsh import cluster_step_output
+        res = cluster_step_output(out_b, cfg, tree_threshold=0.4,
+                                  num_docs=8, doc_id_base=16)
+        assert res.num_edges > 0
+        labels = res.labels()
+        assert labels[0] == labels[7], labels   # global docs 16 and 23
+        print("doc offsets ok")
+    """, n_devices=8)
+
+
+@pytest.mark.slow
+def test_dist_lsh_overflow_retry_through_engine():
+    """Device buffer overflow falls back through the same engine.
+
+    With a tiny edge buffer the device step drops prescreened edges
+    (counted, never silent); cluster_step_output must detect the
+    overflow and recover the full clustering by re-deriving candidates
+    on the host from the step's own signatures.
+    """
+    run_with_devices("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core.dist_lsh import (DistLSHConfig, cluster_step_output,
+                                         docs_mesh, make_dedup_step)
+        from repro.core import shingle, minhash
+        rng = np.random.RandomState(1)
+        vocab = [f"t{i}" for i in range(300)]
+        docs = [list(rng.choice(vocab, size=48)) for _ in range(32)]
+        for i in range(1, 10):
+            docs[i] = docs[0]      # 10-way duplicate group
+        packed = shingle.pack_documents(docs)
+        cfg = DistLSHConfig(edge_capacity=2, edge_threshold=0.5,
+                            bucket_slack=16.0)
+        step = make_dedup_step(cfg, docs_mesh())
+        out = step(jnp.asarray(packed.tokens), jnp.asarray(packed.lengths),
+                   jnp.asarray(minhash.default_seeds(cfg.num_hashes)))
+        res = cluster_step_output(out, cfg, tree_threshold=0.4,
+                                  num_docs=32)
+        assert res.overflow > 0 and res.retried
+        labels = res.labels()
+        assert len({int(labels[i]) for i in range(10)}) == 1, labels[:10]
+        # without the fallback the dropped edges fragment the cluster
+        res_no = cluster_step_output(out, cfg, tree_threshold=0.4,
+                                     num_docs=32, overflow_fallback=False)
+        assert not res_no.retried
+        assert res_no.stats.unions_done <= res.stats.unions_done
+        print("overflow retry ok")
     """, n_devices=8)
 
 

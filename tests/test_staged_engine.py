@@ -5,7 +5,7 @@ import numpy as np
 from repro.core import jaccard, lsh, shingle
 from repro.core.bandstore import Design1Store, Design2Store
 from repro.core.candidates import (
-    BandMatrixSource, StoreBandSource, candidate_pairs,
+    BandMatrixSource, ShardedEdgeSource, StoreBandSource, candidate_pairs,
 )
 from repro.core.cluster import cluster_bands
 from repro.core.engine import cluster_source, merge_cluster_rounds
@@ -13,7 +13,8 @@ from repro.core.pipeline import DedupConfig, DedupPipeline, DedupResult
 from repro.core.streaming import StreamingDedup
 from repro.core.unionfind import ThresholdUnionFind
 from repro.core.verify import (
-    CallbackVerifier, ExactJaccardVerifier, SignatureVerifier,
+    CallbackVerifier, ExactJaccardVerifier, ShardedEdgeVerifier,
+    SignatureVerifier,
 )
 from repro.data import inject_near_duplicates, make_i2b2_like
 
@@ -181,6 +182,104 @@ def test_merge_cluster_rounds_batched_matches_scalar():
     assert m1 == m2
     np.testing.assert_array_equal(
         uf_scalar.components(), uf_batched.components())
+
+
+# -- sharded path layers (host-side units; device path in
+# tests/test_distributed.py) -----------------------------------------------
+
+def test_sharded_edge_source_pairs_mask_and_pad_filtering():
+    # Two device buffers of capacity 3 (num_shards=2): invalid slots,
+    # masked-out slots, and edges touching pad docs (id >= num_docs)
+    # must all be dropped.
+    inv = np.uint32(0xFFFFFFFF)
+    edges = np.array([
+        [0, 1], [2, 3], [inv, inv],     # device 0: two valid, one unused
+        [4, 9], [4, 5], [inv, inv],     # device 1: [4, 9] touches a pad
+    ], dtype=np.uint32)
+    mask = np.array([1, 1, 0, 1, 1, 0], dtype=bool)
+    src = ShardedEdgeSource(edges, mask, num_docs=8, num_shards=2)
+    assert src.num_docs == 8
+    assert src.num_bands == 2
+    assert src.num_edges == 3
+    np.testing.assert_array_equal(
+        candidate_pairs(src), [[0, 1], [2, 3], [4, 5]])
+    # every run is a two-member group
+    groups = [g.tolist() for br in src.iter_bands()
+              for g in br.iter_groups()]
+    assert groups == [[0, 1], [2, 3], [4, 5]]
+
+
+def test_sharded_edge_verifier_matches_host_estimator():
+    rng = np.random.RandomState(7)
+    sig = rng.randint(0, 50, size=(40, 100)).astype(np.uint32)
+    pairs = _random_pairs(rng, 40, 300)
+    host = SignatureVerifier(sig, backend="numpy")
+    oracle = host(pairs)
+    for backend in ("numpy", "jnp", "pallas"):
+        v = ShardedEdgeVerifier(sig, backend=backend, batch_pairs=128)
+        np.testing.assert_allclose(v(pairs), oracle, atol=1e-6,
+                                   err_msg=backend)
+        # bit-identical to the host verifier on the SAME backend (pallas
+        # multiplies by 1/M instead of dividing, so cross-backend
+        # estimates agree only to float tolerance)
+        assert v.drift_count(
+            pairs, SignatureVerifier(sig, backend=backend)) == 0
+    # from_step_output builds from the step's returned signatures
+    v = ShardedEdgeVerifier.from_step_output({"sig": sig})
+    np.testing.assert_allclose(v(pairs), oracle, atol=1e-6)
+
+
+def test_sharded_edges_through_engine_match_band_source():
+    # Star edges of every band run, fed through ShardedEdgeSource, must
+    # cluster identically to the host BandMatrixSource on the engine.
+    notes = _corpus()
+    pipe = DedupPipeline(DedupConfig())
+    sig = pipe.compute_signatures(pipe.tokenize(notes))
+    bands = pipe.compute_bands(sig)
+    uf_h, _, pairs_h = cluster_source(
+        BandMatrixSource(bands), SignatureVerifier(sig), 0.75, 0.40)
+    edges = []
+    for br in BandMatrixSource(bands).iter_bands():
+        for g in br.iter_groups():
+            edges += [(g[0], m) for m in g[1:]]   # member -> run head
+    src = ShardedEdgeSource(np.array(edges, dtype=np.int64),
+                            num_docs=len(notes))
+    uf_s, _, pairs_s = cluster_source(
+        src, ShardedEdgeVerifier(sig), 0.75, 0.40)
+    np.testing.assert_array_equal(uf_h.components(), uf_s.components())
+    sims_h = dict(((a, b), s) for a, b, s in pairs_h)
+    shared = [(a, b, s) for a, b, s in pairs_s if (a, b) in sims_h]
+    assert shared
+    assert all(s == sims_h[(a, b)] for a, b, s in shared)
+
+
+def test_cluster_source_accumulates_into_existing_uf():
+    # Overflow-retry shape: a partial edge source first, then the full
+    # band source into the SAME union-find recovers the full clustering.
+    notes = _corpus()
+    pipe = DedupPipeline(DedupConfig())
+    sig = pipe.compute_signatures(pipe.tokenize(notes))
+    bands = pipe.compute_bands(sig)
+    uf_full, _, _ = cluster_source(
+        BandMatrixSource(bands), SignatureVerifier(sig), 0.75, 0.40)
+
+    edges = []
+    for br in BandMatrixSource(bands).iter_bands():
+        for g in br.iter_groups():
+            edges += [(g[0], m) for m in g[1:]]
+    partial = ShardedEdgeSource(
+        np.array(edges[: len(edges) // 3], dtype=np.int64),
+        num_docs=len(notes))
+    verifier = SignatureVerifier(sig)
+    uf, st1, _ = cluster_source(partial, verifier, 0.75, 0.40)
+    uf2, st2, _ = cluster_source(
+        BandMatrixSource(bands), verifier, 0.75, 0.40, uf=uf)
+    assert uf2 is uf
+    np.testing.assert_array_equal(uf.components(), uf_full.components())
+    # the retry pass re-verifies at most what a fresh run would
+    _, st_fresh, _ = cluster_source(
+        BandMatrixSource(bands), SignatureVerifier(sig), 0.75, 0.40)
+    assert st2.pairs_evaluated <= st_fresh.pairs_evaluated
 
 
 # -- DedupResult.num_clusters (clusters of size >= 2) ----------------------
