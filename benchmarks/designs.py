@@ -176,7 +176,73 @@ def run_sharded(n_notes: int = 160, n_dups: int = 64):
          f"edges={len(res.pairs)}")
 
 
+def run_band_group_overlap(n_notes: int = 160, n_dups: int = 64,
+                           band_groups: int = 5):
+    """Band-group streaming: overlapped vs serialized host merge.
+
+    Serialized = block until every group's device shuffle has finished,
+    then run the host merge (the PR 2 end-of-step shape).  Overlapped =
+    start the merge immediately after dispatch; group g's buffers are
+    materialized only when the engine reaches them, so the merge of
+    group g runs while groups g+1.. are still shuffling on the device.
+    Cluster results must be identical either way.
+    """
+    import jax
+
+    from repro.core.dist_lsh import (
+        DistLSHConfig, cluster_step_output, docs_mesh,
+        make_streamed_dedup_step,
+    )
+
+    ndev = len(jax.devices())
+    section(f"band-group streamed merge overlap ({ndev} devices, "
+            f"G={band_groups})")
+    notes = make_i2b2_like(n_notes, seed=5)
+    notes, _ = inject_near_duplicates(notes, n_dups, frac_low=0.0,
+                                      frac_high=0.01, seed=6)
+    token_lists = [shingle.tokenize(t) for t in notes]
+    token_lists += [["pad"]] * ((-len(token_lists)) % ndev)
+    packed = shingle.pack_documents(token_lists)
+    dcfg = DistLSHConfig(edge_threshold=0.75, bucket_slack=16.0,
+                         band_groups=band_groups)
+    step = make_streamed_dedup_step(dcfg, docs_mesh())
+    args = (jnp.asarray(packed.tokens), jnp.asarray(packed.lengths),
+            jnp.asarray(minhash.default_seeds(dcfg.num_hashes)))
+
+    def block_groups(out):
+        jax.block_until_ready([g["edges"] for g in out["groups"]])
+
+    # Warm the compile caches so both timings measure steady state.
+    warm = step(*args)
+    block_groups(warm)
+    cluster_step_output(warm, dcfg, num_docs=len(notes))
+
+    t0 = time.perf_counter()
+    out = step(*args)
+    block_groups(out)
+    t_shuffle = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    res_serial = cluster_step_output(out, dcfg, num_docs=len(notes))
+    t_merge = time.perf_counter() - t0
+    t_serialized = t_shuffle + t_merge
+
+    t0 = time.perf_counter()
+    out = step(*args)
+    res_overlap = cluster_step_output(out, dcfg, num_docs=len(notes))
+    t_overlapped = time.perf_counter() - t0
+
+    assert np.array_equal(res_serial.labels(), res_overlap.labels())
+    assert res_serial.pairs == res_overlap.pairs
+    emit("band_group_merge_serialized", t_serialized * 1e6,
+         f"groups={band_groups};shuffle_us={t_shuffle*1e6:.0f};"
+         f"merge_us={t_merge*1e6:.0f}")
+    emit("band_group_merge_overlapped", t_overlapped * 1e6,
+         f"groups={band_groups};edges={res_overlap.num_edges};"
+         f"saved_us={(t_serialized-t_overlapped)*1e6:.0f}")
+
+
 if __name__ == "__main__":
     run()
     run_memory()
     run_sharded()
+    run_band_group_overlap()

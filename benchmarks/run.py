@@ -9,8 +9,11 @@ Prints ``name,us_per_call,derived`` CSV rows (the harness contract).
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def main(argv=None) -> None:
@@ -19,8 +22,10 @@ def main(argv=None) -> None:
                     help="comma-separated subset: accuracy,designs,"
                          "clustering,scale,kernels,roofline")
     ap.add_argument("--smoke", action="store_true",
-                    help="tiny-size CI smoke: sharded-vs-host parity + "
-                         "verify throughput only")
+                    help="tiny-size CI smoke: sharded-vs-host parity, "
+                         "verify throughput, band-group merge overlap; "
+                         "writes BENCH_smoke.json at the repo root "
+                         "unless --json overrides")
     ap.add_argument("--json", default=None,
                     help="also write emitted rows to this JSON file "
                          "(the BENCH_*.json perf-trajectory artifact)")
@@ -38,8 +43,11 @@ def main(argv=None) -> None:
         from benchmarks.common import write_json
 
         designs.run_sharded(n_notes=96, n_dups=32)
-        if args.json:
-            write_json(args.json)
+        designs.run_band_group_overlap(n_notes=96, n_dups=32)
+        # The smoke artifact is committed at the repo root so the perf
+        # trajectory accumulates in-tree, not only as a CI artifact.
+        write_json(args.json or os.path.join(REPO_ROOT,
+                                             "BENCH_smoke.json"))
         print(f"\n# benchmarks completed in {time.perf_counter()-t0:.1f}s")
         return
 

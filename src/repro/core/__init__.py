@@ -18,18 +18,21 @@ from repro.core.dist_lsh import (
     cluster_step_output,
     docs_mesh,
     make_dedup_step,
+    make_streamed_dedup_step,
 )
 from repro.core.candidates import (
     BandMatrixSource,
     CandidateSource,
+    EdgeStreamSource,
     ShardedEdgeSource,
     StoreBandSource,
     candidate_pairs,
 )
-from repro.core.engine import ClusterStats, cluster_source
+from repro.core.engine import ClusterAccumulator, ClusterStats, cluster_source
 from repro.core.verify import (
     BatchVerifier,
     CallbackVerifier,
+    DeviceScoredEdgeVerifier,
     ExactJaccardVerifier,
     ShardedEdgeVerifier,
     SignatureVerifier,
@@ -47,16 +50,20 @@ __all__ = [
     "ShardedClusterResult",
     "cluster_step_output",
     "make_dedup_step",
+    "make_streamed_dedup_step",
     "docs_mesh",
     "BandMatrixSource",
     "CandidateSource",
+    "EdgeStreamSource",
     "ShardedEdgeSource",
     "StoreBandSource",
     "candidate_pairs",
+    "ClusterAccumulator",
     "ClusterStats",
     "cluster_source",
     "BatchVerifier",
     "CallbackVerifier",
+    "DeviceScoredEdgeVerifier",
     "ExactJaccardVerifier",
     "ShardedEdgeVerifier",
     "SignatureVerifier",

@@ -57,6 +57,46 @@ class Design1Store:
         self.conn.commit()
 
 
+# Design-2 blob schema v2: explicit per-part doc ids travel inside the
+# blob (header magic + version + count, then int64 doc ids, then uint32
+# band values).  v1 blobs were the raw value array alone and doc ids
+# were *reconstructed* as arange(doc0, doc0 + d) — silently wrong for
+# any non-contiguous ingest (ragged chunks, resumed ingest with
+# doc_offsets-style global ids).
+_BLOB_MAGIC = np.uint32(0x42443253)   # "BD2S"
+_BLOB_VERSION = np.uint32(2)
+
+
+def _encode_part_v2(doc_ids: np.ndarray, vals: np.ndarray) -> bytes:
+    """Pack one (band, part) slice: header + int64 ids + uint32 values."""
+    d = len(doc_ids)
+    header = np.array([_BLOB_MAGIC, _BLOB_VERSION, d], dtype=np.uint32)
+    return (header.tobytes()
+            + np.ascontiguousarray(doc_ids, dtype=np.int64).tobytes()
+            + np.ascontiguousarray(vals, dtype=np.uint32).tobytes())
+
+
+def _decode_part(blob: bytes, doc0: int):
+    """Decode a part blob, accepting both schema versions.
+
+    v2 is self-describing (magic/version/count header); anything else is
+    a v1 raw value array whose doc ids are reconstructed from ``doc0``
+    (the legacy contiguous assumption — kept only so pre-existing stores
+    stay readable).
+    """
+    if len(blob) >= 12:
+        header = np.frombuffer(blob[:12], dtype=np.uint32)
+        d = int(header[2])
+        if (header[0] == _BLOB_MAGIC and header[1] == _BLOB_VERSION
+                and len(blob) == 12 + d * 8 + d * 8):
+            docs = np.frombuffer(blob[12 : 12 + d * 8], dtype=np.int64)
+            vals = np.frombuffer(blob[12 + d * 8 :],
+                                 dtype=np.uint32).reshape(d, 2)
+            return docs, vals
+    vals = np.frombuffer(blob, dtype=np.uint32).reshape(-1, 2)
+    return np.arange(doc0, doc0 + len(vals), dtype=np.int64), vals
+
+
 class Design2Store:
     """One database row per (band, band_part) slice of d documents."""
 
@@ -81,13 +121,14 @@ class Design2Store:
         if not self._buffer:
             return
         doc0 = self._buffer[0][0]
+        doc_ids = np.array([d for d, _ in self._buffer], dtype=np.int64)
         stack = np.stack([b for _, b in self._buffer])   # (d, b, 2)
         b = stack.shape[1]
         rows = []
         for j in range(b):
-            blob = stack[:, j, :].tobytes()
+            blob = _encode_part_v2(doc_ids, stack[:, j, :])
             rows.append((j, self._next_part, doc0, blob))
-            self.write_bytes += 8 + len(blob)   # 32+32 bits + values
+            self.write_bytes += 8 + len(blob)   # 32+32 bits + blob
         self.conn.executemany(
             "INSERT OR REPLACE INTO band2 VALUES (?,?,?,?)", rows)
         self.n_writes += len(rows)
@@ -101,9 +142,9 @@ class Design2Store:
             "ORDER BY part_id", (int(band_id),))
         docs, vals = [], []
         for part_id, doc0, blob in cur.fetchall():
-            arr = np.frombuffer(blob, dtype=np.uint32).reshape(-1, 2)
-            docs.append(np.arange(doc0, doc0 + len(arr), dtype=np.int64))
-            vals.append(arr)
+            d, v = _decode_part(blob, doc0)
+            docs.append(d)
+            vals.append(v)
         if not docs:
             return (np.zeros(0, np.int64), np.zeros((0, 2), np.uint32))
         return np.concatenate(docs), np.concatenate(vals)

@@ -23,6 +23,9 @@ differ in where the band values come from:
   ``dist_lsh`` all_to_all step emits; each surviving edge is a
   two-member run, so the host-side merge of the sharded path drives the
   very same engine.
+* ``EdgeStreamSource`` — the streaming variant over the band-group
+  buffers of the streamed step: each group's buffer is materialized
+  lazily so the host merge overlaps the device shuffle of later groups.
 
 The engine in ``engine.py`` drives any source through batched
 verification; ``candidate_pairs`` below is the source-agnostic
@@ -183,6 +186,24 @@ class ShardedEdgeSource:
             e = e[(e >= 0).all(axis=-1) & (e < self._num_docs).all(axis=-1)]
             self._shards.append(e)
 
+    @classmethod
+    def from_device_buffers(cls, edges, edge_mask=None, *, num_docs: int,
+                            num_shards: int = 1,
+                            edge_offset: int = 0) -> "ShardedEdgeSource":
+        """Materialize device edge buffers into a source.
+
+        ``np.asarray`` blocks on the buffers' device computation (and
+        nothing else — later band-groups keep shuffling); ``edge_offset``
+        shifts global ids back to chunk-local rows (the ``doc_id_base``
+        convention).  This is the single home of that conversion, shared
+        by the streamed host merge and ``EdgeStreamSource``.
+        """
+        edges = np.asarray(edges).astype(np.int64) - int(edge_offset)
+        if edge_mask is not None:
+            edge_mask = np.asarray(edge_mask)
+        return cls(edges, edge_mask, num_docs=num_docs,
+                   num_shards=num_shards)
+
     @property
     def num_docs(self) -> int:
         return self._num_docs
@@ -209,6 +230,56 @@ class ShardedEdgeSource:
                            run_starts=starts, run_ends=starts + 2)
 
 
+class EdgeStreamSource:
+    """Streaming variant of ``ShardedEdgeSource`` over per-group buffers.
+
+    The band-group streamed ``dist_lsh`` step emits one (edges, mask)
+    buffer per band-group, each still resident on the device when the
+    host merge starts.  This source materializes group g's buffer only
+    when the engine reaches it — ``np.asarray`` blocks on *that group's*
+    computation alone, so (JAX dispatch being asynchronous) the host
+    merge of group g overlaps the device shuffle of groups g+1..G-1.
+
+    ``groups`` is an iterable of ``(edges, mask)`` tuples (device or
+    host arrays; mask may be None).  ``edge_offset`` is subtracted from
+    edge ids before the range filter — the ``doc_id_base`` shift of
+    chunked corpora.  ``on_group(g, edges, mask)`` runs right after
+    group g is materialized (before its edges are fed), which is where
+    the device-resident stage 2 registers its pre-computed scores.
+    """
+
+    def __init__(self, groups, *, num_docs: int, num_shards: int = 1,
+                 edge_offset: int = 0, on_group=None):
+        self._groups = groups
+        self._num_docs = int(num_docs)
+        self._num_shards = int(num_shards)
+        self._edge_offset = int(edge_offset)
+        self._on_group = on_group
+        self.num_edges = 0
+        self.groups_consumed = 0
+
+    @property
+    def num_docs(self) -> int:
+        return self._num_docs
+
+    @property
+    def num_bands(self) -> int:
+        """#BandRuns yielded so far (groups consumed x device shards)."""
+        return self.groups_consumed * self._num_shards
+
+    def iter_bands(self) -> Iterator[BandRuns]:
+        for g, (edges, mask) in enumerate(self._groups):
+            src = ShardedEdgeSource.from_device_buffers(
+                edges, mask, num_docs=self._num_docs,
+                num_shards=self._num_shards,
+                edge_offset=self._edge_offset)   # blocks on group g only
+            if self._on_group is not None:
+                self._on_group(g, edges, mask)
+            self.num_edges += src.num_edges
+            self.groups_consumed += 1
+            yield from src.iter_bands()
+
+
 # ---------------------------------------------------------------------------
 # Pair enumeration (paper-faithful all-pairs within runs)
 # ---------------------------------------------------------------------------
@@ -220,9 +291,12 @@ def pairs_in_runs(
 ) -> np.ndarray:
     """All-pairs within equal runs of one sorted band (O(run^2)).
 
-    Returns (P, 2) int32 candidate pairs with a < b by doc id; bounded
+    Returns (P, 2) int64 candidate pairs with a < b by doc id; bounded
     by ``max_pairs`` when given.  This is the enumeration behind
-    ``lsh.enumerate_pairs_in_runs`` and the store-backed path.
+    ``lsh.enumerate_pairs_in_runs`` and the store-backed path.  Doc ids
+    stay int64 end-to-end: chunked corpora assign global ids via
+    ``doc_offsets`` and can exceed 2^31, which the historical int32
+    downcast silently wrapped.
     """
     starts, ends = run_boundaries(np.asarray(sorted_vals))
     pairs = []
@@ -231,7 +305,7 @@ def pairs_in_runs(
         k = e - s
         if k < 2:
             continue
-        docs = np.sort(sorted_docs[s:e])
+        docs = np.sort(np.asarray(sorted_docs[s:e], dtype=np.int64))
         ii, jj = np.triu_indices(k, k=1)
         p = np.stack([docs[ii], docs[jj]], axis=-1)
         pairs.append(p)
@@ -239,8 +313,8 @@ def pairs_in_runs(
         if max_pairs is not None and total >= max_pairs:
             break
     if not pairs:
-        return np.zeros((0, 2), dtype=np.int32)
-    out = np.concatenate(pairs).astype(np.int32)
+        return np.zeros((0, 2), dtype=np.int64)
+    out = np.concatenate(pairs)
     return out[:max_pairs] if max_pairs is not None else out
 
 
@@ -249,9 +323,10 @@ def candidate_pairs(
 ) -> np.ndarray:
     """All candidate pairs of a source, deduplicated across bands.
 
-    Returns a sorted (P, 2) int32 array — the source-agnostic
+    Returns a sorted (P, 2) int64 array — the source-agnostic
     replacement for ``lsh.all_candidate_pairs`` and
-    ``bandstore.candidate_pairs_from_store``.
+    ``bandstore.candidate_pairs_from_store`` (int64 so global doc ids
+    >= 2^31 from chunked ``doc_offsets`` corpora survive).
     """
     seen: set[tuple[int, int]] = set()
     for br in source.iter_bands():
@@ -259,5 +334,5 @@ def candidate_pairs(
                               max_pairs_per_band)
         seen.update(map(tuple, pairs.tolist()))
     if not seen:
-        return np.zeros((0, 2), dtype=np.int32)
-    return np.array(sorted(seen), dtype=np.int32)
+        return np.zeros((0, 2), dtype=np.int64)
+    return np.array(sorted(seen), dtype=np.int64)

@@ -18,15 +18,29 @@ Maps the paper's database designs onto a TPU pod (DESIGN.md §2):
      statically-shaped per-device edge buffers.  The margin keeps the
      prescreen high-recall: a k-row prefix is a noisy estimate of the
      full M-row agreement, so the final thresholding is NOT done here.
-  2. *Batched full-signature verify on the host merge*: the step also
-     returns the full (D, M) signature matrix it computed, and
-     ``cluster_step_output`` drives the surviving edges through the
-     shared staged engine — ``candidates.ShardedEdgeSource`` ->
-     ``verify.ShardedEdgeVerifier`` (numpy / jnp /
-     ``kernels.sigjaccard`` backends) -> ``engine.cluster_source`` ->
-     ``ThresholdUnionFind`` — the exact same estimator, thresholds,
-     exclusion stats, and union-find semantics as the host and
-     streaming paths.
+  2. *Batched full-signature verify on the merge*: either on the host
+     (``stage2="host"``: ``cluster_step_output`` drives the surviving
+     edges through the shared staged engine —
+     ``candidates.ShardedEdgeSource`` -> ``verify.ShardedEdgeVerifier``
+     (numpy / jnp / ``kernels.sigjaccard`` backends) ->
+     ``engine.cluster_source`` -> ``ThresholdUnionFind``) or resident
+     on the accelerator (``stage2="device"``: the
+     ``kernels.sigjaccard.masked_indexed_pair_estimate`` fused gather +
+     full-M-estimate kernel runs under the same shard_map over each
+     device's own signature shard, so same-shard edges arrive at the
+     merge already fully scored and ``verify.DeviceScoredEdgeVerifier``
+     is a pass-through that re-scores only cross-shard stragglers).
+     Thresholds, estimator semantics, exclusion stats, and union-find
+     semantics are identical to the host and streaming paths either way.
+
+**Band-group streaming** (DESIGN.md §3): the step's b bands are split
+into ``band_groups`` groups of b/G bands, each emitting its *own*
+bounded per-device edge buffer + overflow counter instead of one
+end-of-step gather.  ``make_streamed_dedup_step`` dispatches every
+group's shuffle asynchronously and ``cluster_step_output`` consumes the
+buffers as a stream (``engine.ClusterAccumulator``): the host merge of
+group g materializes only group g's buffer, so it overlaps the device
+shuffle of groups g+1..G-1.
 
 Everything is static-shape: buckets and edge buffers have fixed capacity
 with overflow *counted* (never silently dropped) — when any device
@@ -41,7 +55,7 @@ collision-free ids across multiple step invocations.
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 import numpy as np
 import jax
@@ -57,6 +71,8 @@ from repro.core.shingle import ngram_hashes
 
 INVALID = jnp.uint32(U32_MAX)
 
+STAGE2_MODES = ("host", "device")
+
 
 @dataclass(frozen=True)
 class DistLSHConfig:
@@ -67,8 +83,10 @@ class DistLSHConfig:
     edge_threshold: float = 0.75
     prescreen_margin: float = 0.15  # stage-1 keeps est >= edge_t - margin
     bucket_slack: float = 2.0   # capacity = slack * D_local / n_dev
-    edge_capacity: int = 4096   # prescreened-edge buffer per device
+    edge_capacity: int = 4096   # prescreened-edge buffer per device/group
     m_chunk: int = 16
+    band_groups: int = 1        # G bounded buffers of b/G bands each
+    stage2: str = "host"        # full-signature verify: "host" | "device"
 
     @property
     def num_bands(self) -> int:
@@ -78,6 +96,14 @@ class DistLSHConfig:
     def prescreen_threshold(self) -> float:
         """Stage-1 on-device prefix-prescreen keep threshold."""
         return max(0.0, self.edge_threshold - self.prescreen_margin)
+
+    @property
+    def bands_per_group(self) -> int:
+        if self.num_bands % self.band_groups != 0:
+            raise ValueError(
+                f"band_groups={self.band_groups} does not divide "
+                f"num_bands={self.num_bands}")
+        return self.num_bands // self.band_groups
 
 
 def docs_mesh(devices=None) -> Mesh:
@@ -119,8 +145,8 @@ def _band_exchange_and_edges(band_hi, band_lo, doc_ids, sig_k, cfg,
     Returns (edges (n_dev*cap, 2) uint32, prefix ests (n_dev*cap,) f32,
              edge_mask, n_candidates, overflow).  ``edge_mask`` marks
     stage-1 survivors (prefix estimate >= prescreen threshold); the
-    final ``edge_threshold`` decision happens in stage 2 on the host
-    merge with full signatures (``cluster_step_output``).
+    final ``edge_threshold`` decision happens in stage 2 with full
+    signatures (device-resident or on the host merge).
     """
     k = cfg.verify_k
     shift = 32 - max(1, int(np.log2(n_dev))) if n_dev > 1 else 32
@@ -159,13 +185,66 @@ def _band_exchange_and_edges(band_hi, band_lo, doc_ids, sig_k, cfg,
     return edges, est, edge_mask, jnp.sum(cand_mask), overflow
 
 
-def make_dedup_step(cfg: DistLSHConfig, mesh: Mesh):
-    """Build the jit-able sharded dedup step for ``mesh`` ('docs' axis).
+def _prescreen_scan(bands_g, doc_ids, sig_k, cfg, axis: str,
+                    n_dev: int, cap: int):
+    """Scan one band-group's bands into a bounded per-device edge buffer.
+
+    bands_g: (D_loc, bg, 2) local band slice.  Returns
+    (buf (e_cap, 2), buf_sim (e_cap,), emask (e_cap,), stats (1, 3))
+    where stats rows are [edge_count, candidates, overflow].
+    """
+    e_cap = cfg.edge_capacity
+    bg = bands_g.shape[1]
+
+    def per_band(carry, j):
+        buf, buf_sim, count, tot_cand, tot_ovf = carry
+        edges, est, emask, n_cand, ovf = _band_exchange_and_edges(
+            bands_g[:, j, 0], bands_g[:, j, 1], doc_ids, sig_k,
+            cfg, axis, n_dev, cap)
+        # Append masked edges into the fixed buffer.
+        offs = jnp.cumsum(emask.astype(jnp.int32)) - 1
+        dst = jnp.where(emask, count + offs, e_cap)  # OOB drop
+        buf = buf.at[dst].set(edges, mode="drop")
+        buf_sim = buf_sim.at[dst].set(est, mode="drop")
+        new_count = jnp.minimum(count + jnp.sum(emask), e_cap)
+        dropped = count + jnp.sum(emask) - new_count
+        return (buf, buf_sim, new_count, tot_cand + n_cand,
+                tot_ovf + ovf + dropped), None
+
+    buf0 = jnp.full((e_cap, 2), INVALID, dtype=jnp.uint32)
+    sim0 = jnp.zeros((e_cap,), dtype=jnp.float32)
+    (buf, buf_sim, count, n_cand, ovf), _ = jax.lax.scan(
+        per_band, (buf0, sim0, jnp.int32(0), jnp.int32(0), jnp.int32(0)),
+        jnp.arange(bg))
+    emask = jnp.arange(e_cap) < count
+    stats = jnp.stack([count, n_cand, ovf]).astype(jnp.int32)[None]
+    return buf, buf_sim, emask, stats
+
+
+def make_streamed_dedup_step(cfg: DistLSHConfig, mesh: Mesh, *,
+                             stage2: str | None = None):
+    """Build the band-group streamed sharded dedup step for ``mesh``.
 
     Signature: (tokens (D, L) uint32, lengths (D,) int32, seeds (M,),
                 doc_offsets (n_dev,) uint32 | None)
-      -> dict(edges (n_dev*E_cap, 2), prescreen_sims, edge_mask,
-              sig (D, M), stats (n_dev, 3))
+      -> dict(sig (D, M), stage2,
+              groups=[dict(edges (n_dev*E_cap, 2), prescreen_sims,
+                           edge_mask, stats (n_dev, 3), band_start,
+                           [device_sims, device_covered]), ...])
+
+    Every group's shuffle is dispatched before the function returns
+    (JAX async dispatch): converting group g's buffers to numpy blocks
+    on group g alone, which is how ``cluster_step_output`` overlaps the
+    host merge of group g with the device shuffle of group g+1.
+
+    With ``stage2="device"`` each group additionally carries
+    ``device_sims``/``device_covered``: full-M agreement estimates
+    computed on the accelerator by the ``kernels.sigjaccard`` fused
+    gather+estimate kernel under shard_map — each device scores the
+    gathered group edges whose two endpoints fall in its own signature
+    shard and a psum combines the disjoint contributions.  Cross-shard
+    edges stay uncovered and are re-scored on the host
+    (``verify.DeviceScoredEdgeVerifier`` stragglers).
 
     ``doc_offsets[i]`` is the global doc id of device i's first row;
     it defaults to the contiguous row offsets ``i * D_loc``.  Callers
@@ -174,67 +253,134 @@ def make_dedup_step(cfg: DistLSHConfig, mesh: Mesh):
     ``dev * d_loc + arange(d_loc)`` assignment restarted at 0 for every
     chunk and silently aliased distinct documents in the merged edges).
     """
+    stage2 = cfg.stage2 if stage2 is None else stage2
+    if stage2 not in STAGE2_MODES:
+        raise ValueError(f"unknown stage2 mode {stage2!r}")
     n_dev = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
     axis = mesh.axis_names[0]
+    G = cfg.band_groups
+    bg = cfg.bands_per_group
 
-    def local_step(tokens, lengths, seeds, doc_offset):
-        # tokens: (D_loc, L) local shard; doc_offset: (1,) global base id.
-        d_loc = tokens.shape[0]
-        cap = max(1, int(np.ceil(cfg.bucket_slack * d_loc / n_dev)))
+    def local_prepare(tokens, lengths, seeds):
         ng, valid = ngram_hashes(tokens, lengths, n=cfg.ngram)
         sig = signatures(ng, valid, seeds, m_chunk=cfg.m_chunk)
         bands = band_values(sig, cfg.rows_per_band)  # (D_loc, b, 2)
+        return sig, bands
+
+    prepare = jax.jit(shard_map_compat(
+        local_prepare,
+        mesh=mesh,
+        in_specs=(P(axis), P(axis), P()),
+        out_specs=(P(axis), P(axis)),
+        check_replication=False,
+    ))
+
+    def local_group(bands_g, sig, doc_offset):
+        # bands_g: (D_loc, bg, 2); sig: (D_loc, M); doc_offset: (1,).
+        d_loc = sig.shape[0]
+        cap = max(1, int(np.ceil(cfg.bucket_slack * d_loc / n_dev)))
         doc_ids = doc_offset[0].astype(jnp.uint32) + jnp.arange(
             d_loc, dtype=jnp.uint32)
         sig_k = sig[:, : cfg.verify_k]
+        buf, buf_sim, emask, stats = _prescreen_scan(
+            bands_g, doc_ids, sig_k, cfg, axis, n_dev, cap)
+        if stage2 != "device":
+            return buf, buf_sim, emask, stats
+        # Device-resident stage 2: gather the group's edge buffers from
+        # every device, score the edges whose two endpoints live in THIS
+        # device's signature shard with the fused full-M kernel, and
+        # psum the disjoint masked contributions into a replicated
+        # (n_dev * e_cap,) vector (ordering matches the P(axis) gather
+        # of the buffers themselves).  The kernel emits exact agreement
+        # *counts*; the /M division happens on the host merge in numpy
+        # so the scores are bit-identical to the host estimator.
+        from repro.kernels import sigjaccard
 
-        e_cap = cfg.edge_capacity
+        all_edges = jax.lax.all_gather(buf, axis, axis=0, tiled=False)
+        all_emask = jax.lax.all_gather(emask, axis, axis=0, tiled=False)
+        # int32 wraparound arithmetic is exact mod 2^32, so the shard
+        # range test below is correct over the full uint32 id space
+        # (INVALID slots are masked out via the edge mask).
+        flat = all_edges.reshape(-1, 2).astype(jnp.int32)
+        off = doc_offset[0].astype(jnp.int32)
+        a_loc = flat[:, 0] - off
+        b_loc = flat[:, 1] - off
+        local = (all_emask.reshape(-1)
+                 & (a_loc >= 0) & (a_loc < d_loc)
+                 & (b_loc >= 0) & (b_loc < d_loc))
+        counts = sigjaccard.masked_indexed_pair_counts(
+            sig, a_loc, b_loc, local)
+        dev_counts = jax.lax.psum(counts, axis)
+        dev_cov = jax.lax.psum(local.astype(jnp.int32), axis) > 0
+        return buf, buf_sim, emask, stats, dev_counts, dev_cov
 
-        def per_band(carry, j):
-            buf, buf_sim, count, tot_cand, tot_ovf = carry
-            edges, est, emask, n_cand, ovf = _band_exchange_and_edges(
-                bands[:, j, 0], bands[:, j, 1], doc_ids, sig_k,
-                cfg, axis, n_dev, cap)
-            # Append masked edges into the fixed buffer.
-            offs = jnp.cumsum(emask.astype(jnp.int32)) - 1
-            dst = jnp.where(emask, count + offs, e_cap)  # OOB drop
-            buf = buf.at[dst].set(edges, mode="drop")
-            buf_sim = buf_sim.at[dst].set(est, mode="drop")
-            new_count = jnp.minimum(count + jnp.sum(emask), e_cap)
-            dropped = count + jnp.sum(emask) - new_count
-            return (buf, buf_sim, new_count, tot_cand + n_cand,
-                    tot_ovf + ovf + dropped), None
-
-        buf0 = jnp.full((e_cap, 2), INVALID, dtype=jnp.uint32)
-        sim0 = jnp.zeros((e_cap,), dtype=jnp.float32)
-        (buf, buf_sim, count, n_cand, ovf), _ = jax.lax.scan(
-            per_band, (buf0, sim0, jnp.int32(0), jnp.int32(0),
-                       jnp.int32(0)),
-            jnp.arange(cfg.num_bands))
-        emask = jnp.arange(e_cap) < count
-        stats = jnp.stack(
-            [count, n_cand, ovf]).astype(jnp.int32)[None]  # (1, 3)
-        return buf, buf_sim, emask, sig, stats
-
-    sharded = shard_map_compat(
-        local_step,
+    group_out_specs = (P(axis), P(axis), P(axis), P(axis))
+    if stage2 == "device":
+        group_out_specs = group_out_specs + (P(), P())
+    group_step = jax.jit(shard_map_compat(
+        local_group,
         mesh=mesh,
-        in_specs=(P(axis), P(axis), P(), P(axis)),
-        out_specs=(P(axis), P(axis), P(axis), P(axis), P(axis)),
+        in_specs=(P(axis), P(axis), P(axis)),
+        out_specs=group_out_specs,
         check_replication=False,
-    )
+    ))
 
-    @jax.jit
-    def dedup_step(tokens, lengths, seeds, doc_offsets=None):
+    def step(tokens, lengths, seeds, doc_offsets=None):
+        tokens = jnp.asarray(tokens)
         if doc_offsets is None:
             d_loc = tokens.shape[0] // n_dev
             doc_offsets = jnp.uint32(d_loc) * jnp.arange(
                 n_dev, dtype=jnp.uint32)
-        edges, sims, emask, sig, stats = sharded(
-            tokens, lengths, seeds, doc_offsets.astype(jnp.uint32))
+        doc_offsets = jnp.asarray(doc_offsets).astype(jnp.uint32)
+        sig, bands = prepare(tokens, jnp.asarray(lengths),
+                             jnp.asarray(seeds))
+        groups = []
+        for g in range(G):
+            bands_g = jax.lax.slice_in_dim(bands, g * bg, (g + 1) * bg,
+                                           axis=1)
+            outs = group_step(bands_g, sig, doc_offsets)
+            gout = {
+                "edges": outs[0], "prescreen_sims": outs[1],
+                "edge_mask": outs[2], "stats": outs[3],
+                "band_start": g * bg,
+            }
+            if stage2 == "device":
+                gout["device_match_counts"] = outs[4]
+                gout["device_covered"] = outs[5]
+            groups.append(gout)
+        return {"sig": sig, "groups": groups, "stage2": stage2}
+
+    return step
+
+
+def make_dedup_step(cfg: DistLSHConfig, mesh: Mesh):
+    """Build the jit-able sharded dedup step for ``mesh`` ('docs' axis).
+
+    Signature: (tokens (D, L) uint32, lengths (D,) int32, seeds (M,),
+                doc_offsets (n_dev,) uint32 | None)
+      -> dict(edges (G*n_dev*E_cap, 2), prescreen_sims, edge_mask,
+              sig (D, M), stats (G*n_dev, 3))
+
+    This is the end-of-step view over the band-group machinery: the
+    per-group bounded buffers (G = ``cfg.band_groups``, default 1) are
+    concatenated into one edge array whose shard rows are the (group,
+    device) buffers in group-major order.  Use
+    ``make_streamed_dedup_step`` to consume the groups as a stream
+    (overlapped host merge) or for the device-resident stage 2.
+    """
+    streamed = make_streamed_dedup_step(cfg, mesh, stage2="host")
+
+    @jax.jit
+    def dedup_step(tokens, lengths, seeds, doc_offsets=None):
+        out = streamed(tokens, lengths, seeds, doc_offsets)
+        gs = out["groups"]
         return {
-            "edges": edges, "prescreen_sims": sims, "edge_mask": emask,
-            "sig": sig, "stats": stats,
+            "edges": jnp.concatenate([g["edges"] for g in gs]),
+            "prescreen_sims": jnp.concatenate(
+                [g["prescreen_sims"] for g in gs]),
+            "edge_mask": jnp.concatenate([g["edge_mask"] for g in gs]),
+            "sig": out["sig"],
+            "stats": jnp.concatenate([g["stats"] for g in gs]),
         }
 
     return dedup_step
@@ -264,6 +410,9 @@ class ShardedClusterResult:
     overflow: int           # device bucket/edge-buffer overflow count
     retried: bool           # True when the overflow fallback pass ran
     device_stats: np.ndarray  # (n_dev, 3) [edge_count, candidates, ovf]
+    group_stats: list = field(default_factory=list)  # per-band-group
+    device_scored: int = 0  # stage-2 pairs served from device scores
+    host_rescored: int = 0  # stage-2 pairs re-scored on the host
 
     def labels(self) -> np.ndarray:
         return self.uf.components()
@@ -283,12 +432,23 @@ def cluster_step_output(
 ) -> ShardedClusterResult:
     """Stage 2 of the sharded path: batched full-signature verify + merge.
 
-    Drives the step's prescreened per-device edge buffers through the
-    shared staged engine — ``ShardedEdgeSource`` ->
-    ``ShardedEdgeVerifier`` (full (D, M) signatures, same
-    numpy/jnp/pallas backends as the host path) ->
+    Accepts either the end-of-step output of ``make_dedup_step`` or the
+    band-group stream of ``make_streamed_dedup_step`` (a ``"groups"``
+    key).  In stream mode each group's buffers are materialized only
+    when the engine reaches them and fed incrementally through one
+    ``engine.ClusterAccumulator`` — the host merge of group g overlaps
+    the device shuffle of group g+1, and a pair verified for group g is
+    excluded (never re-verified) when group g+1 emits it again.
+
+    Drives the prescreened edges through the shared staged engine —
+    ``ShardedEdgeSource`` -> ``ShardedEdgeVerifier`` (full (D, M)
+    signatures, same numpy/jnp/pallas backends as the host path) ->
     ``engine.cluster_source`` — so edge thresholds, estimator semantics,
-    and exclusion stats are identical to ``DedupPipeline``.
+    and exclusion stats are identical to ``DedupPipeline``.  For
+    ``stage2="device"`` step outputs the verifier is a
+    ``DeviceScoredEdgeVerifier``: same-shard edges were already scored
+    on the accelerator and pass straight through; only cross-shard
+    stragglers (and post-union root pairs) hit the host estimator.
 
     ``num_docs`` bounds real documents: edges touching padding rows
     (appended for divisibility by the device count) are dropped.
@@ -308,40 +468,74 @@ def cluster_step_output(
     is silently dropped.
     """
     from repro.core.candidates import BandMatrixSource, ShardedEdgeSource
-    from repro.core.engine import cluster_source
-    from repro.core.verify import ShardedEdgeVerifier
+    from repro.core.engine import ClusterAccumulator
+    from repro.core.verify import (DeviceScoredEdgeVerifier,
+                                   ShardedEdgeVerifier)
 
     sig = np.asarray(out["sig"])
     num_docs = sig.shape[0] if num_docs is None else int(num_docs)
-    device_stats = np.asarray(out["stats"])
-    overflow = int(device_stats[:, 2].sum())
 
-    verifier = ShardedEdgeVerifier(sig[:num_docs], backend=backend,
-                                   batch_pairs=batch_pairs)
-    # Shift global edge ids back to chunk-local rows; ids outside
-    # [0, num_docs) after the shift (padding, INVALID slots, other
-    # chunks' docs) are dropped by the source's range filter.
-    edges = np.asarray(out["edges"]).astype(np.int64) - int(doc_id_base)
-    source = ShardedEdgeSource(edges,
-                               np.asarray(out["edge_mask"]),
-                               num_docs=num_docs,
-                               num_shards=device_stats.shape[0])
-    uf, stats, pairs = cluster_source(
-        source, verifier, cfg.edge_threshold, tree_threshold, batch=batch)
+    groups = out.get("groups")
+    if groups is None:
+        # End-of-step view: one (G*n_dev, 3) stats array whose rows are
+        # the (group, device) buffers; treat it as a single group.
+        groups = [out]
+    device_scored = out.get("stage2") == "device"
+
+    if device_scored:
+        verifier = DeviceScoredEdgeVerifier(
+            sig[:num_docs], backend=backend, batch_pairs=batch_pairs)
+    else:
+        verifier = ShardedEdgeVerifier(
+            sig[:num_docs], backend=backend, batch_pairs=batch_pairs)
+    acc = ClusterAccumulator(
+        num_docs, verifier, cfg.edge_threshold, tree_threshold,
+        batch=batch)
+
+    num_edges = 0
+    group_stats = []
+    device_stats_parts = []
+    for g_out in groups:
+        # Materializing this group's buffers blocks on ITS shuffle only;
+        # later groups keep running on the device meanwhile.  Ids
+        # outside [0, num_docs) after the doc_id_base shift (padding,
+        # INVALID slots, other chunks' docs) are dropped by the
+        # source's range filter.
+        g_stats = np.asarray(g_out["stats"])
+        device_stats_parts.append(g_stats)
+        source = ShardedEdgeSource.from_device_buffers(
+            g_out["edges"], g_out["edge_mask"], num_docs=num_docs,
+            num_shards=g_stats.shape[0], edge_offset=doc_id_base)
+        if device_scored:
+            # Host-side /M of the device match counts: numpy float32
+            # division is correctly rounded, so these scores are
+            # bit-identical to the host estimator's mean.
+            edges = np.asarray(g_out["edges"]).astype(np.int64) - int(
+                doc_id_base)
+            mask = np.asarray(g_out["edge_mask"])
+            sims = (np.asarray(g_out["device_match_counts"])
+                    / np.float32(sig.shape[1]))
+            covered = np.asarray(g_out["device_covered"])
+            reg = (mask & covered
+                   & (edges >= 0).all(axis=-1)
+                   & (edges < num_docs).all(axis=-1))
+            verifier.add_scores(edges[reg], sims[reg])
+        num_edges += source.num_edges
+        group_stats.append(acc.feed(source))
+
+    device_stats = np.concatenate(device_stats_parts)
+    overflow = int(device_stats[:, 2].sum())
 
     retried = False
     if overflow > 0 and overflow_fallback:
         retried = True
         bands = np.asarray(
             band_values(jnp.asarray(sig[:num_docs]), cfg.rows_per_band))
-        _, stats2, pairs2 = cluster_source(
-            BandMatrixSource(bands), verifier, cfg.edge_threshold,
-            tree_threshold, batch=batch, uf=uf)
-        stats.add(stats2)
-        merged = {(a, b): s for a, b, s in pairs}
-        merged.update({(a, b): s for a, b, s in pairs2})
-        pairs = [(a, b, s) for (a, b), s in sorted(merged.items())]
+        acc.feed(BandMatrixSource(bands))
 
     return ShardedClusterResult(
-        uf=uf, stats=stats, pairs=pairs, num_edges=source.num_edges,
-        overflow=overflow, retried=retried, device_stats=device_stats)
+        uf=acc.uf, stats=acc.stats, pairs=acc.pairs, num_edges=num_edges,
+        overflow=overflow, retried=retried, device_stats=device_stats,
+        group_stats=group_stats,
+        device_scored=getattr(verifier, "n_passthrough", 0),
+        host_rescored=getattr(verifier, "n_rescored", 0))

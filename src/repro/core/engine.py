@@ -72,6 +72,137 @@ class ClusterStats:
         return self
 
 
+class ClusterAccumulator:
+    """Incremental multi-source clustering: one union-find, shared caches.
+
+    ``feed`` drives one candidate source through batched verification
+    into the accumulator's union-find; feeding several sources in
+    sequence is the engine-level mechanism behind the sharded path's
+    *streamed* host merge — ``dist_lsh`` emits one edge buffer per
+    band-group and ``cluster_step_output`` feeds each group as it
+    arrives off the device, so the merge of group g overlaps the device
+    shuffle of group g+1.  The verified-sim cache carries across feeds:
+    a pair evaluated while merging group g is counted as *excluded*
+    (never re-verified) when group g+1 — or the overflow fallback pass —
+    emits it again, exactly like re-occurrences within a single source.
+
+    ``stats`` holds the totals across every feed; each ``feed`` call
+    also returns that source's own ``ClusterStats``.
+    """
+
+    def __init__(
+        self,
+        num_docs: int,
+        verifier,
+        edge_threshold: float,
+        tree_threshold: float,
+        *,
+        use_disjoint_sets: bool = True,
+        batch: str = "run",
+        max_batch_pairs: int = 8192,
+        uf: ThresholdUnionFind | None = None,
+    ):
+        if batch not in ("run", "band"):
+            raise ValueError(f"unknown batch granularity {batch!r}")
+        self.verifier = as_verifier(verifier)
+        if uf is None:
+            uf = ThresholdUnionFind(num_docs, tree_threshold)
+        else:
+            if len(uf.parent) < num_docs:
+                raise ValueError(
+                    f"existing uf covers {len(uf.parent)} docs, source "
+                    f"has {num_docs}")
+            if uf.tree_threshold != tree_threshold:
+                raise ValueError(
+                    f"tree_threshold {tree_threshold} does not match the "
+                    f"existing uf's {uf.tree_threshold}; unions are "
+                    "guarded by the uf's own threshold")
+        self.uf = uf
+        self.edge_threshold = float(edge_threshold)
+        self.use_disjoint_sets = bool(use_disjoint_sets)
+        self.batch = batch
+        self.max_batch_pairs = int(max_batch_pairs)
+        self.stats = ClusterStats()
+        self.evaluated: dict[tuple[int, int], float] = {}
+
+    @property
+    def pairs(self) -> list[tuple[int, int, float]]:
+        """Every evaluated (a, b, sim), sorted, across all feeds."""
+        return [(a, b, s) for (a, b), s in sorted(self.evaluated.items())]
+
+    def feed(self, source: CandidateSource) -> ClusterStats:
+        """Cluster one source into the accumulator; returns its stats."""
+        if len(self.uf.parent) < source.num_docs:
+            raise ValueError(
+                f"accumulator covers {len(self.uf.parent)} docs, source "
+                f"has {source.num_docs}")
+        uf, verifier = self.uf, self.verifier
+        evaluated = self.evaluated
+        # Snapshot the verifier's lifetime counters so stats report THIS
+        # feed's batches/seconds even when the verifier instance is
+        # reused (e.g. re-clustering at a second threshold).
+        batches0, seconds0 = verifier.n_batches, verifier.seconds
+        stats = ClusterStats()
+        pending: list[tuple[int, int]] = []
+        pending_set: set[tuple[int, int]] = set()
+
+        def flush():
+            if not pending:
+                return
+            sims = verifier(np.array(pending, dtype=np.int64))
+            for (a, c), sim in zip(pending, sims):
+                sim = float(sim)
+                evaluated[(a, c)] = sim
+                stats.pairs_evaluated += 1
+                if sim > self.edge_threshold:
+                    stats.pairs_above_edge += 1
+                    if self.use_disjoint_sets:
+                        before = uf.n_unions
+                        uf.union(a, c, sim)
+                        if uf.n_unions > before:
+                            stats.unions_done += 1
+                        else:
+                            stats.unions_rejected += 1
+            pending.clear()
+            pending_set.clear()
+
+        for band_runs in source.iter_bands():
+            for members in band_runs.iter_groups():
+                m = len(members)
+                stats.pairs_generated += m * (m - 1) // 2
+                if self.use_disjoint_sets:
+                    # "replace D with D.find()" — compress to roots.
+                    uniq = np.unique([uf.find(int(d)) for d in members])
+                else:
+                    uniq = np.sort(members)
+                k = len(uniq)
+                if k < 2:
+                    # All members already co-clustered: all excluded.
+                    stats.pairs_excluded += m * (m - 1) // 2
+                    continue
+                # Pairs collapsed by prior clustering are excluded too.
+                stats.pairs_excluded += m * (m - 1) // 2 - k * (k - 1) // 2
+                for ii in range(k):
+                    for jj in range(ii + 1, k):
+                        key = (int(uniq[ii]), int(uniq[jj]))
+                        if key in evaluated or key in pending_set:
+                            stats.pairs_excluded += 1
+                            continue
+                        pending.append(key)
+                        pending_set.add(key)
+                if self.batch == "run" or \
+                        len(pending) >= self.max_batch_pairs:
+                    flush()
+            if self.batch == "band":
+                flush()
+        flush()
+
+        stats.verify_batches = verifier.n_batches - batches0
+        stats.verify_seconds = verifier.seconds - seconds0
+        self.stats.add(stats)
+        return stats
+
+
 def cluster_source(
     source: CandidateSource,
     verifier,
@@ -96,86 +227,16 @@ def cluster_source(
     Passing an existing ``uf`` accumulates this source's clustering into
     it instead of starting fresh — the retry path for the sharded step's
     overflow fallback: docs already co-clustered by a previous pass are
-    excluded up front, only the remainder is re-verified.
+    excluded up front, only the remainder is re-verified.  For feeding
+    several sources with a shared verified-sim cache (the streamed
+    per-band-group merge), use ``ClusterAccumulator`` directly.
     """
-    if batch not in ("run", "band"):
-        raise ValueError(f"unknown batch granularity {batch!r}")
-    verifier = as_verifier(verifier)
-    # Snapshot the verifier's lifetime counters so stats report THIS
-    # run's batches/seconds even when the verifier instance is reused
-    # (e.g. re-clustering at a second threshold).
-    batches0, seconds0 = verifier.n_batches, verifier.seconds
-    if uf is None:
-        uf = ThresholdUnionFind(source.num_docs, tree_threshold)
-    else:
-        if len(uf.parent) < source.num_docs:
-            raise ValueError(
-                f"existing uf covers {len(uf.parent)} docs, source has "
-                f"{source.num_docs}")
-        if uf.tree_threshold != tree_threshold:
-            raise ValueError(
-                f"tree_threshold {tree_threshold} does not match the "
-                f"existing uf's {uf.tree_threshold}; unions are guarded "
-                "by the uf's own threshold")
-    stats = ClusterStats()
-    evaluated: dict[tuple[int, int], float] = {}
-    pending: list[tuple[int, int]] = []
-    pending_set: set[tuple[int, int]] = set()
-
-    def flush():
-        if not pending:
-            return
-        sims = verifier(np.array(pending, dtype=np.int64))
-        for (a, c), sim in zip(pending, sims):
-            sim = float(sim)
-            evaluated[(a, c)] = sim
-            stats.pairs_evaluated += 1
-            if sim > edge_threshold:
-                stats.pairs_above_edge += 1
-                if use_disjoint_sets:
-                    before = uf.n_unions
-                    uf.union(a, c, sim)
-                    if uf.n_unions > before:
-                        stats.unions_done += 1
-                    else:
-                        stats.unions_rejected += 1
-        pending.clear()
-        pending_set.clear()
-
-    for band_runs in source.iter_bands():
-        for members in band_runs.iter_groups():
-            m = len(members)
-            stats.pairs_generated += m * (m - 1) // 2
-            if use_disjoint_sets:
-                # "replace D with D.find()" — compress to current roots.
-                uniq = np.unique([uf.find(int(d)) for d in members])
-            else:
-                uniq = np.sort(members)
-            k = len(uniq)
-            if k < 2:
-                # All members already co-clustered: every pair excluded.
-                stats.pairs_excluded += m * (m - 1) // 2
-                continue
-            # Pairs collapsed by prior clustering are excluded too.
-            stats.pairs_excluded += m * (m - 1) // 2 - k * (k - 1) // 2
-            for ii in range(k):
-                for jj in range(ii + 1, k):
-                    key = (int(uniq[ii]), int(uniq[jj]))
-                    if key in evaluated or key in pending_set:
-                        stats.pairs_excluded += 1
-                        continue
-                    pending.append(key)
-                    pending_set.add(key)
-            if batch == "run" or len(pending) >= max_batch_pairs:
-                flush()
-        if batch == "band":
-            flush()
-    flush()
-
-    stats.verify_batches = verifier.n_batches - batches0
-    stats.verify_seconds = verifier.seconds - seconds0
-    pairs = [(a, b, s) for (a, b), s in sorted(evaluated.items())]
-    return uf, stats, pairs
+    acc = ClusterAccumulator(
+        source.num_docs, verifier, edge_threshold, tree_threshold,
+        use_disjoint_sets=use_disjoint_sets, batch=batch,
+        max_batch_pairs=max_batch_pairs, uf=uf)
+    stats = acc.feed(source)
+    return acc.uf, stats, acc.pairs
 
 
 def merge_cluster_rounds(
@@ -194,9 +255,14 @@ def merge_cluster_rounds(
     still-distinct current-root pairs go through the verifier in one
     dispatch, then the block's merges are applied in sweep order (rare
     pairs whose roots changed mid-block fall back to a singleton
-    dispatch).  Semantics match the historical O(roots^2) scalar loop —
-    sims are always between *current* roots at union time — with O(block)
-    memory instead of materializing every pair.  Returns #merges.
+    dispatch).  The verified-sim cache (``sim_at``) is shared across
+    blocks: a doc pair's similarity is deterministic, so a root pair
+    that re-appears in a later block — mid-sweep unions redirect
+    ``find`` onto roots scored earlier — reuses the cached value instead
+    of a redundant singleton dispatch.  Semantics match the historical
+    O(roots^2) scalar loop — sims are always between *current* roots at
+    union time — with O(block) memory for the batch buffer.  Returns
+    #merges.
     """
     verifier = as_verifier(verifier)
     roots = sorted({uf.find(i) for i in range(len(uf.parent))})
@@ -215,8 +281,8 @@ def merge_cluster_rounds(
             yield block
 
     merges = 0
+    sim_at: dict[tuple[int, int], float] = {}
     for block in blocks():
-        sim_at: dict[tuple[int, int], float] = {}
         want = []
         for i, j in block:
             a, b = uf.find(roots[i]), uf.find(roots[j])

@@ -120,7 +120,8 @@ def enumerate_pairs_in_runs(
 ) -> np.ndarray:
     """Paper-faithful all-pairs within equal runs (host path, ragged).
 
-    Returns (P, 2) int32 array of candidate pairs (a < b by doc id).
+    Returns (P, 2) int64 array of candidate pairs (a < b by doc id;
+    int64 end-to-end so chunked global ids >= 2^31 cannot wrap).
     Delegates to the shared staged-engine layer (``candidates.py``).
     """
     from repro.core.candidates import pairs_in_runs

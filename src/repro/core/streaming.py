@@ -41,17 +41,25 @@ from repro.core.verify import BatchVerifier, SignatureVerifier, as_verifier
 
 @dataclass
 class StreamingDedup:
-    """Two-phase streaming dedup over a Design-2 band store."""
+    """Two-phase streaming dedup over a Design-2 band store.
+
+    ``doc_id_base`` assigns global doc ids starting at that base —
+    resumed ingest of a chunked corpus (the ``doc_offsets`` convention
+    of the sharded path) writes non-contiguous per-part id ranges into
+    the store, which the Design-2 schema persists explicitly.
+    """
 
     config: DedupConfig = field(default_factory=DedupConfig)
     store_path: str = ":memory:"
     chunk_docs: int = 512
+    doc_id_base: int = 0
 
     def __post_init__(self):
         self.store = Design2Store(self.store_path,
                                   part_size=self.chunk_docs)
         self.seeds = minhash.default_seeds(self.config.num_hashes)
-        self.n_docs = 0
+        self.n_docs = int(self.doc_id_base)
+        self.n_ingested = 0
         self._sig_cache: dict[int, np.ndarray] = {}
 
     # -- phase 1 -----------------------------------------------------------
@@ -90,6 +98,7 @@ class StreamingDedup:
             if keep_signatures:
                 self._sig_cache[doc_id] = sig[i]
         self.n_docs += len(token_lists)
+        self.n_ingested += len(token_lists)
 
     # -- phase 2 -----------------------------------------------------------
 
@@ -99,13 +108,23 @@ class StreamingDedup:
                                self.n_docs)
 
     def default_verifier(self) -> BatchVerifier:
-        """Signature-agreement verifier over the phase-1 cache."""
-        if len(self._sig_cache) < self.n_docs:
+        """Signature-agreement verifier over the phase-1 cache.
+
+        The signature matrix is indexed by global doc id (rows below
+        ``doc_id_base`` or inside a resumed-ingest gap stay zero — those
+        ids have no band-store rows, so they can never reach the
+        verifier as candidates).
+        """
+        if len(self._sig_cache) < self.n_ingested:
             raise ValueError(
                 f"signature cache holds {len(self._sig_cache)} of "
-                f"{self.n_docs} docs — ingest with keep_signatures=True "
-                "or pass an explicit similarity_fn / verifier to cluster()")
-        sig = np.stack([self._sig_cache[i] for i in range(self.n_docs)])
+                f"{self.n_ingested} ingested docs — ingest with "
+                "keep_signatures=True or pass an explicit "
+                "similarity_fn / verifier to cluster()")
+        sig = np.zeros((self.n_docs, self.config.num_hashes),
+                       dtype=np.uint32)
+        for i, row in self._sig_cache.items():
+            sig[i] = row
         return SignatureVerifier(
             sig, backend=self.config.resolved_backend())
 

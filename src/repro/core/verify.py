@@ -24,6 +24,10 @@ ShardedEdgeVerifier  full-signature re-verify of the ``dist_lsh``
                      prefix-prescreen survivors (stage 2 of the sharded
                      path's two-stage verify); same estimator/backends
                      as SignatureVerifier by construction
+DeviceScoredEdge-    pass-through for the device-resident stage-2 mode:
+Verifier             serves scores the ``kernels.sigjaccard`` shard_map
+                     kernel already computed, re-scores only cross-shard
+                     stragglers
 CallbackVerifier     compat shim around a scalar ``fn(a, b) -> float``
 ===================  =====================================================
 
@@ -181,6 +185,69 @@ class ShardedEdgeVerifier(SignatureVerifier):
         if pairs.size == 0:
             return 0
         return int(np.sum(self(pairs) != reference(pairs)))
+
+
+class DeviceScoredEdgeVerifier(ShardedEdgeVerifier):
+    """Pass-through stage 2 for the device-resident verify mode.
+
+    When ``dist_lsh`` runs its stage-2 verify on the accelerator
+    (``stage2="device"``: the ``kernels.sigjaccard`` fused gather +
+    full-M-estimate kernel under ``shard_map``), edges whose two
+    endpoints live on one device's signature shard arrive at the host
+    merge already fully scored.  ``add_scores`` registers those scores;
+    ``_verify_batch`` then serves a pair from the registry when present
+    and falls back to the parent full-signature re-verify only for the
+    *cross-shard stragglers* (edge endpoints on different shards) and
+    for root pairs the engine synthesizes after unions.
+
+    The device kernel computes the identical estimator (full-M
+    agreement, float32 division), so registry hits and host re-scores
+    are bit-interchangeable — drift stays 0 by construction.
+
+    ``n_passthrough`` / ``n_rescored`` count how the split landed.
+    """
+
+    def __init__(self, signatures: np.ndarray, backend: str = "numpy",
+                 batch_pairs: int = 8192):
+        super().__init__(signatures, backend=backend,
+                         batch_pairs=batch_pairs)
+        self._scores: dict[tuple[int, int], float] = {}
+        self.n_passthrough = 0
+        self.n_rescored = 0
+
+    def add_scores(self, pairs: np.ndarray, sims: np.ndarray):
+        """Register device-computed full-signature scores for pairs.
+
+        ``pairs`` (P, 2) int doc ids in any order; keys are canonicalized
+        to (min, max) to match the engine's root-pair convention.
+        """
+        pairs = np.asarray(pairs).reshape(-1, 2).astype(np.int64)
+        sims = np.asarray(sims).reshape(-1)
+        for (a, b), s in zip(pairs, sims):
+            a, b = int(a), int(b)
+            self._scores[(min(a, b), max(a, b))] = float(s)
+
+    @property
+    def num_scores(self) -> int:
+        return len(self._scores)
+
+    def _verify_batch(self, pairs: np.ndarray) -> np.ndarray:
+        out = np.empty(len(pairs), dtype=np.float32)
+        missing = []
+        missing_at = []
+        for i, (a, b) in enumerate(pairs):
+            s = self._scores.get((int(a), int(b)))
+            if s is None:
+                missing.append((int(a), int(b)))
+                missing_at.append(i)
+            else:
+                out[i] = s
+        self.n_passthrough += len(pairs) - len(missing)
+        if missing:
+            self.n_rescored += len(missing)
+            out[missing_at] = super()._verify_batch(
+                np.array(missing, dtype=np.int64))
+        return out
 
 
 class ExactJaccardVerifier(BatchVerifier):

@@ -9,7 +9,12 @@ from __future__ import annotations
 from repro.kernels.minhash import minhash_signatures
 from repro.kernels.ngram import ngram_hashes
 from repro.kernels.bandfold import band_values
-from repro.kernels.sigjaccard import indexed_pair_estimate, pair_estimate
+from repro.kernels.sigjaccard import (
+    indexed_pair_estimate,
+    masked_indexed_pair_counts,
+    masked_indexed_pair_estimate,
+    pair_estimate,
+)
 from repro.kernels.flash_attention import flash_attention
 
 __all__ = [
@@ -18,5 +23,7 @@ __all__ = [
     "band_values",
     "pair_estimate",
     "indexed_pair_estimate",
+    "masked_indexed_pair_counts",
+    "masked_indexed_pair_estimate",
     "flash_attention",
 ]

@@ -77,3 +77,95 @@ def indexed_pair_estimate(
     verifiers never materialize the gathered operands on the host.
     """
     return _estimate(sig[a_idx], sig[b_idx], tp, interpret)
+
+
+def _sigjac_masked_kernel(a_ref, b_ref, v_ref, out_ref):
+    a = a_ref[...]
+    b = b_ref[...]
+    eq = (a == b).astype(jnp.float32)
+    out_ref[...] = jnp.where(v_ref[...] != 0, jnp.sum(eq, axis=1), 0.0)
+
+
+def _masked_counts(sig, a_idx, b_idx, valid, tp: int,
+                   interpret: bool | None):
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    D = sig.shape[0]
+    a_idx = jnp.clip(a_idx, 0, D - 1)
+    b_idx = jnp.clip(b_idx, 0, D - 1)
+    sig_a = sig[a_idx]
+    sig_b = sig[b_idx]
+    P, M = sig_a.shape
+    tp_ = min(tp, max(1, P))
+    Pp = -(-P // tp_) * tp_
+    a = jnp.pad(sig_a.astype(jnp.uint32), ((0, Pp - P), (0, 0)))
+    b = jnp.pad(sig_b.astype(jnp.uint32), ((0, Pp - P), (0, 0)))
+    v = jnp.pad(valid.astype(jnp.int32), (0, Pp - P))
+
+    out = pl.pallas_call(
+        _sigjac_masked_kernel,
+        grid=(Pp // tp_,),
+        in_specs=[
+            pl.BlockSpec((tp_, M), lambda p: (p, 0)),
+            pl.BlockSpec((tp_, M), lambda p: (p, 0)),
+            pl.BlockSpec((tp_,), lambda p: (p,)),
+        ],
+        out_specs=pl.BlockSpec((tp_,), lambda p: (p,)),
+        out_shape=jax.ShapeDtypeStruct((Pp,), jnp.float32),
+        interpret=interpret,
+    )(a, b, v)
+    return out[:P]
+
+
+@functools.partial(jax.jit, static_argnames=("tp", "interpret"))
+def masked_indexed_pair_counts(
+    sig: jnp.ndarray,
+    a_idx: jnp.ndarray,
+    b_idx: jnp.ndarray,
+    valid: jnp.ndarray,
+    *,
+    tp: int = TP,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Fused gather + full-M agreement *count* with a validity mask.
+
+    sig (D, M) uint32, a_idx/b_idx (P,) int, valid (P,) bool ->
+    (P,) float32: #agreeing signature rows (an exact integer value)
+    where ``valid``, 0.0 elsewhere.  Indices are clipped to the local
+    row range before the gather, so callers can pass raw shard-relative
+    indices whose invalid lanes (cross-shard edges, empty buffer slots)
+    point outside the shard — this is the device-resident stage-2
+    verify of the sharded dedup path, run under ``shard_map`` over each
+    device's own signature shard with a ``psum`` combining the
+    per-shard masked contributions.
+
+    Returning the raw count (instead of the m/M estimate) keeps the
+    kernel output exact: XLA rewrites division by the compile-time
+    constant M into a multiply by its reciprocal, which lands 1 ulp off
+    the host numpy estimator — so the division is done by the consumer
+    (``masked_indexed_pair_estimate`` eagerly, or the host merge in
+    numpy), where it is correctly rounded and drift against the host
+    verifier stays 0.
+    """
+    return _masked_counts(sig, a_idx, b_idx, valid, tp, interpret)
+
+
+def masked_indexed_pair_estimate(
+    sig: jnp.ndarray,
+    a_idx: jnp.ndarray,
+    b_idx: jnp.ndarray,
+    valid: jnp.ndarray,
+    *,
+    tp: int = TP,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Masked fused gather + full-M estimate: counts / M.
+
+    Bit-identical to the numpy estimator when called eagerly (the
+    division executes as a standalone correctly-rounded op).  Inside a
+    larger jit XLA may fold the division into a reciprocal multiply —
+    use ``masked_indexed_pair_counts`` there and divide on the host.
+    """
+    counts = masked_indexed_pair_counts(
+        sig, a_idx, b_idx, valid, tp=tp, interpret=interpret)
+    return counts / jnp.float32(sig.shape[1])

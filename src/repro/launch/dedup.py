@@ -39,6 +39,15 @@ def main(argv=None):
                     help="run the shard_map dedup step")
     ap.add_argument("--devices", type=int, default=0,
                     help="force host device count (sharded mode)")
+    ap.add_argument("--band-groups", type=int, default=1,
+                    help="stream the sharded step's verified-edge "
+                         "buffers per band-group (G bounded buffers of "
+                         "b/G bands; host merge overlaps device shuffle)")
+    ap.add_argument("--stage2", default="host", choices=("host", "device"),
+                    help="full-signature verify placement: host merge "
+                         "or TPU-resident (fused sigjaccard kernel "
+                         "under shard_map; host re-scores only "
+                         "cross-shard stragglers)")
     args = ap.parse_args(argv)
 
     if args.sharded and args.devices:
@@ -65,7 +74,7 @@ def main(argv=None):
 
     if args.sharded:
         from repro.core import (DistLSHConfig, cluster_step_output,
-                                docs_mesh, make_dedup_step)
+                                docs_mesh, make_streamed_dedup_step)
         from repro.core import minhash
         from repro.core.shingle import pack_documents, tokenize
 
@@ -75,16 +84,19 @@ def main(argv=None):
         token_lists += [["pad"]] * pad
         packed = pack_documents(token_lists)
         dcfg = DistLSHConfig(edge_threshold=args.edge_threshold,
-                             edge_capacity=8192)
+                             edge_capacity=8192,
+                             band_groups=args.band_groups,
+                             stage2=args.stage2)
         mesh = docs_mesh()
-        step = make_dedup_step(dcfg, mesh)
+        step = make_streamed_dedup_step(dcfg, mesh)
         t0 = time.perf_counter()
         out = step(jnp.asarray(packed.tokens), jnp.asarray(packed.lengths),
                    jnp.asarray(minhash.default_seeds(dcfg.num_hashes)))
-        jax.block_until_ready(out["edges"])
-        t_dev = time.perf_counter() - t0
-        # Host-side merge through the shared staged engine (stage-2
-        # full-signature verify; same semantics as the host path).
+        t_dispatch = time.perf_counter() - t0
+        # Streamed merge through the shared staged engine: group g's
+        # host merge overlaps the device shuffle of group g+1; with
+        # --stage2 device the edges arrive already fully scored and the
+        # host only re-scores cross-shard stragglers.
         t0 = time.perf_counter()
         res = cluster_step_output(
             out, dcfg, tree_threshold=args.tree_threshold,
@@ -94,14 +106,20 @@ def main(argv=None):
         labels = res.labels()
         n_dup = len(notes) - len(set(labels.tolist()))
         dev_stats = res.device_stats.sum(axis=0)
-        print(f"sharded over {ndev} devices: {res.num_edges} prescreened "
-              f"edges ({dev_stats[1]} candidates, overflow={res.overflow}"
+        stage2_note = (
+            f", stage2=device {res.device_scored} device-scored / "
+            f"{res.host_rescored} host-rescored"
+            if args.stage2 == "device" else "")
+        print(f"sharded over {ndev} devices x {dcfg.band_groups} "
+              f"band-group(s): {res.num_edges} prescreened edges "
+              f"({dev_stats[1]} candidates, overflow={res.overflow}"
               f"{', retried via host fallback' if res.retried else ''}), "
               f"{n_dup} duplicates, "
               f"{res.stats.pairs_evaluated} full-signature verifies in "
               f"{res.stats.verify_batches} batches "
-              f"({res.stats.verify_pairs_per_second:.0f} pairs/s), "
-              f"device {t_dev:.2f}s merge {t_merge:.2f}s")
+              f"({res.stats.verify_pairs_per_second:.0f} pairs/s"
+              f"{stage2_note}), "
+              f"dispatch {t_dispatch:.2f}s merge+overlap {t_merge:.2f}s")
         return
 
     if args.streaming:

@@ -148,6 +148,114 @@ def test_dist_lsh_doc_offsets_chunked():
 
 
 @pytest.mark.slow
+def test_band_group_streaming_matches_end_of_step():
+    """Band-group streaming == the PR 2 end-of-step path, any G.
+
+    The streamed step emits one bounded verified-edge buffer per
+    band-group and cluster_step_output consumes them incrementally
+    (host merge of group g overlaps the device shuffle of group g+1);
+    clusters and per-edge full-signature sims must be identical to the
+    single end-of-step gather, with edge drift 0.
+    """
+    run_with_devices("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core.dist_lsh import (DistLSHConfig, cluster_step_output,
+                                         docs_mesh, make_dedup_step,
+                                         make_streamed_dedup_step)
+        from repro.core import shingle, minhash
+        from repro.data import make_i2b2_like, inject_near_duplicates
+        notes = make_i2b2_like(56, seed=0)
+        notes, _ = inject_near_duplicates(notes, 8, frac_low=0.0,
+                                          frac_high=0.005, seed=1)
+        packed = shingle.pack_documents(
+            [shingle.tokenize(t) for t in notes])
+        seeds = jnp.asarray(minhash.default_seeds(100))
+        args = (jnp.asarray(packed.tokens), jnp.asarray(packed.lengths),
+                seeds)
+        base = dict(edge_capacity=4096, edge_threshold=0.88,
+                    bucket_slack=16.0)
+        ref_step = make_dedup_step(DistLSHConfig(**base), docs_mesh())
+        ref = cluster_step_output(ref_step(*args), DistLSHConfig(**base),
+                                  tree_threshold=0.40, num_docs=len(notes),
+                                  overflow_fallback=False)
+        assert ref.overflow == 0 and ref.num_edges > 0
+        sims = {(a, b): s for a, b, s in ref.pairs}
+        for G in (2, 5, 10):
+            cfg = DistLSHConfig(**base, band_groups=G)
+            step = make_streamed_dedup_step(cfg, docs_mesh())
+            res = cluster_step_output(step(*args), cfg,
+                                      tree_threshold=0.40,
+                                      num_docs=len(notes),
+                                      overflow_fallback=False)
+            assert res.overflow == 0
+            assert res.num_edges == ref.num_edges, (G, res.num_edges)
+            assert len(res.group_stats) == G
+            np.testing.assert_array_equal(res.labels(), ref.labels())
+            shared = [(a, b, s) for a, b, s in res.pairs
+                      if (a, b) in sims]
+            assert shared, G
+            drift = sum(1 for a, b, s in shared if s != sims[(a, b)])
+            assert drift == 0, (G, drift)
+        print("band-group streaming ok")
+    """, n_devices=8)
+
+
+@pytest.mark.slow
+def test_device_stage2_passthrough_and_stragglers():
+    """Device-resident stage 2 == host stage 2, bit for bit.
+
+    Same-shard edges are fully scored on the accelerator (the fused
+    sigjaccard kernel under shard_map) and pass through the host merge;
+    cross-shard edges are re-scored by the straggler path.  Both kinds
+    are planted; clusters and per-edge sims must match the end-of-step
+    host-verified path exactly (drift 0).
+    """
+    run_with_devices("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core.dist_lsh import (DistLSHConfig, cluster_step_output,
+                                         docs_mesh, make_dedup_step,
+                                         make_streamed_dedup_step)
+        from repro.core import shingle, minhash
+        rng = np.random.RandomState(0)
+        vocab = [f"t{i}" for i in range(400)]
+        docs = [list(rng.choice(vocab, size=64)) for _ in range(64)]
+        # 8 docs/device: same-shard dups (1,5) on dev0 and (17,20) on
+        # dev2; near-dup (17,22) on dev2; cross-shard dup (3,41).
+        docs[5] = docs[1]; docs[20] = docs[17]; docs[41] = docs[3]
+        docs[22] = docs[17][:60] + docs[22][:4]
+        packed = shingle.pack_documents(docs)
+        seeds = jnp.asarray(minhash.default_seeds(100))
+        args = (jnp.asarray(packed.tokens), jnp.asarray(packed.lengths),
+                seeds)
+        base = dict(edge_capacity=4096, edge_threshold=0.5,
+                    bucket_slack=16.0)
+        ref_step = make_dedup_step(DistLSHConfig(**base), docs_mesh())
+        ref = cluster_step_output(ref_step(*args), DistLSHConfig(**base),
+                                  num_docs=64, overflow_fallback=False)
+        sims = {(a, b): s for a, b, s in ref.pairs}
+        cfg = DistLSHConfig(**base, band_groups=5, stage2="device")
+        step = make_streamed_dedup_step(cfg, docs_mesh())
+        out = step(*args)
+        assert all("device_match_counts" in g for g in out["groups"])
+        res = cluster_step_output(out, cfg, num_docs=64,
+                                  overflow_fallback=False)
+        assert res.overflow == 0
+        np.testing.assert_array_equal(res.labels(), ref.labels())
+        lab = res.labels()
+        assert lab[1] == lab[5] and lab[17] == lab[20] == lab[22]
+        assert lab[3] == lab[41]
+        shared = [(a, b, s) for a, b, s in res.pairs if (a, b) in sims]
+        assert shared
+        drift = sum(1 for a, b, s in shared if s != sims[(a, b)])
+        assert drift == 0, drift
+        # both stage-2 paths actually exercised
+        assert res.device_scored > 0, "no edge served from device scores"
+        assert res.host_rescored > 0, "no cross-shard straggler re-scored"
+        print("device stage2 ok")
+    """, n_devices=8)
+
+
+@pytest.mark.slow
 def test_dist_lsh_overflow_retry_through_engine():
     """Device buffer overflow falls back through the same engine.
 

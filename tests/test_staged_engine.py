@@ -5,16 +5,19 @@ import numpy as np
 from repro.core import jaccard, lsh, shingle
 from repro.core.bandstore import Design1Store, Design2Store
 from repro.core.candidates import (
-    BandMatrixSource, ShardedEdgeSource, StoreBandSource, candidate_pairs,
+    BandMatrixSource, EdgeStreamSource, ShardedEdgeSource, StoreBandSource,
+    candidate_pairs,
 )
 from repro.core.cluster import cluster_bands
-from repro.core.engine import cluster_source, merge_cluster_rounds
+from repro.core.engine import (
+    ClusterAccumulator, cluster_source, merge_cluster_rounds,
+)
 from repro.core.pipeline import DedupConfig, DedupPipeline, DedupResult
 from repro.core.streaming import StreamingDedup
 from repro.core.unionfind import ThresholdUnionFind
 from repro.core.verify import (
-    CallbackVerifier, ExactJaccardVerifier, ShardedEdgeVerifier,
-    SignatureVerifier,
+    CallbackVerifier, DeviceScoredEdgeVerifier, ExactJaccardVerifier,
+    ShardedEdgeVerifier, SignatureVerifier,
 )
 from repro.data import inject_near_duplicates, make_i2b2_like
 
@@ -280,6 +283,298 @@ def test_cluster_source_accumulates_into_existing_uf():
     _, st_fresh, _ = cluster_source(
         BandMatrixSource(bands), SignatureVerifier(sig), 0.75, 0.40)
     assert st2.pairs_evaluated <= st_fresh.pairs_evaluated
+
+
+# -- doc-id integrity regressions ------------------------------------------
+
+def test_design2_store_noncontiguous_doc_ids_round_trip():
+    """Regression: Design 2 must persist explicit per-part doc ids.
+
+    The historical blob stored only the values and *reconstructed* ids
+    as arange(doc0, doc0 + d) — silently wrong whenever a part holds a
+    non-contiguous id range (ragged chunks, resumed ingest with
+    doc_offsets-style global ids, ids >= 2^31).
+    """
+    rng = np.random.RandomState(0)
+    ids = [3, 100, 2**31 + 7, 11, 2**31 + 5]
+    bands = {i: rng.randint(0, 2**31, size=(4, 2)).astype(np.uint32)
+             for i in ids}
+    s1, s2 = Design1Store(), Design2Store(part_size=3)
+    for i in ids:
+        s1.insert_document(i, bands[i])
+        s2.insert_document(i, bands[i])
+    s1.commit()
+    s2.commit()
+    for j in range(4):
+        d2, v2 = s2.read_band(j)
+        assert sorted(d2.tolist()) == sorted(ids)
+        assert d2.dtype == np.int64
+        for doc, val in zip(d2, v2):
+            np.testing.assert_array_equal(val, bands[int(doc)][j])
+        # both designs agree row-for-row
+        d1, v1 = s1.read_band(j)
+        o1, o2 = np.argsort(d1), np.argsort(d2)
+        np.testing.assert_array_equal(d1[o1], d2[o2])
+        np.testing.assert_array_equal(v1[o1], v2[o2])
+
+
+def test_design2_store_reads_legacy_v1_blobs():
+    """Pre-existing stores (raw value blobs) stay readable via doc0."""
+    rng = np.random.RandomState(1)
+    vals = rng.randint(0, 2**31, size=(5, 2)).astype(np.uint32)
+    s2 = Design2Store()
+    s2.conn.execute("INSERT INTO band2 VALUES (?,?,?,?)",
+                    (0, 0, 10, vals.tobytes()))
+    docs, got = s2.read_band(0)
+    np.testing.assert_array_equal(docs, np.arange(10, 15))
+    np.testing.assert_array_equal(got, vals)
+
+
+def test_streaming_resumed_ingest_noncontiguous_ids():
+    """Resumed ingest writes non-contiguous ids inside one band part.
+
+    chunk A (ids 0..4) and chunk B (ids 42..46) share a part of size 8,
+    so the part's id range is non-contiguous; the round-trip must keep
+    the explicit ids and cluster a cross-chunk duplicate pair.
+    """
+    notes_a = make_i2b2_like(5, seed=11)
+    notes_a[3] = notes_a[1]                 # in-chunk duplicate
+    notes_b = make_i2b2_like(5, seed=12)
+    notes_b[0] = notes_a[1]                 # cross-chunk duplicate (id 42)
+    cfg = DedupConfig()
+    sd = StreamingDedup(cfg, chunk_docs=8)
+    sd.ingest(notes_a)
+    sd.n_docs = 42                          # resume after a corpus gap
+    sd.ingest(notes_b)
+    assert sd.n_docs == 47
+    docs0, _ = sd.store.read_band(0)
+    assert sorted(docs0.tolist()) == [0, 1, 2, 3, 4, 42, 43, 44, 45, 46]
+
+    # default verifier: signature matrix indexed by global id (gap rows
+    # zero; gap ids have no store rows so they never become candidates)
+    uf, _ = sd.cluster()
+    labels = uf.components()
+    assert labels[1] == labels[3] == labels[42], labels
+
+    # doc_id_base makes resumed ingest first-class (fresh store).
+    sd2 = StreamingDedup(cfg, chunk_docs=8, doc_id_base=1000)
+    sd2.ingest(notes_a)
+    docs0, _ = sd2.store.read_band(0)
+    assert sorted(docs0.tolist()) == [1000, 1001, 1002, 1003, 1004]
+    uf2, _ = sd2.cluster()                # default verifier works too
+    labels2 = uf2.components()
+    assert labels2[1001] == labels2[1003]
+
+
+def test_pair_enumeration_int64_global_ids():
+    """Regression: doc ids >= 2^31 must survive pair enumeration.
+
+    The historical int32 downcast wrapped exactly the global ids that
+    chunked corpora with doc_offsets produce.
+    """
+    big = 2**31
+    vals = np.array([[1, 1], [1, 1], [2, 2], [2, 2]], dtype=np.uint32)
+    docs = np.array([big + 9, big + 5, 7, big + 3], dtype=np.int64)
+    from repro.core.candidates import make_band_runs, pairs_in_runs
+
+    runs = make_band_runs(0, vals, docs)
+    pairs = pairs_in_runs(runs.sorted_vals, runs.sorted_docs)
+    assert pairs.dtype == np.int64
+    assert sorted(map(tuple, pairs.tolist())) == \
+        [(7, big + 3), (big + 5, big + 9)]
+    # the source-agnostic dedup path and legacy entry point agree
+    lp = lsh.enumerate_pairs_in_runs(runs.sorted_vals, runs.sorted_docs)
+    assert lp.dtype == np.int64
+    np.testing.assert_array_equal(np.sort(lp, axis=0),
+                                  np.sort(pairs, axis=0))
+
+    class _OneBand:
+        num_docs = 0
+        num_bands = 1
+
+        def iter_bands(self):
+            yield runs
+
+    cp = candidate_pairs(_OneBand())
+    assert cp.dtype == np.int64
+    assert sorted(map(tuple, cp.tolist())) == \
+        [(7, big + 3), (big + 5, big + 9)]
+
+
+def test_merge_cluster_rounds_dispatch_count_pin():
+    """The verified-sim cache is shared across blocks: a root pair that
+    re-appears after a mid-sweep union is served from cache, never
+    re-dispatched (historically each block re-verified it singleton)."""
+    sims = {(0, 2): 0.9}
+
+    def fn(a, b):
+        return sims.get((min(a, b), max(a, b)), 0.6)
+
+    def build():
+        uf = ThresholdUnionFind(8, 0.3)
+        for a, b in ((0, 1), (2, 3), (4, 5), (6, 7)):
+            uf.union(a, b, 0.95)
+        return uf
+
+    uf = build()
+    v = CallbackVerifier(fn)
+    merges = merge_cluster_rounds(uf, v, 0.75, max_batch_pairs=2)
+    assert merges == 1
+    # 4 roots -> 6 root pairs in the sweep, but only 4 distinct pairs of
+    # *current* roots exist once (0, 2) merges; every one is verified
+    # exactly once.
+    assert v.n_pairs == 4
+    uf_big = build()
+    merge_cluster_rounds(uf_big, fn, 0.75)  # single block reference
+    np.testing.assert_array_equal(uf.components(), uf_big.components())
+
+
+# -- band-group streaming layers (host-side; device path in
+# tests/test_distributed.py) -----------------------------------------------
+
+def test_edge_stream_source_lazy_groups_match_sharded_source():
+    inv = np.uint32(0xFFFFFFFF)
+    g1 = np.array([[0, 1], [2, 3], [inv, inv]], dtype=np.uint32)
+    m1 = np.array([1, 1, 0], dtype=bool)
+    g2 = np.array([[4, 9], [4, 5], [0, 2]], dtype=np.uint32)
+    consumed = []
+
+    def groups():
+        consumed.append("g1")
+        yield g1, m1
+        consumed.append("g2")
+        yield g2, None
+
+    seen_cb = []
+    src = EdgeStreamSource(groups(), num_docs=8, num_shards=1,
+                           on_group=lambda g, e, m: seen_cb.append(g))
+    it = src.iter_bands()
+    first = next(it)
+    assert consumed == ["g1"]       # group 2 not materialized yet
+    assert [g.tolist() for g in first.iter_groups()] == [[0, 1], [2, 3]]
+    rest = list(it)
+    assert consumed == ["g1", "g2"] and seen_cb == [0, 1]
+    groups_all = [g.tolist() for br in [first] + rest
+                  for g in br.iter_groups()]
+    assert groups_all == [[0, 1], [2, 3], [4, 5], [0, 2]]  # pad edge dropped
+    assert src.num_edges == 4 and src.groups_consumed == 2
+
+    # engine result == one ShardedEdgeSource over the concatenation
+    sig = np.random.RandomState(3).randint(
+        0, 4, size=(8, 100)).astype(np.uint32)
+    uf_a, _, pairs_a = cluster_source(
+        EdgeStreamSource([(g1, m1), (g2, None)], num_docs=8),
+        SignatureVerifier(sig), 0.75, 0.40)
+    uf_b, _, pairs_b = cluster_source(
+        ShardedEdgeSource(np.concatenate([g1, g2]),
+                          np.concatenate([m1, np.ones(3, bool)]),
+                          num_docs=8),
+        SignatureVerifier(sig), 0.75, 0.40)
+    np.testing.assert_array_equal(uf_a.components(), uf_b.components())
+    assert pairs_a == pairs_b
+
+
+def test_cluster_accumulator_excludes_cross_feed_pairs():
+    """A pair verified while feeding group g is excluded in group g+1."""
+    sig = np.random.RandomState(4).randint(
+        0, 50, size=(10, 100)).astype(np.uint32)   # all sims ~ tiny
+    edges = np.array([[0, 1], [2, 3], [4, 5]], dtype=np.int64)
+    verifier = SignatureVerifier(sig)
+    acc = ClusterAccumulator(10, verifier, 0.75, 0.40)
+    st1 = acc.feed(ShardedEdgeSource(edges, num_docs=10))
+    assert st1.pairs_evaluated == 3
+    st2 = acc.feed(ShardedEdgeSource(edges, num_docs=10))
+    assert st2.pairs_evaluated == 0          # served from the shared cache
+    assert st2.pairs_excluded == 3
+    assert acc.stats.pairs_evaluated == 3
+    assert len(acc.pairs) == 3
+
+
+def test_device_scored_verifier_passthrough_and_stragglers():
+    rng = np.random.RandomState(7)
+    sig = rng.randint(0, 50, size=(40, 100)).astype(np.uint32)
+    pairs = _random_pairs(rng, 40, 200)
+    host = SignatureVerifier(sig, backend="numpy")
+    oracle = host(pairs)
+    v = DeviceScoredEdgeVerifier(sig, backend="numpy")
+    # register device scores for the first half, swapped order included
+    half = pairs[:100][:, ::-1]
+    v.add_scores(half, oracle[:100])
+    keys = {(min(a, b), max(a, b)) for a, b in half.tolist()}
+    assert v.num_scores == len(keys)
+    np.testing.assert_array_equal(v(pairs), oracle)
+    served = sum(1 for a, b in pairs.tolist() if (a, b) in keys)
+    assert v.n_passthrough == served > 0
+    assert v.n_rescored == len(pairs) - served > 0
+
+
+def test_masked_indexed_pair_estimate_matches_host():
+    """Deterministic kernel check (the hypothesis sweep is CI-only):
+    full-M agreement where valid — bit-identical to numpy — else 0."""
+    import jax.numpy as jnp
+
+    from repro.kernels import ops as kops
+
+    rng = np.random.RandomState(9)
+    sig = rng.randint(0, 4, size=(30, 100)).astype(np.uint32)
+    a = rng.randint(-30, 60, size=(500,)).astype(np.int32)
+    b = rng.randint(-30, 60, size=(500,)).astype(np.int32)
+    valid = (a >= 0) & (a < 30) & (b >= 0) & (b < 30)
+    got = np.asarray(kops.masked_indexed_pair_estimate(
+        jnp.asarray(sig), jnp.asarray(a), jnp.asarray(b),
+        jnp.asarray(valid)))
+    want = np.where(
+        valid,
+        (sig[np.clip(a, 0, 29)] == sig[np.clip(b, 0, 29)]).mean(
+            axis=-1, dtype=np.float32),
+        np.float32(0.0)).astype(np.float32)
+    assert np.array_equal(got, want)
+
+
+def test_streamed_step_single_device_matches_end_of_step():
+    """Band-group streaming (G=2, 5) and the device-resident stage 2
+    reproduce the end-of-step path exactly on a 1-device mesh (where
+    every edge is same-shard, so stage 2 passes fully through)."""
+    import jax.numpy as jnp
+
+    from repro.core import minhash
+    from repro.core.dist_lsh import (DistLSHConfig, cluster_step_output,
+                                     docs_mesh, make_dedup_step,
+                                     make_streamed_dedup_step)
+
+    rng = np.random.RandomState(0)
+    vocab = [f"t{i}" for i in range(300)]
+    docs = [list(rng.choice(vocab, size=48)) for _ in range(24)]
+    docs[5] = docs[3]
+    docs[17] = docs[3][:44] + docs[17][:4]
+    packed = shingle.pack_documents(docs)
+    seeds = jnp.asarray(minhash.default_seeds(20))
+
+    def run(cfg, step_factory, **kw):
+        step = step_factory(cfg, docs_mesh(), **kw)
+        out = step(jnp.asarray(packed.tokens), jnp.asarray(packed.lengths),
+                   seeds)
+        return cluster_step_output(out, cfg, tree_threshold=0.40,
+                                   num_docs=24, overflow_fallback=False)
+
+    base = dict(ngram=4, num_hashes=20, verify_k=8, edge_capacity=256,
+                edge_threshold=0.5, bucket_slack=16.0)
+    ref = run(DistLSHConfig(**base), make_dedup_step)
+    assert ref.num_edges > 0 and ref.overflow == 0
+    sims = {(a, b): s for a, b, s in ref.pairs}
+    for G in (2, 5):
+        for stage2 in ("host", "device"):
+            res = run(DistLSHConfig(**base, band_groups=G),
+                      make_streamed_dedup_step, stage2=stage2)
+            assert len(res.group_stats) == G
+            np.testing.assert_array_equal(res.labels(), ref.labels())
+            shared = [(a, b, s) for a, b, s in res.pairs
+                      if (a, b) in sims]
+            assert shared
+            assert all(s == sims[(a, b)] for a, b, s in shared), stage2
+            if stage2 == "device":
+                # 1-device mesh: all first-evaluation pairs pass through
+                assert res.device_scored > 0
 
 
 # -- DedupResult.num_clusters (clusters of size >= 2) ----------------------
