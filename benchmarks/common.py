@@ -26,6 +26,69 @@ def section(title: str):
     print(f"\n# --- {title} ---")
 
 
+def parse_derived(derived: str) -> dict:
+    """Parse a ``k=v;k=v`` derived field into {k: v-string}."""
+    out = {}
+    for part in (derived or "").split(";"):
+        if "=" in part:
+            k, v = part.split("=", 1)
+            out[k.strip()] = v.strip()
+    return out
+
+
+def compare_rows(baseline: list[dict], fresh,
+                 slowdown: float = 2.0,
+                 min_base_us: float = 1000.0) -> list[str]:
+    """Diff a fresh benchmark run against a committed baseline.
+
+    Returns failure strings for
+
+    * any fresh row whose derived ``drift`` field is nonzero or whose
+      ``same_clusters`` field is not 1 (correctness canaries — checked
+      whether or not the row exists in the baseline),
+    * any baseline row missing from the fresh run (a silently
+      disappearing canary must not pass the gate), and
+    * any row present in both runs whose wall time regressed by more
+      than ``slowdown``x (rows under ``min_base_us`` in the baseline
+      are skipped — they are dominated by timer noise — as are
+      ``*_saved`` rows, whose value is a benefit, not a cost).
+
+    ``fresh`` is a list of ``(name, us_per_call, derived)`` tuples (the
+    ``ROWS`` accumulator) or baseline-shaped dicts.
+    """
+    fresh_rows = [
+        (r["name"], r["us_per_call"], r.get("derived", ""))
+        if isinstance(r, dict) else tuple(r)
+        for r in fresh
+    ]
+    base_by_name = {r["name"]: r for r in baseline}
+    failures = []
+    fresh_names = {name for name, _, _ in fresh_rows}
+    for name in base_by_name:
+        if name not in fresh_names:
+            failures.append(f"{name}: present in baseline but missing "
+                            f"from the fresh run")
+    for name, us, derived in fresh_rows:
+        d = parse_derived(derived)
+        if "drift" in d and float(d["drift"]) != 0:
+            failures.append(f"{name}: drift={d['drift']} (expected 0)")
+        if "same_clusters" in d and float(d["same_clusters"]) != 1:
+            failures.append(
+                f"{name}: same_clusters={d['same_clusters']} "
+                f"(expected 1)")
+        base = base_by_name.get(name)
+        if base is None or base["us_per_call"] < min_base_us \
+                or name.endswith("_saved"):
+            continue
+        ratio = us / base["us_per_call"]
+        if ratio > slowdown:
+            failures.append(
+                f"{name}: {us:.0f}us vs baseline "
+                f"{base['us_per_call']:.0f}us ({ratio:.2f}x > "
+                f"{slowdown:.1f}x)")
+    return failures
+
+
 def write_json(path: str):
     """Dump every emitted row as JSON (the ``BENCH_*.json`` artifact)."""
     import json

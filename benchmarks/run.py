@@ -5,6 +5,7 @@ Prints ``name,us_per_call,derived`` CSV rows (the harness contract).
   PYTHONPATH=src python -m benchmarks.run            # everything
   PYTHONPATH=src python -m benchmarks.run --only accuracy,kernels
   PYTHONPATH=src python -m benchmarks.run --smoke --json BENCH_smoke.json
+  PYTHONPATH=src python -m benchmarks.run --compare BENCH_smoke.json
 """
 from __future__ import annotations
 
@@ -29,6 +30,13 @@ def main(argv=None) -> None:
     ap.add_argument("--json", default=None,
                     help="also write emitted rows to this JSON file "
                          "(the BENCH_*.json perf-trajectory artifact)")
+    ap.add_argument("--compare", default=None, metavar="BASELINE",
+                    help="run the smoke set and diff it against a "
+                         "committed BENCH_*.json baseline: exits "
+                         "nonzero on a >2x slowdown of any comparable "
+                         "row or on any derived drift != 0 / "
+                         "same_clusters != 1 field (the bench-smoke "
+                         "CI regression gate)")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
 
@@ -38,9 +46,16 @@ def main(argv=None) -> None:
     print("name,us_per_call,derived")
     t0 = time.perf_counter()
 
-    if args.smoke:
+    if args.smoke or args.compare:
+        import json
+
         from benchmarks import designs
-        from benchmarks.common import write_json
+        from benchmarks.common import ROWS, compare_rows, write_json
+
+        baseline = None
+        if args.compare:
+            with open(args.compare) as f:
+                baseline = json.load(f)
 
         designs.run_sharded(n_notes=96, n_dups=32)
         designs.run_band_group_overlap(n_notes=96, n_dups=32)
@@ -49,6 +64,15 @@ def main(argv=None) -> None:
         write_json(args.json or os.path.join(REPO_ROOT,
                                              "BENCH_smoke.json"))
         print(f"\n# benchmarks completed in {time.perf_counter()-t0:.1f}s")
+        if baseline is not None:
+            failures = compare_rows(baseline, ROWS)
+            if failures:
+                print(f"# REGRESSION vs {args.compare}:")
+                for msg in failures:
+                    print(f"#   {msg}")
+                sys.exit(1)
+            print(f"# no regression vs {args.compare} "
+                  f"({len(baseline)} baseline rows)")
         return
 
     if want("accuracy"):

@@ -1,0 +1,64 @@
+"""Incremental ingest demo: a chunked corpus through one DedupSession.
+
+Feeds a clinical-note-like corpus chunk by chunk into a single
+``DedupSession`` (the long-lived state: one union-find, one verified-sim
+cache, global doc-id allocation, retained signatures + band index),
+printing the cumulative snapshot after every chunk — and then checks
+that the final snapshot equals one-shot host clustering of the whole
+corpus, with bit-identical per-edge similarity estimates.
+
+  PYTHONPATH=src python examples/incremental_ingest.py
+  PYTHONPATH=src python examples/incremental_ingest.py --backend streaming
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.core import DedupConfig, DedupPipeline, DedupSession
+from repro.data import inject_near_duplicates, make_i2b2_like
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--notes", type=int, default=120)
+    ap.add_argument("--dups", type=int, default=60)
+    ap.add_argument("--chunks", type=int, default=5)
+    ap.add_argument("--backend", default="host",
+                    choices=("host", "streaming"),
+                    help="session backend (the sharded backend needs a "
+                         "multi-device mesh; see launch.dedup --sharded "
+                         "--steps N)")
+    args = ap.parse_args(argv)
+
+    notes = make_i2b2_like(args.notes, seed=0)
+    notes, _ = inject_near_duplicates(notes, args.dups, seed=1)
+    cfg = DedupConfig(exact_verification=False)
+    print(f"corpus: {len(notes)} notes, ingested in {args.chunks} chunks "
+          f"({args.backend} backend)\n")
+
+    sess = DedupSession(cfg, backend=args.backend)
+    bounds = np.linspace(0, len(notes), args.chunks + 1).astype(int)
+    for snap in sess.ingest_stream(
+            notes[a:b] for a, b in zip(bounds, bounds[1:])):
+        print(f"after {snap.n_docs:4d} docs: "
+              f"{snap.num_clusters:3d} clusters, "
+              f"{snap.num_duplicates:3d} duplicates, "
+              f"{snap.stats.pairs_evaluated:4d} pairs verified "
+              f"({snap.stats.pairs_excluded} excluded, "
+              f"{snap.stats.verify_pairs_per_second:.0f} pairs/s)")
+
+    # The point of the demo: incremental == one-shot, exactly.
+    ref = DedupPipeline(cfg).run(notes)
+    np.testing.assert_array_equal(snap.labels, ref.labels)
+    ref_sims = {(a, b): s for a, b, s in ref.pairs}
+    shared = [(a, b, s) for a, b, s in snap.pairs if (a, b) in ref_sims]
+    assert shared and all(s == ref_sims[(a, b)] for a, b, s in shared)
+    print(f"\nfinal snapshot == one-shot host clustering "
+          f"({ref.num_clusters} clusters, {len(shared)} shared verified "
+          f"pairs bit-identical)")
+
+
+if __name__ == "__main__":
+    main()

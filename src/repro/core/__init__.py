@@ -7,7 +7,9 @@ The dedup hot path is a staged engine (``engine.cluster_source``)::
 
 with three thin drivers: ``DedupPipeline`` (host, in-memory),
 ``StreamingDedup`` (out-of-core band store) and ``dist_lsh`` (sharded,
-on-device).
+on-device) — all adapters over ``DedupSession`` (``session.py``), the
+long-lived incremental-ingest layer (one accumulator, global doc-id
+allocation, retained signatures; chunked corpora cluster across steps).
 """
 from repro.core.pipeline import DedupConfig, DedupPipeline, DedupResult
 from repro.core.lsh import LSHParams, candidate_probability
@@ -15,10 +17,18 @@ from repro.core.unionfind import ThresholdUnionFind, connected_components
 from repro.core.dist_lsh import (
     DistLSHConfig,
     ShardedClusterResult,
+    StepFeed,
     cluster_step_output,
     docs_mesh,
+    feed_step_groups,
     make_dedup_step,
     make_streamed_dedup_step,
+)
+from repro.core.session import (
+    BandIndex,
+    ClusterSnapshot,
+    DedupSession,
+    DocIdAllocator,
 )
 from repro.core.candidates import (
     BandMatrixSource,
@@ -48,10 +58,16 @@ __all__ = [
     "connected_components",
     "DistLSHConfig",
     "ShardedClusterResult",
+    "StepFeed",
     "cluster_step_output",
+    "feed_step_groups",
     "make_dedup_step",
     "make_streamed_dedup_step",
     "docs_mesh",
+    "BandIndex",
+    "ClusterSnapshot",
+    "DedupSession",
+    "DocIdAllocator",
     "BandMatrixSource",
     "CandidateSource",
     "EdgeStreamSource",

@@ -104,17 +104,25 @@ class CandidateSource(Protocol):
 
 
 class BandMatrixSource:
-    """In-memory (D, b, 2) band matrix (the host-pipeline source)."""
+    """In-memory (D, b, 2) band matrix (the host-pipeline source).
 
-    def __init__(self, bands: np.ndarray):
+    ``doc_id_base`` maps row i to global doc id ``doc_id_base + i`` —
+    the chunk-ingest convention of ``core.session.DedupSession`` (a
+    chunk's band matrix is row-local but clusters into a global
+    union-find), matching ``doc_offsets``/``doc_id_base`` elsewhere.
+    """
+
+    def __init__(self, bands: np.ndarray, doc_id_base: int = 0):
         bands = np.asarray(bands)
         assert bands.ndim == 3 and bands.shape[-1] == 2, bands.shape
         self.bands = bands
-        self._doc_ids = np.arange(bands.shape[0], dtype=np.int64)
+        self.doc_id_base = int(doc_id_base)
+        self._doc_ids = self.doc_id_base + np.arange(
+            bands.shape[0], dtype=np.int64)
 
     @property
     def num_docs(self) -> int:
-        return self.bands.shape[0]
+        return self.doc_id_base + self.bands.shape[0]
 
     @property
     def num_bands(self) -> int:

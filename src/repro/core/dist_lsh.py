@@ -25,11 +25,14 @@ Maps the paper's database designs onto a TPU pod (DESIGN.md §2):
      (numpy / jnp / ``kernels.sigjaccard`` backends) ->
      ``engine.cluster_source`` -> ``ThresholdUnionFind``) or resident
      on the accelerator (``stage2="device"``: the
-     ``kernels.sigjaccard.masked_indexed_pair_estimate`` fused gather +
-     full-M-estimate kernel runs under the same shard_map over each
-     device's own signature shard, so same-shard edges arrive at the
-     merge already fully scored and ``verify.DeviceScoredEdgeVerifier``
-     is a pass-through that re-scores only cross-shard stragglers).
+     ``kernels.sigjaccard.masked_indexed_pair_counts`` fused gather +
+     full-M kernel runs under the same shard_map over each device's own
+     signature shard; cross-shard edges are scored there too by
+     exchanging a bounded per-device buffer of straggler signature rows
+     inside the same collective round — see ``sig_row_capacity`` — so
+     edges arrive at the merge already fully scored and
+     ``verify.DeviceScoredEdgeVerifier`` is a pass-through whose host
+     re-score path handles only row-buffer *overflow*).
      Thresholds, estimator semantics, exclusion stats, and union-find
      semantics are identical to the host and streaming paths either way.
 
@@ -87,6 +90,7 @@ class DistLSHConfig:
     m_chunk: int = 16
     band_groups: int = 1        # G bounded buffers of b/G bands each
     stage2: str = "host"        # full-signature verify: "host" | "device"
+    sig_row_capacity: int = 1024  # cross-shard published-row buffer (0: off)
 
     @property
     def num_bands(self) -> int:
@@ -238,12 +242,16 @@ def make_streamed_dedup_step(cfg: DistLSHConfig, mesh: Mesh, *,
     host merge of group g with the device shuffle of group g+1.
 
     With ``stage2="device"`` each group additionally carries
-    ``device_sims``/``device_covered``: full-M agreement estimates
-    computed on the accelerator by the ``kernels.sigjaccard`` fused
-    gather+estimate kernel under shard_map — each device scores the
-    gathered group edges whose two endpoints fall in its own signature
-    shard and a psum combines the disjoint contributions.  Cross-shard
-    edges stay uncovered and are re-scored on the host
+    ``device_match_counts``/``device_covered``/``row_overflow``: full-M
+    agreement counts computed on the accelerator by the
+    ``kernels.sigjaccard`` fused kernels under shard_map — each device
+    scores the gathered group edges whose two endpoints fall in its own
+    signature shard, cross-shard edges are scored by the head
+    endpoint's owner against the member row exchanged through a bounded
+    per-device row buffer (``cfg.sig_row_capacity``; overflow counted),
+    and a psum combines the disjoint contributions.  Only edges whose
+    member row overflowed the exchange buffer stay uncovered and fall
+    back to the host re-score path
     (``verify.DeviceScoredEdgeVerifier`` stragglers).
 
     ``doc_offsets[i]`` is the global doc id of device i's first row;
@@ -305,18 +313,68 @@ def make_streamed_dedup_step(cfg: DistLSHConfig, mesh: Mesh, *,
         off = doc_offset[0].astype(jnp.int32)
         a_loc = flat[:, 0] - off
         b_loc = flat[:, 1] - off
-        local = (all_emask.reshape(-1)
-                 & (a_loc >= 0) & (a_loc < d_loc)
-                 & (b_loc >= 0) & (b_loc < d_loc))
+        mask_flat = all_emask.reshape(-1)
+        a_in = (a_loc >= 0) & (a_loc < d_loc)
+        b_in = (b_loc >= 0) & (b_loc < d_loc)
+        local = mask_flat & a_in & b_in
         counts = sigjaccard.masked_indexed_pair_counts(
             sig, a_loc, b_loc, local)
+        covered = local
+        row_ovf = jnp.zeros((1,), dtype=jnp.int32)
+        rc = cfg.sig_row_capacity
+        if n_dev > 1 and rc > 0:
+            # Cross-shard straggler scoring: exchange a BOUNDED buffer
+            # of signature rows inside the same collective round so
+            # cross-shard edges are scored on-accelerator too.  An edge
+            # (head, member) with endpoints on different shards is
+            # scored by the HEAD's owner, which needs the member's row:
+            # each device publishes the (deduplicated) member rows it
+            # owns for head-remote edges, capacity ``sig_row_capacity``
+            # with overflow counted — overflowed rows simply leave those
+            # edges uncovered, and the host merge re-scores exactly that
+            # overflow remainder (``DeviceScoredEdgeVerifier``).
+            publish = mask_flat & b_in & (~a_in)
+            need = jnp.where(publish, b_loc, d_loc)
+            s = jnp.sort(need)
+            uniq = jnp.concatenate(
+                [jnp.array([True]), s[1:] != s[:-1]]) & (s < d_loc)
+            pos = jnp.cumsum(uniq.astype(jnp.int32)) - 1
+            n_pub = jnp.sum(uniq)
+            dst = jnp.where(uniq & (pos < rc), pos, rc)  # OOB drop
+            row_ids = jnp.full((rc,), INVALID, dtype=jnp.uint32)
+            rows = jnp.zeros((rc, sig.shape[1]), dtype=jnp.uint32)
+            glob = doc_offset[0].astype(jnp.uint32) + s.astype(jnp.uint32)
+            row_ids = row_ids.at[dst].set(glob, mode="drop")
+            rows = rows.at[dst].set(
+                sig[jnp.clip(s, 0, d_loc - 1)].astype(jnp.uint32),
+                mode="drop")
+            row_ovf = jnp.maximum(n_pub - rc, 0).astype(jnp.int32)[None]
+            tbl_ids = jax.lax.all_gather(
+                row_ids, axis, axis=0, tiled=False).reshape(-1)
+            tbl_rows = jax.lax.all_gather(
+                rows, axis, axis=0, tiled=False).reshape(-1, sig.shape[1])
+            # Score the cross edges whose head lives in my shard: look
+            # the member row up in the exchanged table by global id
+            # (published ids are unique — one owner, deduplicated).
+            score_mine = mask_flat & a_in & (~b_in)
+            order = jnp.argsort(tbl_ids)
+            sorted_ids = tbl_ids[order]
+            member_glob = all_edges.reshape(-1, 2)[:, 1]
+            pos_b = jnp.clip(jnp.searchsorted(sorted_ids, member_glob),
+                             0, sorted_ids.shape[0] - 1)
+            hit = (sorted_ids[pos_b] == member_glob) & score_mine
+            a_rows = sig[jnp.clip(a_loc, 0, d_loc - 1)]
+            b_rows = tbl_rows[order[pos_b]]
+            counts = counts + sigjaccard.masked_pair_counts(
+                a_rows, b_rows, hit)
+            covered = covered | hit
         dev_counts = jax.lax.psum(counts, axis)
-        dev_cov = jax.lax.psum(local.astype(jnp.int32), axis) > 0
-        return buf, buf_sim, emask, stats, dev_counts, dev_cov
+        dev_cov = jax.lax.psum(covered.astype(jnp.int32), axis) > 0
+        return buf, buf_sim, emask, stats, dev_counts, dev_cov, row_ovf
 
     group_out_specs = (P(axis), P(axis), P(axis), P(axis))
     if stage2 == "device":
-        group_out_specs = group_out_specs + (P(), P())
+        group_out_specs = group_out_specs + (P(), P(), P(axis))
     group_step = jax.jit(shard_map_compat(
         local_group,
         mesh=mesh,
@@ -347,6 +405,7 @@ def make_streamed_dedup_step(cfg: DistLSHConfig, mesh: Mesh, *,
             if stage2 == "device":
                 gout["device_match_counts"] = outs[4]
                 gout["device_covered"] = outs[5]
+                gout["row_overflow"] = outs[6]
             groups.append(gout)
         return {"sig": sig, "groups": groups, "stage2": stage2}
 
@@ -413,9 +472,138 @@ class ShardedClusterResult:
     group_stats: list = field(default_factory=list)  # per-band-group
     device_scored: int = 0  # stage-2 pairs served from device scores
     host_rescored: int = 0  # stage-2 pairs re-scored on the host
+    row_overflow: int = 0   # cross-shard row-buffer overflow (stage2=device)
 
     def labels(self) -> np.ndarray:
         return self.uf.components()
+
+
+@dataclass
+class StepFeed:
+    """Outcome of ``feed_step_groups`` (one step fed into an accumulator)."""
+
+    num_edges: int
+    overflow: int
+    row_overflow: int
+    device_stats: np.ndarray
+    group_stats: list
+
+
+def _resolve_stream(stream: bool | None) -> bool:
+    """Measured-win heuristic for the overlapped band-group merge.
+
+    A committed ``BENCH_smoke.json`` once showed the overlapped merge
+    LOSING to the serialized one (``saved_us=-58703``); re-measuring
+    with best-of-N timing (single-shot smoke timings on a shared 2-vCPU
+    runner swing by tens of ms) shows the overlap reliably *winning*
+    ~20-25% even on a 2-core CPU host — the merge is numpy/GIL-bound
+    while the shuffle runs on XLA's own thread pool, so the two really
+    do overlap.  The auto policy therefore streams everywhere except
+    the one configuration that cannot overlap by construction: a
+    single-core host running the CPU backend (device compute and host
+    merge share the only core, so blocking up front is free and avoids
+    per-group sync round-trips).  ``stream=True/False`` forces either
+    mode — results are identical — and
+    ``benchmarks/designs.run_band_group_overlap`` reports ``saved_us``
+    for both forced modes plus this auto policy.
+    """
+    if stream is not None:
+        return bool(stream)
+    import os
+
+    if jax.default_backend() != "cpu":
+        return True
+    return (os.cpu_count() or 1) > 1
+
+
+def feed_step_groups(
+    acc,
+    out: dict,
+    cfg: DistLSHConfig,
+    *,
+    num_docs: int,
+    edge_offset: int = 0,
+    verifier=None,
+    stream: bool | None = None,
+) -> StepFeed:
+    """Feed one (streamed) dedup-step output into a ``ClusterAccumulator``.
+
+    The single home of the sharded host-merge plumbing, shared by
+    ``cluster_step_output`` (fresh per-step accumulator, chunk-local
+    ids) and ``session.DedupSession`` (one long-lived accumulator,
+    global ids): per band-group, materialize the bounded edge buffer
+    (in stream mode this blocks on THAT group's shuffle only, so the
+    merge of group g overlaps the shuffle of group g+1), register
+    device-computed stage-2 scores with the verifier, and feed the
+    group through the accumulator.  Edge ids are shifted by
+    ``edge_offset`` and range-filtered to ``[0, num_docs)``.
+
+    Returns the step's edge/overflow accounting; the overflow fallback
+    stays with the caller (it needs the right band source for the ids
+    in play).
+    """
+    from repro.core.candidates import ShardedEdgeSource
+
+    groups = out.get("groups")
+    if groups is None:
+        # End-of-step view: one (G*n_dev, 3) stats array whose rows are
+        # the (group, device) buffers; treat it as a single group.
+        groups = [out]
+    device_scored = out.get("stage2") == "device"
+    if not _resolve_stream(stream):
+        jax.block_until_ready([g["edges"] for g in groups])
+    m = out["sig"].shape[1]
+
+    num_edges = 0
+    row_overflow = 0
+    group_stats = []
+    device_stats_parts = []
+    for g_out in groups:
+        # Materializing this group's buffers blocks on ITS shuffle only;
+        # later groups keep running on the device meanwhile.  Ids
+        # outside [0, num_docs) after the edge_offset shift (padding,
+        # INVALID slots, other chunks' docs) are dropped by the
+        # source's range filter.
+        g_stats = np.asarray(g_out["stats"])
+        device_stats_parts.append(g_stats)
+        source = ShardedEdgeSource.from_device_buffers(
+            g_out["edges"], g_out["edge_mask"], num_docs=num_docs,
+            num_shards=g_stats.shape[0], edge_offset=edge_offset)
+        if device_scored and hasattr(verifier, "add_scores"):
+            # Host-side /M of the device match counts: numpy float32
+            # division is correctly rounded, so these scores are
+            # bit-identical to the host estimator.  ``covered`` spans
+            # same-shard edges plus the cross-shard edges scored via
+            # the exchanged row buffers; only row-buffer overflow is
+            # left for the host re-score path.
+            edges = np.asarray(g_out["edges"]).astype(np.int64) - int(
+                edge_offset)
+            mask = np.asarray(g_out["edge_mask"])
+            sims = (np.asarray(g_out["device_match_counts"])
+                    / np.float32(m))
+            covered = np.asarray(g_out["device_covered"])
+            reg = (mask & covered
+                   & (edges >= 0).all(axis=-1)
+                   & (edges < num_docs).all(axis=-1))
+            verifier.add_scores(edges[reg], sims[reg])
+            row_overflow += int(
+                np.asarray(g_out.get("row_overflow", 0)).sum())
+        num_edges += source.num_edges
+        group_stats.append(acc.feed(source, verifier=verifier))
+
+    if device_scored and hasattr(verifier, "clear_scores"):
+        # Registered scores are dead once their edges have been fed
+        # (sim cache / co-clustering make re-lookup impossible); keep
+        # the long-lived session registry from growing per step.
+        verifier.clear_scores()
+
+    device_stats = np.concatenate(device_stats_parts)
+    return StepFeed(
+        num_edges=num_edges,
+        overflow=int(device_stats[:, 2].sum()),
+        row_overflow=row_overflow,
+        device_stats=device_stats,
+        group_stats=group_stats)
 
 
 def cluster_step_output(
@@ -429,6 +617,7 @@ def cluster_step_output(
     doc_id_base: int = 0,
     overflow_fallback: bool = True,
     batch_pairs: int = 8192,
+    stream: bool | None = None,
 ) -> ShardedClusterResult:
     """Stage 2 of the sharded path: batched full-signature verify + merge.
 
@@ -466,8 +655,18 @@ def cluster_step_output(
     (``BandMatrixSource`` over ``lsh.band_values``) and accumulates them
     through the SAME engine into the same union-find, so no candidate
     is silently dropped.
+
+    ``stream`` controls whether groups are consumed lazily (overlapped
+    merge) or after blocking on every buffer; the default defers to the
+    measured-win heuristic (see ``_resolve_stream``) — results are
+    identical either way.
+
+    This is the one-shot adapter over the session-grade merge plumbing
+    (``feed_step_groups``); incremental multi-step ingest goes through
+    ``core.session.DedupSession`` instead, which feeds many step
+    outputs into ONE accumulator.
     """
-    from repro.core.candidates import BandMatrixSource, ShardedEdgeSource
+    from repro.core.candidates import BandMatrixSource
     from repro.core.engine import ClusterAccumulator
     from repro.core.verify import (DeviceScoredEdgeVerifier,
                                    ShardedEdgeVerifier)
@@ -475,67 +674,30 @@ def cluster_step_output(
     sig = np.asarray(out["sig"])
     num_docs = sig.shape[0] if num_docs is None else int(num_docs)
 
-    groups = out.get("groups")
-    if groups is None:
-        # End-of-step view: one (G*n_dev, 3) stats array whose rows are
-        # the (group, device) buffers; treat it as a single group.
-        groups = [out]
-    device_scored = out.get("stage2") == "device"
-
-    if device_scored:
-        verifier = DeviceScoredEdgeVerifier(
-            sig[:num_docs], backend=backend, batch_pairs=batch_pairs)
-    else:
-        verifier = ShardedEdgeVerifier(
-            sig[:num_docs], backend=backend, batch_pairs=batch_pairs)
+    cls = (DeviceScoredEdgeVerifier if out.get("stage2") == "device"
+           else ShardedEdgeVerifier)
+    verifier = cls(sig[:num_docs], backend=backend,
+                   batch_pairs=batch_pairs)
     acc = ClusterAccumulator(
         num_docs, verifier, cfg.edge_threshold, tree_threshold,
         batch=batch)
 
-    num_edges = 0
-    group_stats = []
-    device_stats_parts = []
-    for g_out in groups:
-        # Materializing this group's buffers blocks on ITS shuffle only;
-        # later groups keep running on the device meanwhile.  Ids
-        # outside [0, num_docs) after the doc_id_base shift (padding,
-        # INVALID slots, other chunks' docs) are dropped by the
-        # source's range filter.
-        g_stats = np.asarray(g_out["stats"])
-        device_stats_parts.append(g_stats)
-        source = ShardedEdgeSource.from_device_buffers(
-            g_out["edges"], g_out["edge_mask"], num_docs=num_docs,
-            num_shards=g_stats.shape[0], edge_offset=doc_id_base)
-        if device_scored:
-            # Host-side /M of the device match counts: numpy float32
-            # division is correctly rounded, so these scores are
-            # bit-identical to the host estimator's mean.
-            edges = np.asarray(g_out["edges"]).astype(np.int64) - int(
-                doc_id_base)
-            mask = np.asarray(g_out["edge_mask"])
-            sims = (np.asarray(g_out["device_match_counts"])
-                    / np.float32(sig.shape[1]))
-            covered = np.asarray(g_out["device_covered"])
-            reg = (mask & covered
-                   & (edges >= 0).all(axis=-1)
-                   & (edges < num_docs).all(axis=-1))
-            verifier.add_scores(edges[reg], sims[reg])
-        num_edges += source.num_edges
-        group_stats.append(acc.feed(source))
-
-    device_stats = np.concatenate(device_stats_parts)
-    overflow = int(device_stats[:, 2].sum())
+    feed = feed_step_groups(
+        acc, out, cfg, num_docs=num_docs, edge_offset=doc_id_base,
+        verifier=verifier, stream=stream)
 
     retried = False
-    if overflow > 0 and overflow_fallback:
+    if feed.overflow > 0 and overflow_fallback:
         retried = True
         bands = np.asarray(
             band_values(jnp.asarray(sig[:num_docs]), cfg.rows_per_band))
         acc.feed(BandMatrixSource(bands))
 
     return ShardedClusterResult(
-        uf=acc.uf, stats=acc.stats, pairs=acc.pairs, num_edges=num_edges,
-        overflow=overflow, retried=retried, device_stats=device_stats,
-        group_stats=group_stats,
+        uf=acc.uf, stats=acc.stats, pairs=acc.pairs,
+        num_edges=feed.num_edges, overflow=feed.overflow,
+        retried=retried, device_stats=feed.device_stats,
+        group_stats=feed.group_stats,
         device_scored=getattr(verifier, "n_passthrough", 0),
-        host_rescored=getattr(verifier, "n_rescored", 0))
+        host_rescored=getattr(verifier, "n_rescored", 0),
+        row_overflow=feed.row_overflow)

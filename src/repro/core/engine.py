@@ -88,6 +88,15 @@ class ClusterAccumulator:
 
     ``stats`` holds the totals across every feed; each ``feed`` call
     also returns that source's own ``ClusterStats``.
+
+    ``grow`` extends the union-find to cover newly allocated doc ids —
+    the incremental-ingest mechanism behind ``core.session.DedupSession``
+    (docs arrive chunk by chunk, one accumulator clusters them all) —
+    and ``feed(source, verifier=...)`` lets one accumulator mix
+    verification strategies per feed (e.g. device-registered scores for
+    the sharded step's own edges, the plain host estimator for
+    cross-step candidates against retained signatures) while the
+    verified-sim cache and union-find stay shared.
     """
 
     def __init__(
@@ -130,13 +139,29 @@ class ClusterAccumulator:
         """Every evaluated (a, b, sim), sorted, across all feeds."""
         return [(a, b, s) for (a, b), s in sorted(self.evaluated.items())]
 
-    def feed(self, source: CandidateSource) -> ClusterStats:
-        """Cluster one source into the accumulator; returns its stats."""
+    @property
+    def num_docs(self) -> int:
+        return len(self.uf.parent)
+
+    def grow(self, num_docs: int) -> None:
+        """Extend the union-find to cover ``num_docs`` ids (no-op if it
+        already does).  New ids start as singletons."""
+        self.uf.grow(num_docs)
+
+    def feed(self, source: CandidateSource,
+             verifier=None) -> ClusterStats:
+        """Cluster one source into the accumulator; returns its stats.
+
+        ``verifier`` overrides the accumulator's verifier for THIS feed
+        only (same shared sim cache / union-find / stats).
+        """
         if len(self.uf.parent) < source.num_docs:
             raise ValueError(
                 f"accumulator covers {len(self.uf.parent)} docs, source "
                 f"has {source.num_docs}")
-        uf, verifier = self.uf, self.verifier
+        uf = self.uf
+        verifier = (self.verifier if verifier is None
+                    else as_verifier(verifier))
         evaluated = self.evaluated
         # Snapshot the verifier's lifetime counters so stats report THIS
         # feed's batches/seconds even when the verifier instance is

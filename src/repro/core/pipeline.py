@@ -29,8 +29,7 @@ import jax.numpy as jnp
 from repro.core import lsh
 from repro.core import minhash
 from repro.core import shingle
-from repro.core.candidates import BandMatrixSource
-from repro.core.engine import ClusterStats, cluster_source
+from repro.core.engine import ClusterStats
 from repro.core.unionfind import ThresholdUnionFind
 from repro.core.verify import ExactJaccardVerifier, SignatureVerifier
 
@@ -130,6 +129,15 @@ class DedupPipeline:
     # -- end to end ----------------------------------------------------------
 
     def run(self, texts: list[str]) -> DedupResult:
+        """One-shot host dedup — a single-chunk ``DedupSession`` ingest.
+
+        The session layer (``core.session``) owns the engine wiring;
+        this adapter keeps the paper-shaped stage timings and the
+        ``DedupResult`` contract (including the explicit verifier
+        choice of ``make_verifier``).
+        """
+        from repro.core.session import DedupSession
+
         cfg = self.config
         timings = {}
         t0 = time.perf_counter()
@@ -149,18 +157,13 @@ class DedupPipeline:
         timings["verifier_build_s"] = time.perf_counter() - t0
 
         t0 = time.perf_counter()
-        uf, stats, pairs = cluster_source(
-            BandMatrixSource(bands),
-            verifier,
-            cfg.edge_threshold,
-            cfg.tree_threshold,
-            use_disjoint_sets=cfg.use_disjoint_sets,
-            batch=cfg.verify_batch,
-        )
+        sess = DedupSession(cfg, backend="host", verifier=verifier)
+        snap = sess._merge_precomputed(token_lists, sig, bands)
+        uf, stats, pairs = snap.uf, snap.stats, snap.pairs
         timings["cluster_s"] = time.perf_counter() - t0
         timings["verify_s"] = stats.verify_seconds
 
-        labels = uf.components()
+        labels = snap.labels
         keep = np.zeros(len(texts), dtype=bool)
         seen: set[int] = set()
         for i, r in enumerate(labels):

@@ -1,0 +1,650 @@
+"""Incremental multi-step ingest: one ``DedupSession`` over every path.
+
+The paper's pipeline is batch-shaped (shingle -> MinHash -> LSH ->
+verify -> disjoint sets) but the corpus it targets is continuously fed:
+10M+ notes arrive in chunks.  ``DedupSession`` owns the long-lived
+clustering state —
+
+* ONE ``engine.ClusterAccumulator`` (union-find + verified-sim cache +
+  cumulative ``ClusterStats``),
+* global doc-id allocation (``DocIdAllocator`` — the single home of the
+  ``doc_id_base`` / ``doc_offsets`` arithmetic the three drivers used
+  to re-implement by hand),
+* retained per-doc signature rows (one growing verifier), and
+* a retained band index for cross-step candidate generation,
+
+and exposes host, streaming, and sharded **backends** behind the same
+``ingest(chunk) -> ClusterSnapshot`` API (DESIGN.md §6).  Each chunk
+contributes two candidate families:
+
+* *within-chunk*: the backend's native source — host band matrix,
+  Design-2 store scan, or the sharded step's prescreened edge buffers;
+* *cross-step*: band collisions of the chunk's band values against the
+  retained index (same doc re-shingled, near-dups split across chunks)
+  become explicit edges verified through the same engine.
+
+The candidate-pair SET over N chunks equals the one-shot run over the
+concatenated corpus (band collision is chunk-independent); only the
+feed order differs, and ``ClusterAccumulator`` is order-invariant over
+an edge set (pinned by the hypothesis test in
+``tests/test_staged_engine.py``), so snapshot-after-every-chunk ends at
+the one-shot clustering with bit-identical per-edge sims.
+
+The sharded backend feeds several ``make_streamed_dedup_step``
+invocations into the one accumulator; ``ingest_stream`` keeps a
+one-chunk lookahead so the host merge of step t overlaps the device
+shuffle of step t+1 (the same overlap the band groups give WITHIN a
+step, lifted across steps).
+
+The historical drivers are thin adapters over this layer:
+``pipeline.DedupPipeline.run`` is a one-shot host ingest,
+``streaming.StreamingDedup.cluster`` snapshots a session over its own
+band store, and ``dist_lsh.cluster_step_output`` is the one-step
+sharded merge (both call ``dist_lsh.feed_step_groups``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Iterable, Iterator
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import lsh, minhash, shingle
+from repro.core.candidates import BandMatrixSource, ShardedEdgeSource
+from repro.core.engine import ClusterAccumulator, ClusterStats
+from repro.core.pipeline import DedupConfig
+from repro.core.unionfind import ThresholdUnionFind
+from repro.core.verify import (
+    BatchVerifier,
+    DeviceScoredEdgeVerifier,
+    ExactJaccardVerifier,
+    SignatureVerifier,
+    as_verifier,
+)
+
+BACKENDS = ("host", "streaming", "sharded")
+
+
+class DocIdAllocator:
+    """Global doc-id allocation for chunked ingest (one home for the
+    ``doc_id_base`` arithmetic).
+
+    ``allocate(n)`` hands out the next contiguous block and returns its
+    base; ``device_offsets(base, d_loc, n_dev)`` is the per-device
+    ``doc_offsets`` convention of the sharded step (device i's first
+    row is ``base + i * d_loc``).  Padding rows a backend appends for
+    divisibility live ABOVE the allocated block (ids >= base + n), so
+    they can never alias a later chunk's ids — they are range-filtered
+    before any of them reaches the engine.
+    """
+
+    def __init__(self, base: int = 0):
+        self.base = int(base)
+        self.next = int(base)
+
+    @property
+    def n_docs(self) -> int:
+        """Exclusive upper bound of allocated ids (gap ids included)."""
+        return self.next
+
+    def allocate(self, n: int) -> int:
+        base = self.next
+        self.next += int(n)
+        return base
+
+    @staticmethod
+    def device_offsets(base: int, d_loc: int, n_dev: int) -> np.ndarray:
+        return np.uint32(base) + np.uint32(d_loc) * np.arange(
+            n_dev, dtype=np.uint32)
+
+
+class BandIndex:
+    """Retained band values of every ingested doc, keyed for collision.
+
+    ``match_then_insert`` is the cross-step candidate generator: the
+    chunk's band values are looked up against the retained state —
+    every (band, value) hit against an EARLIER chunk emits an
+    (old_doc, new_doc) edge — and then inserted, so a later chunk can
+    collide with this one.  Same-chunk collisions are never emitted
+    (the backend's within-chunk source owns those); old-vs-old pairs
+    were emitted when the old chunk arrived.
+    """
+
+    def __init__(self, num_bands: int):
+        self._maps: list[dict[tuple[int, int], list[int]]] = [
+            {} for _ in range(num_bands)]
+
+    @property
+    def num_bands(self) -> int:
+        return len(self._maps)
+
+    def match_then_insert(self, bands: np.ndarray,
+                          doc_id_base: int) -> np.ndarray:
+        """(C, b, 2) chunk bands -> (E, 2) int64 cross-step edges."""
+        bands = np.asarray(bands)
+        if bands.ndim != 3 or bands.shape[1] != self.num_bands:
+            raise ValueError(
+                f"expected (C, {self.num_bands}, 2) bands, "
+                f"got {bands.shape}")
+        edges: list[tuple[int, int]] = []
+        for j, m in enumerate(self._maps):
+            col = bands[:, j, :]
+            for i in range(len(col)):
+                key = (int(col[i, 0]), int(col[i, 1]))
+                new_id = doc_id_base + i
+                olds = m.get(key)
+                if olds is not None:
+                    edges.extend((old, new_id) for old in olds
+                                 if old < doc_id_base)
+                    olds.append(new_id)
+                else:
+                    m[key] = [new_id]
+        if not edges:
+            return np.zeros((0, 2), dtype=np.int64)
+        return np.array(edges, dtype=np.int64)
+
+
+@dataclass
+class ClusterSnapshot:
+    """Cluster state after an ``ingest`` call (cumulative, global ids)."""
+
+    n_docs: int                 # docs ingested so far (id upper bound)
+    labels: np.ndarray          # (n_docs,) cluster root per doc
+    stats: ClusterStats         # cumulative engine counters
+    pairs: list                 # every evaluated (a, b, sim) so far
+    uf: ThresholdUnionFind      # the live union-find (not a copy)
+    overflow: int = 0           # sharded: device buffer overflow so far
+    retried: int = 0            # sharded: overflow fallback passes run
+    device_scored: int = 0      # sharded stage2=device: pass-throughs
+    host_rescored: int = 0      # sharded stage2=device: host re-scores
+    row_overflow: int = 0       # sharded: cross-shard row-buffer overflow
+
+    @property
+    def num_clusters(self) -> int:
+        """Duplicate clusters, i.e. components of size >= 2."""
+        _, counts = np.unique(self.labels, return_counts=True)
+        return int((counts >= 2).sum())
+
+    @property
+    def num_duplicates(self) -> int:
+        """Docs that are non-representative members of some cluster."""
+        return self.n_docs - len(set(self.labels.tolist()))
+
+    def clusters(self, min_size: int = 2) -> list[list[int]]:
+        groups: dict[int, list[int]] = {}
+        for i, r in enumerate(self.labels):
+            groups.setdefault(int(r), []).append(i)
+        return [v for v in groups.values() if len(v) >= min_size]
+
+
+class DedupSession:
+    """Long-lived incremental dedup over host/streaming/sharded backends.
+
+    ``ingest(chunk)`` clusters one chunk of documents into the session
+    and returns a cumulative ``ClusterSnapshot``; ``ingest_stream``
+    pipelines a sequence of chunks (sharded backend: the host merge of
+    step t overlaps the device shuffle of step t+1).
+
+    Backends:
+
+    * ``"host"`` — in-memory band matrix per chunk; verification is
+      exact Jaccard or the signature estimate per
+      ``config.exact_verification`` (same semantics as
+      ``DedupPipeline``).
+    * ``"streaming"`` — chunks are written to a Design-2 band store
+      (``StreamingDedup`` phase 1); each ingest re-scans the store
+      band-major (the paper's phase 2) through the accumulator, whose
+      verified-sim cache makes the re-scan cheap (no pair is ever
+      re-verified).
+    * ``"sharded"`` — each chunk runs one
+      ``dist_lsh.make_streamed_dedup_step`` invocation with
+      ``doc_offsets`` from the allocator; the band-group buffers feed
+      the session accumulator via ``dist_lsh.feed_step_groups``, and
+      ``stage2="device"`` scores (incl. cross-shard, via the exchanged
+      row buffers) register with the session's long-lived
+      ``DeviceScoredEdgeVerifier``.
+
+    All backends share the cross-step ``BandIndex`` pass except
+    streaming, whose store re-scan already covers cross-chunk
+    collisions (the store IS the retained state there).
+    """
+
+    def __init__(
+        self,
+        config: DedupConfig | None = None,
+        backend: str = "host",
+        *,
+        dist_config=None,
+        mesh=None,
+        store_path: str = ":memory:",
+        chunk_docs: int = 512,
+        doc_id_base: int = 0,
+        verifier: BatchVerifier | None = None,
+        stream: bool | None = None,
+        _adopt_streaming=None,
+    ):
+        if backend not in BACKENDS:
+            raise ValueError(f"unknown backend {backend!r}; "
+                             f"one of {BACKENDS}")
+        self.config = config or DedupConfig()
+        self.backend = backend
+        self.allocator = DocIdAllocator(doc_id_base)
+        self._verifier = as_verifier(verifier) if verifier is not None \
+            else None
+        self._external_verifier = verifier is not None
+        self.acc = ClusterAccumulator(
+            int(doc_id_base), _NullVerifier(), self.config.edge_threshold,
+            self.config.tree_threshold,
+            use_disjoint_sets=self.config.use_disjoint_sets,
+            batch=self.config.verify_batch)
+        self.band_index = BandIndex(self.config.num_bands)
+        self.seeds = minhash.default_seeds(self.config.num_hashes)
+        self.overflow = 0
+        self.retried = 0
+        self.row_overflow = 0
+        self.steps_ingested = 0
+        # Docs whose merge has completed — snapshots cover these.  With
+        # ingest_stream's one-chunk lookahead the allocator runs ahead
+        # of the merges, so the two counters differ transiently.
+        self.n_merged = int(doc_id_base)
+        self._finalized = False
+        if backend == "host":
+            self._impl = _HostBackend(self)
+        elif backend == "streaming":
+            self._impl = _StreamingBackend(self, store_path=store_path,
+                                           chunk_docs=chunk_docs,
+                                           adopt=_adopt_streaming)
+        else:
+            self._impl = _ShardedBackend(self, dist_config=dist_config,
+                                         mesh=mesh, stream=stream)
+
+    @classmethod
+    def over_store(cls, sd, *, config: DedupConfig | None = None,
+                   verifier: BatchVerifier | None = None) -> "DedupSession":
+        """Adopt an already-populated ``StreamingDedup`` (store + sig
+        cache) and cluster its contents as one pre-ingested step.
+
+        This is the adapter behind ``StreamingDedup.cluster``: the
+        band-major phase-2 scan runs through a session accumulator, and
+        the returned session stays live — further ``ingest`` calls
+        append to the same store and union-find.  ``sd.n_docs`` may
+        exceed the contiguous allocation (resumed-ingest gaps); gap ids
+        have no store rows, so they stay singletons.
+        """
+        sess = cls(config=config or sd.config, backend="streaming",
+                   verifier=verifier, _adopt_streaming=sd)
+        sess.allocator.next = sd.n_docs
+        sess.n_merged = sd.n_docs
+        if verifier is None and sd.n_ingested:
+            # Full (n_docs, M) global-id matrix, gap rows zero — keeps
+            # "row i == doc i" for the adopted docs and later ingests.
+            sess._verifier = sd.default_verifier()
+        sess.acc.grow(sd.n_docs)
+        sess.acc.feed(sd.candidate_source(), verifier=sess._verifier)
+        sess.steps_ingested += 1
+        return sess
+
+    # -- state -------------------------------------------------------------
+
+    @property
+    def n_docs(self) -> int:
+        """Docs fully ingested (merged) so far — snapshot coverage."""
+        return self.n_merged
+
+    @property
+    def stats(self) -> ClusterStats:
+        return self.acc.stats
+
+    @property
+    def uf(self) -> ThresholdUnionFind:
+        return self.acc.uf
+
+    @property
+    def verifier(self) -> BatchVerifier | None:
+        return self._verifier
+
+    @property
+    def signatures(self) -> np.ndarray:
+        """The retained (n_docs, M) signature matrix, row i == doc i.
+
+        Owned by the session's verifier (one copy, grown in place);
+        empty for exact-mode or external-verifier sessions, which do
+        not verify through signatures.
+        """
+        sig = getattr(self._verifier, "signatures", None)
+        if sig is None:
+            return np.zeros((0, self.config.num_hashes), dtype=np.uint32)
+        return sig
+
+    def snapshot(self) -> ClusterSnapshot:
+        v = self._verifier
+        return ClusterSnapshot(
+            n_docs=self.n_docs,
+            labels=self.uf.components()[: self.n_docs],
+            stats=replace(self.acc.stats),
+            pairs=self.acc.pairs,
+            uf=self.uf,
+            overflow=self.overflow,
+            retried=self.retried,
+            device_scored=getattr(v, "n_passthrough", 0),
+            host_rescored=getattr(v, "n_rescored", 0),
+            row_overflow=self.row_overflow,
+        )
+
+    # -- ingest ------------------------------------------------------------
+
+    def _check_live(self):
+        if self._finalized:
+            raise ValueError(
+                "this session was finalized by a one-shot ingest "
+                "(DedupPipeline.run adapter) and skipped the cross-step "
+                "index; start a fresh DedupSession for chunked ingest")
+
+    def ingest(self, texts: Iterable[str]) -> ClusterSnapshot:
+        """Cluster one chunk of documents; returns a cumulative snapshot."""
+        self._check_live()
+        pending = self._impl.dispatch(list(texts))
+        self._impl.merge(pending)
+        return self.snapshot()
+
+    def ingest_tokens(self,
+                      token_lists: list[list[str]]) -> ClusterSnapshot:
+        """``ingest`` over pre-tokenized documents."""
+        self._check_live()
+        pending = self._impl.dispatch(list(token_lists), tokenized=True)
+        self._impl.merge(pending)
+        return self.snapshot()
+
+    def ingest_stream(
+        self, chunks: Iterable[list[str]],
+    ) -> Iterator[ClusterSnapshot]:
+        """Pipelined multi-chunk ingest: one-chunk dispatch lookahead.
+
+        Chunk t+1's device work (sharded backend: signature compute +
+        every band-group's all_to_all shuffle) is dispatched BEFORE
+        chunk t's host merge runs, so the merge of step t overlaps the
+        shuffle of step t+1.  Yields the cumulative snapshot after each
+        chunk, in order; results are identical to sequential ``ingest``
+        calls (dispatch only allocates ids and launches device work —
+        the merges still run in chunk order against the same
+        accumulator and retained index).
+        """
+        self._check_live()
+        pending = None
+        for chunk in chunks:
+            nxt = self._impl.dispatch(list(chunk))
+            if pending is not None:
+                self._impl.merge(pending)
+                yield self.snapshot()
+            pending = nxt
+        if pending is not None:
+            self._impl.merge(pending)
+            yield self.snapshot()
+
+    def _merge_precomputed(self, token_lists, sig,
+                           bands) -> ClusterSnapshot:
+        """Host-backend ingest of a chunk whose tokenize/signature/band
+        stages the caller already ran (the ``DedupPipeline.run`` timing
+        adapter).  One-shot by construction: the cross-step band index
+        is skipped entirely (a single chunk has no earlier chunk to
+        collide with, and indexing every (doc, band) would be pure
+        overhead at corpus scale), so the session is finalized — it
+        cannot accept further chunks."""
+        if self.backend != "host":
+            raise ValueError("precomputed ingest is a host-backend path")
+        if self._finalized:
+            raise ValueError("one-shot session already finalized")
+        base = self.allocator.allocate(len(token_lists))
+        self._impl.merge((base, token_lists, np.asarray(sig),
+                          np.asarray(bands)), index=False)
+        self._finalized = True
+        return self.snapshot()
+
+    # -- shared backend plumbing -------------------------------------------
+
+    def _retain(self, token_lists, sig: np.ndarray) -> None:
+        """Grow the session verifier with one chunk's docs.
+
+        The verifier owns the retained state ("row i == doc i"): the
+        first chunk builds it — padded with blank rows for any ids
+        below the chunk's base (``doc_id_base`` sessions; those ids
+        have no band rows, so they can never become candidates) — and
+        later chunks extend it in place.
+        """
+        if self._external_verifier:
+            return
+        sig = np.asarray(sig)
+        cfg = self.config
+        if self._verifier is None:
+            gap = self.n_merged  # ids below the first chunk's base
+            if self._wants_exact():
+                self._verifier = ExactJaccardVerifier.from_token_lists(
+                    [[]] * gap + list(token_lists), cfg.ngram)
+                return
+            full = sig if gap == 0 else np.concatenate(
+                [np.zeros((gap, sig.shape[1]), dtype=sig.dtype), sig])
+            cls = (DeviceScoredEdgeVerifier
+                   if self.backend == "sharded"
+                   and self._impl.stage2 == "device"
+                   else SignatureVerifier)
+            self._verifier = cls(full, backend=cfg.resolved_backend())
+        elif self._wants_exact():
+            self._verifier.extend_token_lists(token_lists)
+        else:
+            self._verifier.extend_signatures(sig)
+
+    def _wants_exact(self) -> bool:
+        return self.backend == "host" and self.config.exact_verification
+
+    def _estimate_verifier(self) -> BatchVerifier:
+        """Plain signature-estimate view for cross-step host edges.
+
+        For ``stage2="device"`` sessions the main verifier counts
+        registry pass-throughs vs host re-scores; host-generated
+        cross-step edges must not inflate ``n_rescored`` (the
+        overflow-only pin), so they verify through a shared plain
+        estimator over the same retained matrix — bit-identical scores,
+        same accumulator cache.
+        """
+        if not isinstance(self._verifier, DeviceScoredEdgeVerifier):
+            return self._verifier
+        sig = self._verifier.signatures  # shared, zero-copy
+        if not hasattr(self, "_est_verifier"):
+            self._est_verifier = SignatureVerifier(
+                sig, backend=self.config.resolved_backend())
+        elif self._est_verifier.signatures is not sig:
+            self._est_verifier._set_signatures(sig)
+        return self._est_verifier
+
+    def _feed_cross_step(self, bands: np.ndarray, base: int) -> None:
+        """Cross-step candidates: chunk bands vs the retained index."""
+        edges = self.band_index.match_then_insert(bands, base)
+        if len(edges):
+            self.acc.feed(
+                ShardedEdgeSource(edges, num_docs=self.n_docs),
+                verifier=self._estimate_verifier())
+
+
+class _NullVerifier(BatchVerifier):
+    """Placeholder until the first chunk builds the real verifier (the
+    accumulator is constructed before any signatures exist)."""
+
+    def _verify_batch(self, pairs: np.ndarray) -> np.ndarray:
+        raise RuntimeError("session verifier not initialised — "
+                           "ingest a chunk first")
+
+
+class _HostBackend:
+    """In-memory per-chunk band matrix (the ``DedupPipeline`` shape)."""
+
+    def __init__(self, sess: DedupSession):
+        self.sess = sess
+        from repro.core.pipeline import DedupPipeline
+
+        self.pipe = DedupPipeline(sess.config)
+        self.pipe.seeds = sess.seeds
+
+    def dispatch(self, chunk, tokenized: bool = False):
+        sess = self.sess
+        toks = chunk if tokenized else self.pipe.tokenize(chunk)
+        base = sess.allocator.allocate(len(toks))
+        if not toks:
+            return (base, toks, None, None)
+        sig = self.pipe.compute_signatures(toks)
+        bands = self.pipe.compute_bands(sig)
+        return (base, toks, sig, bands)
+
+    def merge(self, pending, index: bool = True):
+        base, toks, sig, bands = pending
+        if sig is None:
+            return
+        sess = self.sess
+        sess._retain(toks, sig)
+        sess.n_merged = base + len(toks)
+        sess.acc.grow(sess.n_docs)
+        sess.acc.feed(BandMatrixSource(bands, doc_id_base=base),
+                      verifier=sess._verifier)
+        if index:
+            sess._feed_cross_step(bands, base)
+        sess.steps_ingested += 1
+
+
+class _StreamingBackend:
+    """Design-2 band store phase 1 + band-major re-scan phase 2.
+
+    Owns (or adopts) a ``streaming.StreamingDedup`` for the store
+    writes and signature cache; each merge re-scans the store through
+    the session accumulator — the verified-sim cache turns the re-scan
+    into pure candidate re-enumeration (no re-verification), which is
+    the paper's "repeat phase 2" made incremental.  The store is the
+    retained state here, so no separate ``BandIndex`` is kept.
+    """
+
+    def __init__(self, sess: DedupSession, *, store_path: str,
+                 chunk_docs: int, adopt=None):
+        self.sess = sess
+        if adopt is not None:
+            self.sd = adopt
+        else:
+            from repro.core.streaming import StreamingDedup
+
+            self.sd = StreamingDedup(sess.config, store_path=store_path,
+                                     chunk_docs=chunk_docs,
+                                     doc_id_base=sess.allocator.base)
+            self.sd.seeds = sess.seeds
+
+    def dispatch(self, chunk, tokenized: bool = False):
+        # The store write is host-side work with nothing to overlap, so
+        # it happens at merge time — a lookahead dispatch must not leak
+        # chunk t+1's rows into the band-major scan that merges chunk t.
+        toks = chunk if tokenized else [shingle.tokenize(t)
+                                        for t in chunk]
+        return (self.sess.allocator.allocate(len(toks)), toks)
+
+    def merge(self, pending):
+        base, toks = pending
+        sess = self.sess
+        assert base == self.sd.n_docs, (base, self.sd.n_docs)
+        if toks:
+            self.sd.ingest_tokens(toks)
+            sig = np.stack([self.sd._sig_cache[base + i]
+                            for i in range(len(toks))])
+            sess._retain(toks, sig)
+        sess.n_merged = max(sess.n_merged, base + len(toks))
+        sess.acc.grow(sess.n_docs)
+        sess.acc.feed(self.sd.candidate_source(),
+                      verifier=sess._verifier)
+        sess.steps_ingested += 1
+
+
+class _ShardedBackend:
+    """One streamed ``dist_lsh`` step invocation per chunk, one
+    accumulator across all of them."""
+
+    def __init__(self, sess: DedupSession, *, dist_config, mesh,
+                 stream: bool | None):
+        from repro.core.dist_lsh import DistLSHConfig, docs_mesh
+
+        self.sess = sess
+        cfg = sess.config
+        self.dcfg = dist_config or DistLSHConfig(
+            ngram=cfg.ngram, num_hashes=cfg.num_hashes,
+            rows_per_band=cfg.rows_per_band,
+            edge_threshold=cfg.edge_threshold)
+        # The session's retained state (seeds, signature width, band
+        # index shape) is derived from DedupConfig while the device
+        # step runs the DistLSHConfig — they must describe the same
+        # hash space or the first dispatch/merge corrupts the session.
+        for f in ("ngram", "num_hashes", "rows_per_band"):
+            if getattr(cfg, f) != getattr(self.dcfg, f):
+                raise ValueError(
+                    f"DedupConfig.{f}={getattr(cfg, f)} does not match "
+                    f"DistLSHConfig.{f}={getattr(self.dcfg, f)}; the "
+                    "session's retained signatures/bands must share the "
+                    "sharded step's hash parameters")
+        self.mesh = mesh if mesh is not None else docs_mesh()
+        self.stream = stream
+        self._step = None
+        self.n_dev = int(np.prod([self.mesh.shape[a]
+                                  for a in self.mesh.axis_names]))
+
+    @property
+    def stage2(self) -> str:
+        return self.dcfg.stage2
+
+    def _get_step(self):
+        if self._step is None:
+            from repro.core.dist_lsh import make_streamed_dedup_step
+
+            self._step = make_streamed_dedup_step(self.dcfg, self.mesh)
+        return self._step
+
+    def dispatch(self, chunk, tokenized: bool = False):
+        sess = self.sess
+        toks = chunk if tokenized else [shingle.tokenize(t)
+                                        for t in chunk]
+        n_real = len(toks)
+        base = sess.allocator.allocate(n_real)
+        if n_real == 0:
+            return (base, toks, 0, None)
+        # Pad for device-count divisibility; pad ids live above the
+        # allocated block and are range-filtered at the merge.
+        pad = (-n_real) % self.n_dev
+        padded = toks + [["pad"]] * pad
+        packed = shingle.pack_documents(padded)
+        d_loc = len(padded) // self.n_dev
+        offsets = DocIdAllocator.device_offsets(base, d_loc, self.n_dev)
+        out = self._get_step()(
+            jnp.asarray(packed.tokens), jnp.asarray(packed.lengths),
+            jnp.asarray(sess.seeds), jnp.asarray(offsets))
+        return (base, toks, n_real, out)
+
+    def merge(self, pending):
+        from repro.core.dist_lsh import feed_step_groups
+
+        base, toks, n_real, out = pending
+        if out is None:
+            return
+        sess = self.sess
+        sig = np.asarray(out["sig"])[:n_real]
+        sess._retain(toks, sig)
+        sess.n_merged = base + n_real
+        sess.acc.grow(sess.n_docs)
+        feed = feed_step_groups(
+            sess.acc, out, self.dcfg, num_docs=base + n_real,
+            edge_offset=0, verifier=sess._verifier, stream=self.stream)
+        sess.overflow += feed.overflow
+        sess.row_overflow += feed.row_overflow
+        bands = np.asarray(lsh.band_values(jnp.asarray(sig),
+                                           self.dcfg.rows_per_band))
+        if feed.overflow > 0:
+            # Device buffers dropped prescreened edges for THIS chunk:
+            # re-derive its candidates on the host and accumulate them
+            # through the same engine (cross-step edges are host-side
+            # and unbounded, so only the within-chunk family can lose).
+            sess.retried += 1
+            sess.acc.feed(BandMatrixSource(bands, doc_id_base=base),
+                          verifier=sess._estimate_verifier())
+        sess._feed_cross_step(bands, base)
+        sess.steps_ingested += 1

@@ -32,7 +32,6 @@ import jax.numpy as jnp
 from repro.core import lsh, minhash, shingle
 from repro.core.bandstore import Design2Store
 from repro.core.candidates import StoreBandSource
-from repro.core.engine import cluster_source
 from repro.core.engine import merge_cluster_rounds as _merge_rounds
 from repro.core.pipeline import DedupConfig
 from repro.core.unionfind import ThresholdUnionFind
@@ -134,25 +133,36 @@ class StreamingDedup:
                 | BatchVerifier | None = None):
         """Band-major read -> candidates -> batched verify -> union-find.
 
-        ``similarity_fn`` may be a ``verify.BatchVerifier`` or a scalar
-        callable; it defaults to batched signature agreement over the
-        phase-1 cache.  Re-runnable at different thresholds without
-        re-hashing (paper §12).
+        A thin adapter over ``session.DedupSession.over_store``: the
+        phase-2 scan runs through a session accumulator (one union-find
+        + verified-sim cache), which is the same machinery incremental
+        multi-chunk ingest uses — ``cluster`` is simply the one-shot
+        snapshot of it.  ``similarity_fn`` may be a
+        ``verify.BatchVerifier`` or a scalar callable; it defaults to
+        batched signature agreement over the phase-1 cache.
+        Re-runnable at different thresholds without re-hashing (paper
+        §12).
         """
+        from dataclasses import replace
+
+        from repro.core.session import DedupSession
+
         cfg = self.config
         edge_t = edge_threshold if edge_threshold is not None else \
             cfg.edge_threshold
         tree_t = tree_threshold if tree_threshold is not None else \
             cfg.tree_threshold
-        verifier = (self.default_verifier() if similarity_fn is None
+        verifier = (None if similarity_fn is None
                     else as_verifier(similarity_fn))
-        uf, stats, _ = cluster_source(
-            self.candidate_source(), verifier, edge_t, tree_t,
-            use_disjoint_sets=True, batch=cfg.verify_batch)
-        return uf, {"pairs_evaluated": stats.pairs_evaluated,
-                    "pairs_excluded": stats.pairs_excluded,
-                    "verify_batches": stats.verify_batches,
-                    "verify_seconds": stats.verify_seconds}
+        sess = DedupSession.over_store(
+            self, config=replace(cfg, edge_threshold=edge_t,
+                                 tree_threshold=tree_t),
+            verifier=verifier)
+        snap = sess.snapshot()
+        return snap.uf, {"pairs_evaluated": snap.stats.pairs_evaluated,
+                         "pairs_excluded": snap.stats.pairs_excluded,
+                         "verify_batches": snap.stats.verify_batches,
+                         "verify_seconds": snap.stats.verify_seconds}
 
 
 def merge_cluster_rounds(

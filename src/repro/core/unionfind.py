@@ -36,6 +36,24 @@ class ThresholdUnionFind:
         self.n_unions = 0
         self.n_rejected = 0
 
+    def grow(self, n: int) -> None:
+        """Extend the forest to cover ``n`` docs (new ids are singletons).
+
+        Incremental ingest (``core.session.DedupSession``) allocates doc
+        ids chunk by chunk; growing keeps every existing root, rank, and
+        ``min_score`` untouched, so clustering state accumulated so far
+        is preserved exactly.
+        """
+        old = len(self.parent)
+        if n <= old:
+            return
+        self.parent = np.concatenate(
+            [self.parent, np.arange(old, n, dtype=np.int64)])
+        self.rank = np.concatenate(
+            [self.rank, np.zeros(n - old, dtype=np.int32)])
+        self.min_score = np.concatenate(
+            [self.min_score, np.ones(n - old, dtype=np.float64)])
+
     def find(self, x: int) -> int:
         root = x
         while self.parent[root] != root:

@@ -116,11 +116,58 @@ class SignatureVerifier(BatchVerifier):
             raise ValueError(f"unknown backend {backend!r}")
         self.backend = backend
         self.batch_pairs = int(batch_pairs)
-        self.signatures = np.asarray(signatures)
-        if backend != "numpy":
-            import jax.numpy as jnp
+        self._set_signatures(np.asarray(signatures))
 
+    def _set_signatures(self, sig: np.ndarray):
+        # The matrix is adopted as the growth buffer; extensions write
+        # past ``_n_rows`` after a capacity-doubling copy, so repeated
+        # chunk appends are amortized O(chunk), and the device copy
+        # (jnp/pallas backends) is refreshed lazily at the next verify.
+        self._buf = sig
+        self._n_rows = len(sig)
+        self.signatures = sig
+        self._dev_dirty = True
+
+    def _device_signatures(self):
+        import jax.numpy as jnp
+
+        if self._dev_dirty:
             self._sig_dev = jnp.asarray(self.signatures)
+            self._dev_dirty = False
+        return self._sig_dev
+
+    def extend_signatures(self, rows: np.ndarray) -> None:
+        """Append signature rows for newly ingested docs.
+
+        Incremental ingest (``core.session.DedupSession``) allocates
+        global doc ids chunk by chunk; the verifier's row i must stay
+        doc i's signature, so each chunk's rows are appended in
+        allocation order.  Throughput counters (and, for
+        ``DeviceScoredEdgeVerifier``, the registered device scores)
+        survive the extension — the session keeps ONE verifier alive
+        across every chunk.
+        """
+        rows = np.asarray(rows)
+        if rows.size == 0:
+            return
+        if self.signatures.size == 0:
+            self._set_signatures(rows)
+            return
+        if rows.shape[-1] != self.signatures.shape[-1]:
+            raise ValueError(
+                f"signature width {rows.shape[-1]} != existing "
+                f"{self.signatures.shape[-1]}")
+        n_new = self._n_rows + len(rows)
+        if n_new > len(self._buf):
+            cap = max(n_new, 2 * max(1, len(self._buf)))
+            buf = np.empty((cap, self._buf.shape[1]),
+                           dtype=self._buf.dtype)
+            buf[: self._n_rows] = self._buf[: self._n_rows]
+            self._buf = buf
+        self._buf[self._n_rows : n_new] = rows
+        self._n_rows = n_new
+        self.signatures = self._buf[: self._n_rows]
+        self._dev_dirty = True
 
     def _verify_batch(self, pairs: np.ndarray) -> np.ndarray:
         a_idx, b_idx = pairs[:, 0], pairs[:, 1]
@@ -139,12 +186,13 @@ class SignatureVerifier(BatchVerifier):
             bucket *= 2
         a_idx = jnp.asarray(np.pad(a_idx, (0, bucket - p)))
         b_idx = jnp.asarray(np.pad(b_idx, (0, bucket - p)))
+        sig_dev = self._device_signatures()
         if self.backend == "jnp":
-            est = _gather_estimate_jit(self._sig_dev, a_idx, b_idx)
+            est = _gather_estimate_jit(sig_dev, a_idx, b_idx)
         else:
             from repro.kernels import ops as kops
 
-            est = kops.indexed_pair_estimate(self._sig_dev, a_idx, b_idx)
+            est = kops.indexed_pair_estimate(sig_dev, a_idx, b_idx)
         return np.asarray(est)[:p]
 
 
@@ -231,6 +279,19 @@ class DeviceScoredEdgeVerifier(ShardedEdgeVerifier):
     def num_scores(self) -> int:
         return len(self._scores)
 
+    def clear_scores(self) -> None:
+        """Drop the device-score registry (counters survive).
+
+        A registered edge is dead once its step's buffers have been fed:
+        every raw edge either landed in the engine's verified-sim cache
+        or its endpoints were already co-clustered (and unions never
+        split, so the pair can never reach the verifier again).
+        ``dist_lsh.feed_step_groups`` clears after each step so a
+        long-lived incremental session doesn't accumulate one registry
+        entry per device-scored edge forever.
+        """
+        self._scores.clear()
+
     def _verify_batch(self, pairs: np.ndarray) -> np.ndarray:
         out = np.empty(len(pairs), dtype=np.float32)
         missing = []
@@ -262,48 +323,111 @@ class ExactJaccardVerifier(BatchVerifier):
     is collision-free by construction).
     """
 
-    def __init__(self, id_rows: list[np.ndarray], batch_pairs: int = 2048):
+    def __init__(self, id_rows: list[np.ndarray], batch_pairs: int = 2048,
+                 *, _vocab: dict | None = None, _ngram: int | None = None):
         super().__init__()
         self.batch_pairs = int(batch_pairs)
-        d = len(id_rows)
-        self.lengths = np.array([len(r) for r in id_rows], dtype=np.int64)
-        lmax = int(max(1, self.lengths.max(initial=1)))
-        base = np.int64(
-            max((int(r[-1]) for r in id_rows if len(r)), default=0) + 1
-        )
-        # Pad slot (d, j) with a unique sentinel so pads never match.
-        self.ids = (
-            base + np.arange(d * lmax, dtype=np.int64).reshape(d, lmax)
-        )
-        for i, row in enumerate(id_rows):
-            self.ids[i, : len(row)] = row
+        self._rows: list[np.ndarray] = [
+            np.asarray(r, dtype=np.int64) for r in id_rows]
+        self._vocab = _vocab        # n-gram -> id (None: raw-id rows only)
+        self._ngram = _ngram
+        self._rebuild()
+
+    def _pad_rows(self, rows: list[np.ndarray], row0: int,
+                  lmax: int) -> np.ndarray:
+        """Pad id rows to (len(rows), lmax).
+
+        Pad slot (row0 + i, j) carries the globally unique NEGATIVE
+        sentinel ``-(1 + (row0 + i) * lmax + j)``: real interned ids
+        are >= 0, so pads can never match a real id nor another pad —
+        and, unlike a max-id-derived sentinel base, they stay valid
+        when later chunks grow the vocab, which is what makes
+        ``extend_id_rows`` append-only.
+        """
+        d = len(rows)
+        out = -(1 + np.int64(row0) * lmax
+                + np.arange(d * lmax, dtype=np.int64).reshape(d, lmax))
+        for i, row in enumerate(rows):
+            out[i, : len(row)] = row
+        return out
+
+    def _rebuild(self):
+        self._n_rows = len(self._rows)
+        self._len_buf = np.array([len(r) for r in self._rows],
+                                 dtype=np.int64)
+        self._lmax = int(max(1, self._len_buf.max(initial=1)))
+        self._ids_buf = self._pad_rows(self._rows, 0, self._lmax)
+        self.lengths = self._len_buf
+        self.ids = self._ids_buf
+
+    def extend_id_rows(self, id_rows: list[np.ndarray]) -> None:
+        """Append pre-interned sorted id rows for newly ingested docs.
+
+        Ids must come from the same interning namespace as the existing
+        rows (intersection counts — and therefore exact Jaccard values —
+        depend only on id equality, so chunked interning with a shared
+        vocab is bit-identical to one-shot interning).  Appending is
+        amortized O(chunk) — capacity-doubling row buffers, like
+        ``SignatureVerifier.extend_signatures`` — while the new rows
+        fit the current row width; only a chunk containing a longer
+        document than any before re-pads the whole matrix.
+        """
+        if not id_rows:
+            return
+        new = [np.asarray(r, dtype=np.int64) for r in id_rows]
+        n0 = self._n_rows
+        n1 = n0 + len(new)
+        self._rows.extend(new)
+        if max((len(r) for r in new), default=1) > self._lmax:
+            self._rebuild()
+            return
+        if n1 > len(self._ids_buf):
+            cap = max(n1, 2 * max(1, len(self._ids_buf)))
+            ids_buf = np.empty((cap, self._lmax), dtype=np.int64)
+            ids_buf[:n0] = self._ids_buf[:n0]
+            len_buf = np.empty((cap,), dtype=np.int64)
+            len_buf[:n0] = self._len_buf[:n0]
+            self._ids_buf, self._len_buf = ids_buf, len_buf
+        self._ids_buf[n0:n1] = self._pad_rows(new, n0, self._lmax)
+        self._len_buf[n0:n1] = [len(r) for r in new]
+        self._n_rows = n1
+        self.ids = self._ids_buf[:n1]
+        self.lengths = self._len_buf[:n1]
+
+    def extend_token_lists(self, token_lists: list[list[str]]) -> None:
+        """Intern + append new documents using the persistent vocab.
+
+        Only verifiers built with ``from_token_lists`` /
+        ``from_ngram_sets`` carry the vocab needed to intern new docs.
+        """
+        if self._vocab is None or self._ngram is None:
+            raise ValueError(
+                "verifier was built from raw id rows (no vocab); use "
+                "extend_id_rows with consistently interned rows")
+        self.extend_id_rows(
+            _intern_rows(self._vocab,
+                         (_ngram_set_of(toks, self._ngram)
+                          for toks in token_lists)))
 
     @classmethod
     def from_token_lists(cls, token_lists: list[list[str]], n: int = 8,
                          batch_pairs: int = 2048) -> "ExactJaccardVerifier":
         """Intern every document's n-gram set to sorted int64 id rows."""
-        from repro.core.shingle import ngram_set
-
         vocab: dict[tuple, int] = {}
-        rows = []
-        for toks in token_lists:
-            ids = {
-                vocab.setdefault(g, len(vocab)) for g in ngram_set(toks, n)
-            }
-            rows.append(np.sort(np.fromiter(ids, dtype=np.int64,
-                                            count=len(ids))))
-        return cls(rows, batch_pairs=batch_pairs)
+        rows = _intern_rows(
+            vocab, (_ngram_set_of(toks, n) for toks in token_lists))
+        return cls(rows, batch_pairs=batch_pairs, _vocab=vocab, _ngram=n)
 
     @classmethod
-    def from_ngram_sets(cls, ngram_sets: list[set],
-                        batch_pairs: int = 2048) -> "ExactJaccardVerifier":
+    def from_ngram_sets(cls, ngram_sets: list[set], batch_pairs: int = 2048,
+                        n: int | None = None) -> "ExactJaccardVerifier":
+        """Intern pre-built n-gram sets.  Pass ``n`` (the width the sets
+        were built with) to enable ``extend_token_lists``; without it
+        the verifier cannot know the width and extension by token lists
+        is refused rather than silently mixing n-gram widths."""
         vocab: dict = {}
-        rows = []
-        for s in ngram_sets:
-            ids = {vocab.setdefault(g, len(vocab)) for g in s}
-            rows.append(np.sort(np.fromiter(ids, dtype=np.int64,
-                                            count=len(ids))))
-        return cls(rows, batch_pairs=batch_pairs)
+        rows = _intern_rows(vocab, ngram_sets)
+        return cls(rows, batch_pairs=batch_pairs, _vocab=vocab, _ngram=n)
 
     def _verify_batch(self, pairs: np.ndarray) -> np.ndarray:
         a_idx, b_idx = pairs[:, 0], pairs[:, 1]
@@ -319,6 +443,22 @@ class ExactJaccardVerifier(BatchVerifier):
         return np.where(
             union > 0, inter / np.maximum(union, 1), 1.0
         ).astype(np.float32)
+
+
+def _ngram_set_of(toks: list[str], n: int):
+    from repro.core.shingle import ngram_set
+
+    return ngram_set(toks, n)
+
+
+def _intern_rows(vocab: dict, ngram_sets) -> list[np.ndarray]:
+    """Intern n-gram sets to sorted int64 id rows via a shared vocab."""
+    rows = []
+    for s in ngram_sets:
+        ids = {vocab.setdefault(g, len(vocab)) for g in s}
+        rows.append(np.sort(np.fromiter(ids, dtype=np.int64,
+                                        count=len(ids))))
+    return rows
 
 
 def as_verifier(obj) -> BatchVerifier:

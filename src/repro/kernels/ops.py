@@ -13,6 +13,7 @@ from repro.kernels.sigjaccard import (
     indexed_pair_estimate,
     masked_indexed_pair_counts,
     masked_indexed_pair_estimate,
+    masked_pair_counts,
     pair_estimate,
 )
 from repro.kernels.flash_attention import flash_attention
@@ -25,5 +26,6 @@ __all__ = [
     "indexed_pair_estimate",
     "masked_indexed_pair_counts",
     "masked_indexed_pair_estimate",
+    "masked_pair_counts",
     "flash_attention",
 ]

@@ -86,15 +86,11 @@ def _sigjac_masked_kernel(a_ref, b_ref, v_ref, out_ref):
     out_ref[...] = jnp.where(v_ref[...] != 0, jnp.sum(eq, axis=1), 0.0)
 
 
-def _masked_counts(sig, a_idx, b_idx, valid, tp: int,
-                   interpret: bool | None):
+def _masked_counts_rows(sig_a, sig_b, valid, tp: int,
+                        interpret: bool | None):
+    """Masked agreement counts over PRE-GATHERED (P, M) row operands."""
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
-    D = sig.shape[0]
-    a_idx = jnp.clip(a_idx, 0, D - 1)
-    b_idx = jnp.clip(b_idx, 0, D - 1)
-    sig_a = sig[a_idx]
-    sig_b = sig[b_idx]
     P, M = sig_a.shape
     tp_ = min(tp, max(1, P))
     Pp = -(-P // tp_) * tp_
@@ -115,6 +111,39 @@ def _masked_counts(sig, a_idx, b_idx, valid, tp: int,
         interpret=interpret,
     )(a, b, v)
     return out[:P]
+
+
+def _masked_counts(sig, a_idx, b_idx, valid, tp: int,
+                   interpret: bool | None):
+    D = sig.shape[0]
+    a_idx = jnp.clip(a_idx, 0, D - 1)
+    b_idx = jnp.clip(b_idx, 0, D - 1)
+    return _masked_counts_rows(sig[a_idx], sig[b_idx], valid, tp,
+                               interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("tp", "interpret"))
+def masked_pair_counts(
+    sig_a: jnp.ndarray,
+    sig_b: jnp.ndarray,
+    valid: jnp.ndarray,
+    *,
+    tp: int = TP,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Masked full-M agreement *count* over pre-gathered row operands.
+
+    sig_a/sig_b (P, M) uint32, valid (P,) bool -> (P,) float32 exact
+    agreement counts where ``valid``, 0.0 elsewhere.  The pre-gathered
+    variant of ``masked_indexed_pair_counts`` for operands that do NOT
+    both live in one local matrix — the cross-shard straggler scoring
+    of the sharded dedup path gathers one side from the device's own
+    signature shard and the other from the bounded row buffer exchanged
+    inside the all_to_all, then scores the pair here.  Same
+    count-not-estimate contract: the /M division happens on the host so
+    scores stay bit-identical to the host estimator.
+    """
+    return _masked_counts_rows(sig_a, sig_b, valid, tp, interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("tp", "interpret"))

@@ -1,20 +1,40 @@
 """Dedup driver: host, streaming (out-of-core), or sharded execution.
 
-All three modes are thin drivers over the staged engine
-(``CandidateSource -> BatchVerifier -> ThresholdUnionFind``; see
-``repro.core.engine``), with a selectable verification backend.
+All three modes drive ONE ``core.session.DedupSession`` — the corpus is
+split into ``--steps`` chunks and ingested incrementally (the sharded
+backend pipelines: the host merge of step t overlaps the device shuffle
+of step t+1) — and report cumulative session stats through one shared
+helper.
 
   PYTHONPATH=src python -m repro.launch.dedup --notes 500 --dups 300
   PYTHONPATH=src python -m repro.launch.dedup --backend jnp --batch band
   PYTHONPATH=src python -m repro.launch.dedup --streaming --chunk 128
   PYTHONPATH=src python -m repro.launch.dedup --sharded --devices 8
+  PYTHONPATH=src python -m repro.launch.dedup --sharded --steps 4
 """
 from __future__ import annotations
 
 import argparse
 import os
-import sys
 import time
+
+
+def report_session(mode: str, snap, seconds: float, extra: str = ""):
+    """The one cumulative report every execution mode prints.
+
+    ``snap`` is a ``core.session.ClusterSnapshot``; the line carries the
+    session-level counters (docs ingested, duplicate clusters,
+    duplicates, verify throughput) so the three modes are comparable at
+    a glance.
+    """
+    print(f"{mode}: {snap.n_docs} docs ingested, "
+          f"{snap.num_clusters} clusters, "
+          f"{snap.num_duplicates} duplicates, "
+          f"{snap.stats.pairs_evaluated} pairs verified "
+          f"({snap.stats.pairs_excluded} excluded) in "
+          f"{snap.stats.verify_batches} batches "
+          f"({snap.stats.verify_pairs_per_second:.0f} pairs/s)"
+          f"{extra}, {seconds:.2f}s total")
 
 
 def main(argv=None):
@@ -46,8 +66,14 @@ def main(argv=None):
     ap.add_argument("--stage2", default="host", choices=("host", "device"),
                     help="full-signature verify placement: host merge "
                          "or TPU-resident (fused sigjaccard kernel "
-                         "under shard_map; host re-scores only "
-                         "cross-shard stragglers)")
+                         "under shard_map; cross-shard edges scored "
+                         "via the exchanged row buffers, host "
+                         "re-scores only on row-buffer overflow)")
+    ap.add_argument("--steps", type=int, default=1,
+                    help="split the corpus into N chunks and ingest "
+                         "them incrementally through one DedupSession "
+                         "(sharded mode pipelines: merge of step t "
+                         "overlaps the shuffle of step t+1)")
     args = ap.parse_args(argv)
 
     if args.sharded and args.devices:
@@ -56,13 +82,16 @@ def main(argv=None):
 
     import numpy as np
     import jax
-    import jax.numpy as jnp
-    from repro.core import DedupConfig, DedupPipeline
+    from repro.core import DedupConfig, DedupSession
     from repro.data import inject_near_duplicates, make_i2b2_like
 
     notes = make_i2b2_like(args.notes)
     notes, prov = inject_near_duplicates(notes, args.dups)
-    print(f"corpus: {len(notes)} notes ({args.dups} injected near-dups)")
+    print(f"corpus: {len(notes)} notes ({args.dups} injected near-dups), "
+          f"{args.steps} ingest step(s)")
+
+    bounds = np.linspace(0, len(notes), max(1, args.steps) + 1).astype(int)
+    chunks = [notes[a:b] for a, b in zip(bounds, bounds[1:])]
 
     cfg = DedupConfig(
         edge_threshold=args.edge_threshold,
@@ -73,96 +102,65 @@ def main(argv=None):
         verify_batch=args.batch)
 
     if args.sharded:
-        from repro.core import (DistLSHConfig, cluster_step_output,
-                                docs_mesh, make_streamed_dedup_step)
-        from repro.core import minhash
-        from repro.core.shingle import pack_documents, tokenize
+        from repro.core import DistLSHConfig
 
-        token_lists = [tokenize(t) for t in notes]
         ndev = len(jax.devices())
-        pad = (-len(token_lists)) % ndev
-        token_lists += [["pad"]] * pad
-        packed = pack_documents(token_lists)
         dcfg = DistLSHConfig(edge_threshold=args.edge_threshold,
                              edge_capacity=8192,
                              band_groups=args.band_groups,
                              stage2=args.stage2)
-        mesh = docs_mesh()
-        step = make_streamed_dedup_step(dcfg, mesh)
+        from dataclasses import replace
+
+        # Sharded verification is estimate-shaped by construction; the
+        # session's verifier is the same full-signature estimator the
+        # host path uses (or the device-score registry for stage2
+        # device).
+        sess = DedupSession(replace(cfg, exact_verification=False),
+                            backend="sharded", dist_config=dcfg)
         t0 = time.perf_counter()
-        out = step(jnp.asarray(packed.tokens), jnp.asarray(packed.lengths),
-                   jnp.asarray(minhash.default_seeds(dcfg.num_hashes)))
-        t_dispatch = time.perf_counter() - t0
-        # Streamed merge through the shared staged engine: group g's
-        # host merge overlaps the device shuffle of group g+1; with
-        # --stage2 device the edges arrive already fully scored and the
-        # host only re-scores cross-shard stragglers.
-        t0 = time.perf_counter()
-        res = cluster_step_output(
-            out, dcfg, tree_threshold=args.tree_threshold,
-            backend=cfg.resolved_backend(), batch=args.batch,
-            num_docs=len(notes))
-        t_merge = time.perf_counter() - t0
-        labels = res.labels()
-        n_dup = len(notes) - len(set(labels.tolist()))
-        dev_stats = res.device_stats.sum(axis=0)
-        stage2_note = (
-            f", stage2=device {res.device_scored} device-scored / "
-            f"{res.host_rescored} host-rescored"
-            if args.stage2 == "device" else "")
-        print(f"sharded over {ndev} devices x {dcfg.band_groups} "
-              f"band-group(s): {res.num_edges} prescreened edges "
-              f"({dev_stats[1]} candidates, overflow={res.overflow}"
-              f"{', retried via host fallback' if res.retried else ''}), "
-              f"{n_dup} duplicates, "
-              f"{res.stats.pairs_evaluated} full-signature verifies in "
-              f"{res.stats.verify_batches} batches "
-              f"({res.stats.verify_pairs_per_second:.0f} pairs/s"
-              f"{stage2_note}), "
-              f"dispatch {t_dispatch:.2f}s merge+overlap {t_merge:.2f}s")
+        for snap in sess.ingest_stream(chunks):
+            pass
+        dt = time.perf_counter() - t0
+        extra = (f", {snap.overflow} overflow"
+                 f"{' (host fallback ran)' if snap.retried else ''}")
+        if args.stage2 == "device":
+            extra += (f", stage2=device {snap.device_scored} "
+                      f"device-scored / {snap.host_rescored} "
+                      f"host-rescored / {snap.row_overflow} row-overflow")
+        report_session(
+            f"sharded[{ndev} devices x {dcfg.band_groups} band-group(s) "
+            f"x {args.steps} step(s)]", snap, dt, extra)
         return
 
     if args.streaming:
         from repro.core.shingle import tokenize
-        from repro.core.streaming import StreamingDedup
         from repro.core.verify import ExactJaccardVerifier
 
-        sd = StreamingDedup(cfg, chunk_docs=args.chunk)
-        token_lists = [tokenize(t) for t in notes]
-        t0 = time.perf_counter()
-        sd.ingest_tokens(token_lists)
-        t_ingest = time.perf_counter() - t0
-        # StreamingDedup's own default verifier is the signature
-        # estimate; honour exact_verification like the host path does.
+        # Tokenize once; the chunks are ingested pre-tokenized so the
+        # exact verifier (built over the same token lists — the
+        # streaming backend's native verifier is the signature
+        # estimate, so exact_verification is honoured explicitly) does
+        # not pay a second tokenize pass.
+        toks = [tokenize(t) for t in notes]
         verifier = None
         if cfg.exact_verification:
             verifier = ExactJaccardVerifier.from_token_lists(
-                token_lists, cfg.ngram)
+                toks, cfg.ngram)
+        sess = DedupSession(cfg, backend="streaming",
+                            chunk_docs=args.chunk, verifier=verifier)
         t0 = time.perf_counter()
-        uf, stats = sd.cluster(similarity_fn=verifier)
-        t_cluster = time.perf_counter() - t0
-        labels = uf.components()
-        n_dup = len(notes) - len(set(labels.tolist()))
-        thr = (stats["pairs_evaluated"] / stats["verify_seconds"]
-               if stats["verify_seconds"] > 0 else 0.0)
-        print(f"streaming pipeline: {n_dup} duplicates, "
-              f"{stats['pairs_evaluated']} pairs verified in "
-              f"{stats['verify_batches']} batches "
-              f"({thr:.0f} pairs/s), "
-              f"ingest {t_ingest:.2f}s cluster {t_cluster:.2f}s")
+        for a, b in zip(bounds, bounds[1:]):
+            snap = sess.ingest_tokens(toks[a:b])
+        dt = time.perf_counter() - t0
+        report_session(f"streaming[{args.steps} step(s)]", snap, dt)
         return
 
-    pipe = DedupPipeline(cfg)
+    sess = DedupSession(cfg, backend="host")
     t0 = time.perf_counter()
-    res = pipe.run(notes)
+    for chunk in chunks:
+        snap = sess.ingest(chunk)
     dt = time.perf_counter() - t0
-    print(f"host pipeline: {res.num_clusters} clusters, "
-          f"{res.num_duplicates_removed} duplicates removed, "
-          f"{res.stats.pairs_evaluated} Jaccard evals "
-          f"({res.stats.pairs_excluded} excluded; "
-          f"{res.stats.verify_batches} batches, "
-          f"{res.stats.verify_pairs_per_second:.0f} pairs/s), {dt:.2f}s")
-    print("timings:", {k: round(v, 3) for k, v in res.timings.items()})
+    report_session(f"host[{args.steps} step(s)]", snap, dt)
 
 
 if __name__ == "__main__":

@@ -205,10 +205,14 @@ def test_device_stage2_passthrough_and_stragglers():
     """Device-resident stage 2 == host stage 2, bit for bit.
 
     Same-shard edges are fully scored on the accelerator (the fused
-    sigjaccard kernel under shard_map) and pass through the host merge;
-    cross-shard edges are re-scored by the straggler path.  Both kinds
-    are planted; clusters and per-edge sims must match the end-of-step
-    host-verified path exactly (drift 0).
+    sigjaccard kernel under shard_map); cross-shard edges are scored
+    there too via the bounded signature-row exchange inside the
+    all_to_all (``sig_row_capacity``), so with ample capacity the host
+    re-score path is pinned to ZERO — and with the exchange disabled
+    (capacity 0) the historical straggler re-score recovers the same
+    result.  Both kinds of edges are planted; clusters and per-edge
+    sims must match the end-of-step host-verified path exactly
+    (drift 0).
     """
     run_with_devices("""
         import numpy as np, jax, jax.numpy as jnp
@@ -233,25 +237,157 @@ def test_device_stage2_passthrough_and_stragglers():
         ref = cluster_step_output(ref_step(*args), DistLSHConfig(**base),
                                   num_docs=64, overflow_fallback=False)
         sims = {(a, b): s for a, b, s in ref.pairs}
-        cfg = DistLSHConfig(**base, band_groups=5, stage2="device")
+
+        def run(rc):
+            cfg = DistLSHConfig(**base, band_groups=5, stage2="device",
+                                sig_row_capacity=rc)
+            step = make_streamed_dedup_step(cfg, docs_mesh())
+            out = step(*args)
+            assert all("device_match_counts" in g for g in out["groups"])
+            res = cluster_step_output(out, cfg, num_docs=64,
+                                      overflow_fallback=False)
+            assert res.overflow == 0
+            np.testing.assert_array_equal(res.labels(), ref.labels())
+            lab = res.labels()
+            assert lab[1] == lab[5] and lab[17] == lab[20] == lab[22]
+            assert lab[3] == lab[41]
+            shared = [(a, b, s) for a, b, s in res.pairs
+                      if (a, b) in sims]
+            assert shared
+            drift = sum(1 for a, b, s in shared if s != sims[(a, b)])
+            assert drift == 0, drift
+            assert res.device_scored > 0, "no edge served from device"
+            return res
+
+        # Exchange on: the cross-shard dup (3, 41) is scored on-device
+        # by dev0 against dev5's exchanged row — host re-scores pinned
+        # to row-buffer overflow, which is zero here.
+        res = run(rc=1024)
+        assert res.row_overflow == 0
+        assert res.host_rescored == 0, res.host_rescored
+        # Exchange off: historical straggler behaviour, same clusters.
+        res = run(rc=0)
+        assert res.host_rescored > 0, "straggler fallback not exercised"
+        print("device stage2 ok")
+    """, n_devices=8)
+
+
+@pytest.mark.slow
+def test_device_stage2_row_buffer_overflow_falls_back_to_host():
+    """Cross-shard row exchange overflow: counted, host-recovered.
+
+    With several cross-shard duplicate pairs whose member rows live on
+    one device and ``sig_row_capacity=1``, the publisher cannot fit all
+    straggler rows; the overflowed edges stay uncovered, the counter
+    reports them, and the host re-score path restores exactly the
+    end-of-step clustering (drift 0).
+    """
+    run_with_devices("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core.dist_lsh import (DistLSHConfig, cluster_step_output,
+                                         docs_mesh, make_dedup_step,
+                                         make_streamed_dedup_step)
+        from repro.core import shingle, minhash
+        rng = np.random.RandomState(3)
+        vocab = [f"t{i}" for i in range(400)]
+        docs = [list(rng.choice(vocab, size=64)) for _ in range(64)]
+        # 8 docs/device: heads 1..3 on dev0, members 41..43 on dev5 —
+        # three distinct member rows compete for dev5's exchange buffer.
+        docs[41] = docs[1]; docs[42] = docs[2]; docs[43] = docs[3]
+        packed = shingle.pack_documents(docs)
+        seeds = jnp.asarray(minhash.default_seeds(100))
+        args = (jnp.asarray(packed.tokens), jnp.asarray(packed.lengths),
+                seeds)
+        base = dict(edge_capacity=4096, edge_threshold=0.5,
+                    bucket_slack=16.0)
+        ref_step = make_dedup_step(DistLSHConfig(**base), docs_mesh())
+        ref = cluster_step_output(ref_step(*args), DistLSHConfig(**base),
+                                  num_docs=64, overflow_fallback=False)
+        cfg = DistLSHConfig(**base, stage2="device", sig_row_capacity=1)
         step = make_streamed_dedup_step(cfg, docs_mesh())
-        out = step(*args)
-        assert all("device_match_counts" in g for g in out["groups"])
-        res = cluster_step_output(out, cfg, num_docs=64,
+        res = cluster_step_output(step(*args), cfg, num_docs=64,
                                   overflow_fallback=False)
         assert res.overflow == 0
+        assert res.row_overflow > 0, "row buffer should have overflowed"
+        assert res.host_rescored > 0, "overflowed edges must re-score"
         np.testing.assert_array_equal(res.labels(), ref.labels())
         lab = res.labels()
-        assert lab[1] == lab[5] and lab[17] == lab[20] == lab[22]
-        assert lab[3] == lab[41]
+        assert lab[1] == lab[41] and lab[2] == lab[42] \\
+            and lab[3] == lab[43]
+        sims = {(a, b): s for a, b, s in ref.pairs}
         shared = [(a, b, s) for a, b, s in res.pairs if (a, b) in sims]
         assert shared
-        drift = sum(1 for a, b, s in shared if s != sims[(a, b)])
-        assert drift == 0, drift
-        # both stage-2 paths actually exercised
-        assert res.device_scored > 0, "no edge served from device scores"
-        assert res.host_rescored > 0, "no cross-shard straggler re-scored"
-        print("device stage2 ok")
+        assert all(s == sims[(a, b)] for a, b, s in shared)
+        print("row overflow ok")
+    """, n_devices=8)
+
+
+@pytest.mark.slow
+def test_session_multistep_sharded_matches_single_step():
+    """N-step chunked ingest through ONE DedupSession == single-step.
+
+    The session feeds N streamed step invocations (chunked corpus,
+    allocator-assigned ``doc_offsets``) into one ClusterAccumulator,
+    generating cross-chunk candidates from the retained band index;
+    clusters and per-edge sims must be identical / bit-identical to the
+    PR 3 single-step path over the concatenated corpus, for N in
+    {2, 4}, with and without the device-resident stage 2.  With the
+    cross-shard row exchange on and no overflow anywhere, the device
+    path's host re-scores stay pinned at zero (overflow-only).
+    """
+    run_with_devices("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import DedupConfig, DedupSession
+        from repro.core.dist_lsh import (DistLSHConfig, cluster_step_output,
+                                         docs_mesh, make_dedup_step)
+        from repro.core import shingle, minhash
+        from repro.data import make_i2b2_like, inject_near_duplicates
+        notes = make_i2b2_like(56, seed=0)
+        notes, _ = inject_near_duplicates(notes, 8, frac_low=0.0,
+                                          frac_high=0.005, seed=1)
+        packed = shingle.pack_documents(
+            [shingle.tokenize(t) for t in notes])
+        base = dict(edge_capacity=4096, edge_threshold=0.88,
+                    bucket_slack=16.0)
+        ref_step = make_dedup_step(DistLSHConfig(**base), docs_mesh())
+        out = ref_step(jnp.asarray(packed.tokens),
+                       jnp.asarray(packed.lengths),
+                       jnp.asarray(minhash.default_seeds(100)))
+        ref = cluster_step_output(out, DistLSHConfig(**base),
+                                  tree_threshold=0.40,
+                                  num_docs=len(notes),
+                                  overflow_fallback=False)
+        assert ref.overflow == 0 and ref.num_edges > 0
+        sims = {(a, b): s for a, b, s in ref.pairs}
+        cfg = DedupConfig(edge_threshold=0.88, exact_verification=False)
+        for stage2 in ("host", "device"):
+            for n_steps in (2, 4):
+                dcfg = DistLSHConfig(**base, band_groups=5,
+                                     stage2=stage2)
+                sess = DedupSession(cfg, backend="sharded",
+                                    dist_config=dcfg)
+                chunks = [[notes[i] for i in idx] for idx in
+                          np.array_split(np.arange(len(notes)),
+                                         n_steps)]
+                snaps = list(sess.ingest_stream(chunks))
+                assert len(snaps) == n_steps
+                assert [s.n_docs for s in snaps] == list(
+                    np.cumsum([len(c) for c in chunks]))
+                snap = snaps[-1]
+                assert snap.overflow == 0 and snap.row_overflow == 0
+                np.testing.assert_array_equal(snap.labels,
+                                              ref.labels())
+                shared = [(a, b, s) for a, b, s in snap.pairs
+                          if (a, b) in sims]
+                assert shared, (stage2, n_steps)
+                drift = sum(1 for a, b, s in shared
+                            if s != sims[(a, b)])
+                assert drift == 0, (stage2, n_steps, drift)
+                if stage2 == "device":
+                    # cross-shard exchange on, nothing overflowed:
+                    # host re-scores are overflow-only == 0.
+                    assert snap.host_rescored == 0, snap.host_rescored
+        print("session multistep ok")
     """, n_devices=8)
 
 

@@ -88,6 +88,26 @@ def test_sigjaccard_masked_indexed_sweep(d, p, m):
     assert np.array_equal(got, want)
 
 
+@given(st.integers(1, 300), st.integers(1, 128))
+@settings(max_examples=12, deadline=None)
+def test_sigjaccard_masked_rows_sweep(p, m):
+    """Pre-gathered-operand masked counts == exact agreement counts.
+
+    The cross-shard straggler scoring gathers one operand from the
+    local signature shard and the other from the exchanged row buffer,
+    so the kernel takes (P, M) rows directly; counts must be exact
+    integers where valid and 0 elsewhere.
+    """
+    rng = np.random.RandomState(p * 13 + m)
+    a = rng.randint(0, 4, size=(p, m)).astype(np.uint32)
+    b = rng.randint(0, 4, size=(p, m)).astype(np.uint32)
+    valid = rng.rand(p) < 0.7
+    got = np.asarray(ops.masked_pair_counts(
+        jnp.asarray(a), jnp.asarray(b), jnp.asarray(valid)))
+    want = np.where(valid, (a == b).sum(axis=1), 0).astype(np.float32)
+    assert np.array_equal(got, want)
+
+
 def test_kernel_tile_size_invariance():
     rng = np.random.RandomState(0)
     ng = rng.randint(0, 2**32, size=(17, 97), dtype=np.uint64
