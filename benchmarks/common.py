@@ -1,12 +1,30 @@
 """Benchmark helpers: timing + the `name,us_per_call,derived` CSV contract."""
 from __future__ import annotations
 
+import sys
 import time
 
 ROWS: list[tuple] = []
 
 
+def peak_rss_mb() -> float:
+    """Process peak RSS in MB (``getrusage``; monotone within a run)."""
+    import resource
+
+    ru = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    # ru_maxrss is KB on Linux, bytes on macOS.
+    return ru / (1024.0 * 1024.0) if sys.platform == "darwin" \
+        else ru / 1024.0
+
+
 def emit(name: str, us_per_call: float, derived: str = ""):
+    # Every row carries the peak RSS at emit time so BENCH_*.json
+    # doubles as a memory trajectory; rows run in a fixed order, so
+    # same-named rows compare apples-to-apples across runs even though
+    # the counter is monotone within one process.
+    if "peak_rss_mb" not in (derived or ""):
+        rss = f"peak_rss_mb={peak_rss_mb():.0f}"
+        derived = f"{derived};{rss}" if derived else rss
     ROWS.append((name, us_per_call, derived))
     print(f"{name},{us_per_call:.1f},{derived}")
 
@@ -38,7 +56,9 @@ def parse_derived(derived: str) -> dict:
 
 def compare_rows(baseline: list[dict], fresh,
                  slowdown: float = 2.0,
-                 min_base_us: float = 1000.0) -> list[str]:
+                 min_base_us: float = 1000.0,
+                 mem_factor: float = 2.0,
+                 min_base_mb: float = 100.0) -> list[str]:
     """Diff a fresh benchmark run against a committed baseline.
 
     Returns failure strings for
@@ -47,11 +67,15 @@ def compare_rows(baseline: list[dict], fresh,
       ``same_clusters`` field is not 1 (correctness canaries — checked
       whether or not the row exists in the baseline),
     * any baseline row missing from the fresh run (a silently
-      disappearing canary must not pass the gate), and
+      disappearing canary must not pass the gate),
     * any row present in both runs whose wall time regressed by more
       than ``slowdown``x (rows under ``min_base_us`` in the baseline
       are skipped — they are dominated by timer noise — as are
-      ``*_saved`` rows, whose value is a benefit, not a cost).
+      ``*_saved`` rows, whose value is a benefit, not a cost), and
+    * any row whose derived ``peak_rss_mb`` regressed by more than
+      ``mem_factor``x against a baseline value >= ``min_base_mb`` (the
+      memory-regression gate; sub-``min_base_mb`` baselines are
+      dominated by the interpreter + JAX runtime footprint).
 
     ``fresh`` is a list of ``(name, us_per_call, derived)`` tuples (the
     ``ROWS`` accumulator) or baseline-shaped dicts.
@@ -77,8 +101,18 @@ def compare_rows(baseline: list[dict], fresh,
                 f"{name}: same_clusters={d['same_clusters']} "
                 f"(expected 1)")
         base = base_by_name.get(name)
-        if base is None or base["us_per_call"] < min_base_us \
-                or name.endswith("_saved"):
+        if base is None or name.endswith("_saved"):
+            continue
+        base_d = parse_derived(base.get("derived", ""))
+        if "peak_rss_mb" in d and "peak_rss_mb" in base_d:
+            base_mb = float(base_d["peak_rss_mb"])
+            fresh_mb = float(d["peak_rss_mb"])
+            if base_mb >= min_base_mb and fresh_mb > mem_factor * base_mb:
+                failures.append(
+                    f"{name}: peak_rss {fresh_mb:.0f}MB vs baseline "
+                    f"{base_mb:.0f}MB ({fresh_mb / base_mb:.2f}x > "
+                    f"{mem_factor:.1f}x)")
+        if base["us_per_call"] < min_base_us:
             continue
         ratio = us / base["us_per_call"]
         if ratio > slowdown:

@@ -34,7 +34,8 @@ def main(argv=None) -> None:
                     help="run the smoke set and diff it against a "
                          "committed BENCH_*.json baseline: exits "
                          "nonzero on a >2x slowdown of any comparable "
-                         "row or on any derived drift != 0 / "
+                         "row, a >2x peak_rss_mb memory regression, "
+                         "or any derived drift != 0 / "
                          "same_clusters != 1 field (the bench-smoke "
                          "CI regression gate)")
     args = ap.parse_args(argv)

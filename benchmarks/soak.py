@@ -1,0 +1,221 @@
+"""Long-ingest soak: a bounded-memory DedupSession under a fixed budget.
+
+Streams ``--steps`` chunks through one ``DedupSession`` with a
+``RetentionPolicy`` (rows evict down to cluster representatives + an LRU
+window, band-index keys compact into Bloom filters) and checks the two
+properties the retention layer promises (DESIGN.md §7):
+
+* **Bounded memory** — peak RSS (``resource.getrusage``) stays under a
+  ceiling derived from the first-step footprint plus a fixed headroom
+  (or an explicit ``--rss-ceiling-mb``).  The per-step retained-row and
+  RSS curves go into the JSON report so a regression is diagnosable.
+* **No cluster drift** — the corpus is built so every duplicate recurs
+  within the retention window; the final clustering must be IDENTICAL
+  (same labels, bit-identical shared sims) to an unevicted append-only
+  session fed the same chunks with the same refine cadence.
+
+Exits nonzero on a ceiling or parity violation — the CI ``soak`` job
+runs ``--steps 20 --retain-budget small`` and uploads the report.
+
+  PYTHONPATH=src python -m benchmarks.soak --steps 20 \
+      --retain-budget small --json soak_report.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+from benchmarks.common import peak_rss_mb as rss_mb
+
+
+def make_chunks(steps: int, fresh_per_step: int, dups_per_step: int,
+                recur_steps: int, seed: int = 0):
+    """Chunk stream whose duplicates all recur within ``recur_steps``.
+
+    Each step carries ``fresh_per_step`` new notes plus
+    ``dups_per_step`` near-exact copies of notes from the previous
+    ``recur_steps`` steps — the regime where bounded retention promises
+    exact parity with the unevicted session.
+    """
+    import numpy as np
+
+    from repro.data import inject_near_duplicates, make_i2b2_like
+
+    rng = np.random.RandomState(seed)
+    chunks, recent = [], []
+    for t in range(steps):
+        fresh = make_i2b2_like(fresh_per_step, seed=seed + 1000 + t)
+        chunk = list(fresh)
+        pool = [n for c in recent[-recur_steps:] for n in c]
+        if pool and dups_per_step:
+            picks = rng.choice(len(pool), size=dups_per_step)
+            dup_src = [pool[i] for i in picks]
+            # Same near-exact mutation the repo's corpus helper uses.
+            mutated, _ = inject_near_duplicates(
+                dup_src, len(dup_src), frac_low=0.0, frac_high=0.005,
+                seed=seed + 2000 + t)
+            chunk.extend(mutated[len(dup_src):])
+        recent.append(fresh)
+        chunks.append(chunk)
+    return chunks
+
+
+def run_session(cfg, chunks, retention, refine_every):
+    from repro.core import DedupSession
+
+    sess = DedupSession(cfg, backend="host", retention=retention)
+    curve = []
+    for t, chunk in enumerate(chunks):
+        snap = sess.ingest(chunk)
+        if retention is None and refine_every and \
+                (t + 1) % refine_every == 0:
+            # The unevicted reference refines on the same cadence the
+            # policy auto-triggers, so the comparison is like-for-like.
+            snap = sess.refine()
+        curve.append({
+            "step": t + 1,
+            "n_docs": snap.n_docs,
+            "retained_rows": snap.retained_rows,
+            "evicted": snap.evicted,
+            "filter_only_hits": snap.filter_only_hits,
+            "refine_merges": snap.refine_merges,
+            "clusters": snap.num_clusters,
+            "rss_mb": round(rss_mb(), 1),
+        })
+    return sess, snap, curve
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--fresh-per-step", type=int, default=40)
+    ap.add_argument("--dups-per-step", type=int, default=16)
+    ap.add_argument("--recur-steps", type=int, default=2,
+                    help="duplicates copy notes at most this many "
+                         "steps back (must fit the retention window)")
+    ap.add_argument("--retain-budget", default="small",
+                    choices=("small", "medium", "unlimited"))
+    ap.add_argument("--key-budget", type=int, default=0,
+                    help="override the preset's per-band key budget so "
+                         "the lossy compaction path is exercised at "
+                         "soak scale (0 = keep the preset's; the CI "
+                         "job passes 256 and then REQUIRES compaction)")
+    ap.add_argument("--refine-every", type=int, default=5)
+    ap.add_argument("--rss-ceiling-mb", type=float, default=0.0,
+                    help="absolute peak-RSS ceiling; 0 derives "
+                         "first-step RSS + --rss-headroom-mb")
+    ap.add_argument("--rss-headroom-mb", type=float, default=512.0)
+    ap.add_argument("--json", default=None,
+                    help="write the report here (CI artifact)")
+    args = ap.parse_args(argv)
+
+    from repro.core import DedupConfig, RetentionPolicy
+
+    from dataclasses import replace as dc_replace
+
+    cfg = DedupConfig(exact_verification=False)
+    policy = RetentionPolicy.preset(args.retain_budget,
+                                    refine_every=args.refine_every)
+    if args.key_budget:
+        policy = dc_replace(policy, band_key_budget=args.key_budget)
+    window_docs = args.recur_steps * (args.fresh_per_step
+                                      + args.dups_per_step)
+    if policy.lru_window < window_docs:
+        print(f"# note: recurrence window {window_docs} docs exceeds "
+              f"the {args.retain_budget!r} LRU window "
+              f"{policy.lru_window}; parity relies on representative "
+              f"band keys")
+
+    chunks = make_chunks(args.steps, args.fresh_per_step,
+                         args.dups_per_step, args.recur_steps)
+
+    t0 = time.perf_counter()
+    sess, snap, curve = run_session(cfg, chunks, policy,
+                                    args.refine_every)
+    bounded_s = time.perf_counter() - t0
+    peak_mb = rss_mb()   # recorded BEFORE the reference run inflates it
+    ceiling = args.rss_ceiling_mb or (curve[0]["rss_mb"]
+                                      + args.rss_headroom_mb)
+
+    t0 = time.perf_counter()
+    _, ref_snap, _ = run_session(cfg, chunks, None, args.refine_every)
+    reference_s = time.perf_counter() - t0
+
+    import numpy as np
+
+    parity = bool(np.array_equal(snap.labels, ref_snap.labels))
+    ref_sims = {(a, b): s for a, b, s in ref_snap.pairs}
+    shared = [(a, b, s) for a, b, s in snap.pairs if (a, b) in ref_sims]
+    sims_ok = all(s == ref_sims[(a, b)] for a, b, s in shared)
+    failures = []
+    if peak_mb > ceiling:
+        failures.append(f"peak RSS {peak_mb:.0f}MB exceeds ceiling "
+                        f"{ceiling:.0f}MB")
+    if not parity:
+        failures.append("final clusters drifted from the unevicted "
+                        "reference session")
+    if not shared:
+        failures.append("no shared verified pairs between bounded and "
+                        "reference runs — degenerate soak config "
+                        "(raise --dups-per-step / --steps)")
+    elif not sims_ok:
+        failures.append("shared verified sims are not bit-identical "
+                        "to the reference")
+    if snap.evicted == 0:
+        failures.append("soak never evicted a row — the budget did "
+                        "not exercise retention")
+    if args.key_budget and sess.band_index.compacted_keys == 0:
+        # Only an explicit override promises compaction at this scale;
+        # preset budgets may legitimately never fill on a short soak.
+        failures.append("soak never compacted a band key — the lossy "
+                        "Bloom path is not being gated (shrink "
+                        "--key-budget or scale the corpus)")
+
+    report = {
+        "steps": args.steps,
+        "retain_budget": args.retain_budget,
+        "refine_every": args.refine_every,
+        "n_docs": snap.n_docs,
+        "clusters": snap.num_clusters,
+        "retained_rows": snap.retained_rows,
+        "evicted": snap.evicted,
+        "filter_only_hits": snap.filter_only_hits,
+        "refine_merges": snap.refine_merges,
+        "band_index": sess.band_index.stats(),
+        "peak_rss_mb": round(peak_mb, 1),
+        "rss_ceiling_mb": round(ceiling, 1),
+        "cluster_parity": parity,
+        "sims_bit_identical": sims_ok,
+        "bounded_seconds": round(bounded_s, 2),
+        "reference_seconds": round(reference_s, 2),
+        "curve": curve,
+        "failures": failures,
+    }
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"# wrote {args.json}")
+
+    print(f"soak: {snap.n_docs} docs in {args.steps} steps, "
+          f"{snap.retained_rows} rows retained ({snap.evicted} evicted, "
+          f"{snap.filter_only_hits} filter-only hits, "
+          f"{snap.refine_merges} refine merges), peak RSS "
+          f"{peak_mb:.0f}MB / ceiling {ceiling:.0f}MB, "
+          f"parity={parity}, {bounded_s:.1f}s "
+          f"(reference {reference_s:.1f}s)")
+    for step in curve:
+        print(f"  step {step['step']:3d}: {step['n_docs']:5d} docs, "
+              f"{step['retained_rows']:5d} retained, "
+              f"rss {step['rss_mb']:.0f}MB")
+    if failures:
+        for msg in failures:
+            print(f"# SOAK FAILURE: {msg}")
+        return 1
+    print("# soak ok")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

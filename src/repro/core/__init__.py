@@ -24,6 +24,11 @@ from repro.core.dist_lsh import (
     make_dedup_step,
     make_streamed_dedup_step,
 )
+from repro.core.retention import (
+    BandBloomFilter,
+    RetentionManager,
+    RetentionPolicy,
+)
 from repro.core.session import (
     BandIndex,
     ClusterSnapshot,
@@ -64,6 +69,9 @@ __all__ = [
     "make_dedup_step",
     "make_streamed_dedup_step",
     "docs_mesh",
+    "BandBloomFilter",
+    "RetentionManager",
+    "RetentionPolicy",
     "BandIndex",
     "ClusterSnapshot",
     "DedupSession",

@@ -525,6 +525,7 @@ def feed_step_groups(
     edge_offset: int = 0,
     verifier=None,
     stream: bool | None = None,
+    on_group_merged=None,
 ) -> StepFeed:
     """Feed one (streamed) dedup-step output into a ``ClusterAccumulator``.
 
@@ -537,6 +538,14 @@ def feed_step_groups(
     device-computed stage-2 scores with the verifier, and feed the
     group through the accumulator.  Edge ids are shifted by
     ``edge_offset`` and range-filtered to ``[0, num_docs)``.
+
+    ``on_group_merged`` (if given) runs after each group's feed — the
+    session's retention layer sweeps evictions here so memory stays
+    bounded even WITHIN a giant step.  The sweep is safe mid-step: it
+    only releases rows of docs that lost union-find roothood outside
+    its protection window, while the remaining groups' edges — and the
+    stage-2 device-score / sig-row-exchange re-score path — reference
+    only this step's own (protected) rows and current roots.
 
     Returns the step's edge/overflow accounting; the overflow fallback
     stays with the caller (it needs the right band source for the ids
@@ -590,6 +599,8 @@ def feed_step_groups(
                 np.asarray(g_out.get("row_overflow", 0)).sum())
         num_edges += source.num_edges
         group_stats.append(acc.feed(source, verifier=verifier))
+        if on_group_merged is not None:
+            on_group_merged()
 
     if device_scored and hasattr(verifier, "clear_scores"):
         # Registered scores are dead once their edges have been fed

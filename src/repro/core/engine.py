@@ -270,6 +270,9 @@ def merge_cluster_rounds(
     edge_threshold: float,
     *,
     max_batch_pairs: int = 8192,
+    roots=None,
+    candidate_pairs=None,
+    sim_cache: dict | None = None,
 ) -> int:
     """Paper §10's second clustering round, batch-verified.
 
@@ -288,44 +291,76 @@ def merge_cluster_rounds(
     O(roots^2) scalar loop — sims are always between *current* roots at
     union time — with O(block) memory for the batch buffer.  Returns
     #merges.
+
+    Incremental-session hooks (``DedupSession.refine``, DESIGN.md §7):
+
+    * ``roots`` — explicit representative candidates (any docs; each is
+      compressed to its current root).  Skips the O(all docs) root scan
+      — the retention layer already knows the live root set.
+    * ``candidate_pairs`` — (E, 2) doc-id pairs to sweep INSTEAD of the
+      full (i, j) cross product (e.g. band collisions among re-banded
+      representatives); each endpoint is compressed to its current root
+      at processing time, so chained merges behave exactly like the
+      full sweep restricted to those pairs.
+    * ``sim_cache`` — external ``{(a, b): sim}`` dict shared with the
+      caller (the accumulator's verified-sim cache): sims the session
+      already verified are never re-dispatched, and sims this round
+      computes become visible to later feeds.
     """
     verifier = as_verifier(verifier)
-    roots = sorted({uf.find(i) for i in range(len(uf.parent))})
-    if len(roots) < 2:
-        return 0
+    if candidate_pairs is not None:
+        cand = np.asarray(candidate_pairs, dtype=np.int64).reshape(-1, 2)
+        if len(cand) == 0:
+            return 0
+        sweep = [(int(a), int(b)) for a, b in cand]
+    else:
+        if roots is None:
+            roots = range(len(uf.parent))
+        roots = sorted({uf.find(int(r)) for r in roots})
+        if len(roots) < 2:
+            return 0
+        sweep = None  # generated lazily below (O(R^2) pairs)
 
     def blocks():
         block = []
-        for i in range(len(roots)):
-            for j in range(i + 1, len(roots)):
-                block.append((i, j))
+        if sweep is not None:
+            for a, b in sweep:
+                block.append((a, b))
                 if len(block) >= max_batch_pairs:
                     yield block
                     block = []
+        else:
+            for i in range(len(roots)):
+                for j in range(i + 1, len(roots)):
+                    block.append((roots[i], roots[j]))
+                    if len(block) >= max_batch_pairs:
+                        yield block
+                        block = []
         if block:
             yield block
 
     merges = 0
-    sim_at: dict[tuple[int, int], float] = {}
+    sim_at = sim_cache if sim_cache is not None else {}
     for block in blocks():
         want = []
-        for i, j in block:
-            a, b = uf.find(roots[i]), uf.find(roots[j])
+        want_set = set()
+        for x, y in block:
+            a, b = uf.find(x), uf.find(y)
             key = (min(a, b), max(a, b))
-            if a != b and key not in sim_at:
-                sim_at[key] = -1.0  # placeholder, filled below
+            if a != b and key not in sim_at and key not in want_set:
+                want_set.add(key)
                 want.append(key)
         if want:
             for key, s in zip(want, verifier(np.array(want,
                                                       dtype=np.int64))):
                 sim_at[key] = float(s)
-        for i, j in block:
-            a, b = uf.find(roots[i]), uf.find(roots[j])
+        for x, y in block:
+            a, b = uf.find(x), uf.find(y)
             if a == b:
                 continue
             key = (min(a, b), max(a, b))
             sim = sim_at.get(key)
-            if sim is None or sim < 0.0:
+            if sim is None:
                 # Roots changed due to a union earlier in this block.
                 sim = float(verifier(np.array([key], dtype=np.int64))[0])
                 sim_at[key] = sim

@@ -1,0 +1,207 @@
+"""Bounded retained state for long-lived dedup sessions (DESIGN.md §7).
+
+``core.session.DedupSession`` (PR 4) retains three things forever: the
+signature matrix (one row per doc), the exact-verifier token store, and
+the ``BandIndex`` bucket lists — so memory grows O(docs) over unbounded
+ingest.  This module is the policy layer that caps all three at
+O(clusters + recency window):
+
+* **Row eviction is lossless.**  The staged engine path-compresses every
+  candidate to its union-find root before verification, so the only
+  signature/token rows a future chunk can ever read are the rows of
+  *current roots* (cluster representatives — SEDD, arXiv 2501.01046,
+  makes the same observation for accelerator-side verification).  A doc
+  that loses roothood (``ThresholdUnionFind.track_deposed``) can have
+  its row released once it ages out of a small LRU window; the window
+  exists so the sharded backend's in-flight step and very recent merges
+  never race an eviction.
+
+* **Band-index compaction is the only lossy mechanism.**  Bucket lists
+  are first rewritten onto retained docs (an evicted member is replaced
+  by its cluster root, so membership hits still produce candidate pairs
+  against retained docs); the *number of keys* is what grows O(docs·b),
+  and once a band exceeds ``band_key_budget`` its oldest keys are
+  compacted into a per-band Bloom-style filter (LSHBloom,
+  arXiv 2411.04257).  A later chunk hitting a compacted key learns that
+  the value was seen but not by whom — counted as ``filter_only_hits``,
+  the recall cost of the compaction.  Duplicates that recur within the
+  retention window always hit exact keys, so clustering is identical to
+  the unbounded session there (the CI soak pins this).
+
+``RetentionPolicy`` is the configuration; ``RetentionManager`` drives
+the sweep (drain deposed roots -> release verifier rows -> rewrite /
+compact the band index) and keeps the incremental root set the session's
+``refine()`` second clustering round re-bands.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+# Distinct 32-bit odd mixing constants (murmur3 / splitmix tails).
+_MIX1 = 0x9E3779B1
+_MIX2 = 0x85EBCA77
+_MIX3 = 0xC2B2AE3D
+_U32 = 0xFFFFFFFF
+
+
+def _mix32(hi: int, lo: int, salt: int) -> int:
+    """Host-side 32-bit avalanche of a (hi, lo) band key + salt."""
+    x = (hi * _MIX1 + lo * _MIX2 + salt * _MIX3 + 0x27D4EB2F) & _U32
+    x ^= x >> 16
+    x = (x * 0x7FEB352D) & _U32
+    x ^= x >> 15
+    x = (x * 0x846CA68B) & _U32
+    x ^= x >> 16
+    return x
+
+
+class BandBloomFilter:
+    """Compact membership filter for compacted (hi, lo) band keys.
+
+    One per band; holds the keys whose exact bucket lists were dropped.
+    No false negatives (a compacted key always hits), false positives at
+    the classic Bloom rate — a false positive only inflates the
+    ``filter_only_hits`` counter, it can never create a wrong edge.
+    """
+
+    def __init__(self, bits: int = 1 << 17, num_hashes: int = 4):
+        if bits <= 0 or bits & (bits - 1):
+            raise ValueError(f"bits must be a power of two, got {bits}")
+        self.bits = int(bits)
+        self.num_hashes = int(num_hashes)
+        self._words = np.zeros(self.bits // 32, dtype=np.uint32)
+        self.n_added = 0
+
+    def _indices(self, hi: int, lo: int):
+        mask = self.bits - 1
+        for salt in range(self.num_hashes):
+            yield _mix32(hi, lo, salt) & mask
+
+    def add(self, key: tuple[int, int]) -> None:
+        hi, lo = int(key[0]), int(key[1])
+        for i in self._indices(hi, lo):
+            self._words[i >> 5] |= np.uint32(1 << (i & 31))
+        self.n_added += 1
+
+    def __contains__(self, key: tuple[int, int]) -> bool:
+        hi, lo = int(key[0]), int(key[1])
+        return all(
+            self._words[i >> 5] & np.uint32(1 << (i & 31))
+            for i in self._indices(hi, lo))
+
+    @property
+    def memory_bytes(self) -> int:
+        return self._words.nbytes
+
+
+@dataclass(frozen=True)
+class RetentionPolicy:
+    """Bounded-memory configuration for a ``DedupSession``.
+
+    ``lru_window``    — most recent docs are never evicted even when
+                        non-root (protects in-flight sharded steps and
+                        gives recurring duplicates an exact match
+                        window).  ``None`` disables row eviction
+                        entirely (append-only retention) while keeping
+                        the incremental root tracking — the cheap way
+                        to get the auto-``refine`` cadence without
+                        opting into eviction.
+    ``band_key_budget`` — max exact (band-value -> docs) keys retained
+                        per band; beyond it the oldest keys compact into
+                        the band's Bloom filter.  ``None`` = unlimited
+                        (row eviction stays on and stays lossless).
+    ``bloom_bits`` / ``bloom_hashes`` — per-band filter geometry.
+    ``refine_every``  — auto-run ``DedupSession.refine()`` (the
+                        incremental second clustering round) every K
+                        ingest steps; 0 disables the auto-trigger
+                        (explicit ``refine()`` calls always work).
+    """
+
+    lru_window: int | None = 512
+    band_key_budget: int | None = None
+    bloom_bits: int = 1 << 17
+    bloom_hashes: int = 4
+    refine_every: int = 0
+
+    PRESETS = ("small", "medium", "unlimited", "none")
+
+    @classmethod
+    def preset(cls, name: str, *, refine_every: int = 0) -> "RetentionPolicy":
+        """Named budgets for drivers/CI (``--retain-budget``)."""
+        if name == "small":
+            return cls(lru_window=128, band_key_budget=2048,
+                       bloom_bits=1 << 16, refine_every=refine_every)
+        if name == "medium":
+            return cls(lru_window=1024, band_key_budget=1 << 16,
+                       refine_every=refine_every)
+        if name == "unlimited":
+            return cls(lru_window=512, band_key_budget=None,
+                       refine_every=refine_every)
+        if name == "none":
+            # Append-only rows + unlimited keys: retention machinery
+            # only maintains the root set (for the refine cadence).
+            return cls(lru_window=None, band_key_budget=None,
+                       refine_every=refine_every)
+        raise ValueError(f"unknown retention preset {name!r}; "
+                         f"one of {cls.PRESETS}")
+
+
+class RetentionManager:
+    """Drives eviction sweeps for one ``DedupSession``.
+
+    Tracks the incremental root set (fed by
+    ``ThresholdUnionFind.drain_deposed``) plus the deposed-but-still-
+    protected backlog, and on each sweep releases verifier rows and
+    rewrites band-index buckets for every doc that is (a) no longer a
+    root and (b) older than the LRU window / explicit protection bound.
+    """
+
+    def __init__(self, policy: RetentionPolicy):
+        self.policy = policy
+        self.roots: set[int] = set()
+        self._pending: list[int] = []
+        self._seen = None  # first sweep learns the session's base
+        self.n_evicted = 0
+
+    @property
+    def n_pending(self) -> int:
+        return len(self._pending)
+
+    def representatives(self) -> list[int]:
+        """Sorted current roots (every one has a retained row)."""
+        return sorted(self.roots)
+
+    def sweep(self, session, protect_from: int | None = None) -> int:
+        """One eviction pass; returns #docs evicted.
+
+        ``protect_from`` additionally shields ids >= that bound (the
+        sharded backend passes its in-flight chunk base so mid-step
+        group merges can evict old state but never the step's own rows).
+        """
+        uf = session.uf
+        if self._seen is None:
+            self._seen = int(session.allocator.base)
+        n_merged = int(session.n_merged)
+        if n_merged > self._seen:
+            self.roots.update(range(self._seen, n_merged))
+            self._seen = n_merged
+        drained = uf.drain_deposed()
+        if drained:
+            self.roots.difference_update(drained)
+            if self.policy.lru_window is not None:
+                self._pending.extend(drained)
+        if self.policy.lru_window is None:
+            return 0                 # append-only rows, roots tracked
+        cutoff = n_merged - self.policy.lru_window
+        if protect_from is not None:
+            cutoff = min(cutoff, int(protect_from))
+        evict = [d for d in self._pending if d < cutoff]
+        if not evict:
+            return 0
+        self._pending = [d for d in self._pending if d >= cutoff]
+        session._release_rows(evict)
+        session.band_index.evict(evict, uf.find)
+        self.n_evicted += len(evict)
+        return len(evict)

@@ -52,8 +52,17 @@ import jax.numpy as jnp
 
 from repro.core import lsh, minhash, shingle
 from repro.core.candidates import BandMatrixSource, ShardedEdgeSource
-from repro.core.engine import ClusterAccumulator, ClusterStats
+from repro.core.engine import (
+    ClusterAccumulator,
+    ClusterStats,
+    merge_cluster_rounds,
+)
 from repro.core.pipeline import DedupConfig
+from repro.core.retention import (
+    BandBloomFilter,
+    RetentionManager,
+    RetentionPolicy,
+)
 from repro.core.unionfind import ThresholdUnionFind
 from repro.core.verify import (
     BatchVerifier,
@@ -109,15 +118,46 @@ class BandIndex:
     collide with this one.  Same-chunk collisions are never emitted
     (the backend's within-chunk source owns those); old-vs-old pairs
     were emitted when the old chunk arrived.
+
+    Bounded retained state (DESIGN.md §7): with ``track_entries`` the
+    index keeps a per-doc reverse map so ``evict`` can rewrite an
+    evicted doc's bucket entries onto its cluster root — membership
+    hits keep producing candidate pairs against *retained* docs, and
+    the engine compresses to roots anyway, so eviction alone changes no
+    clustering outcome.  The unbounded dimension is the KEY count
+    (every unique band value ever seen); ``key_budget`` caps it per
+    band by compacting the least-recently-HIT keys into a per-band
+    ``BandBloomFilter`` (hits refresh recency — a true LRU, so a hot
+    key recurring every chunk is never compacted).  A later hit on a
+    compacted key is counted in
+    ``filter_only_hits`` — the value was seen before, but by a doc the
+    index can no longer name, so the pair cannot be re-verified (the
+    LSHBloom recall trade).
     """
 
-    def __init__(self, num_bands: int):
+    def __init__(self, num_bands: int, *, key_budget: int | None = None,
+                 bloom_bits: int = 1 << 17, bloom_hashes: int = 4,
+                 track_entries: bool = False):
         self._maps: list[dict[tuple[int, int], list[int]]] = [
             {} for _ in range(num_bands)]
+        self._key_budget = key_budget
+        self._bloom_bits = int(bloom_bits)
+        self._bloom_hashes = int(bloom_hashes)
+        self._filters: list[BandBloomFilter | None] = [None] * num_bands
+        self._entries: dict[int, list] | None = (
+            {} if track_entries else None)
+        self.filter_only_hits = 0
+        self.compacted_keys = 0
 
     @property
     def num_bands(self) -> int:
         return len(self._maps)
+
+    def _filter(self, j: int) -> BandBloomFilter:
+        if self._filters[j] is None:
+            self._filters[j] = BandBloomFilter(
+                self._bloom_bits, self._bloom_hashes)
+        return self._filters[j]
 
     def match_then_insert(self, bands: np.ndarray,
                           doc_id_base: int) -> np.ndarray:
@@ -130,6 +170,7 @@ class BandIndex:
         edges: list[tuple[int, int]] = []
         for j, m in enumerate(self._maps):
             col = bands[:, j, :]
+            flt = self._filters[j]
             for i in range(len(col)):
                 key = (int(col[i, 0]), int(col[i, 1]))
                 new_id = doc_id_base + i
@@ -138,11 +179,72 @@ class BandIndex:
                     edges.extend((old, new_id) for old in olds
                                  if old < doc_id_base)
                     olds.append(new_id)
+                    # Refresh recency: the budget sweep pops from the
+                    # FRONT of the dict, so a hit must move its key to
+                    # the end or a HOT key (a duplicate recurring every
+                    # chunk) would be compacted by insertion age and
+                    # break the within-window parity invariant.
+                    m[key] = m.pop(key)
                 else:
+                    if flt is not None and key in flt:
+                        # Seen before, partner compacted away: the pair
+                        # can no longer be exactly re-verified.
+                        self.filter_only_hits += 1
                     m[key] = [new_id]
+                if self._entries is not None:
+                    self._entries.setdefault(new_id, []).append((j, key))
+            if self._key_budget is not None:
+                while len(m) > self._key_budget:
+                    old_key = next(iter(m))
+                    del m[old_key]
+                    self._filter(j).add(old_key)
+                    self.compacted_keys += 1
         if not edges:
             return np.zeros((0, 2), dtype=np.int64)
         return np.array(edges, dtype=np.int64)
+
+    def evict(self, doc_ids, root_of) -> None:
+        """Rewrite evicted docs' bucket entries onto their cluster root.
+
+        ``root_of`` maps a doc id to its current union-find root (the
+        retained representative).  The root inherits the evicted doc's
+        (band, key) entries — re-homed in the reverse map so a later
+        eviction of a deposed root keeps working — and is inserted into
+        the bucket at most once, so bucket lists shrink onto the
+        retained set instead of growing with cluster size.
+        """
+        if self._entries is None:
+            raise ValueError(
+                "BandIndex was built without track_entries; eviction "
+                "needs the per-doc reverse map")
+        for d in doc_ids:
+            d = int(d)
+            for j, key in self._entries.pop(d, ()):
+                olds = self._maps[j].get(key)
+                if olds is None:
+                    continue               # key already compacted
+                try:
+                    olds.remove(d)
+                except ValueError:
+                    continue               # key was compacted + re-seen
+                r = int(root_of(d))
+                if r not in olds:
+                    olds.append(r)
+                    self._entries.setdefault(r, []).append((j, key))
+
+    def stats(self) -> dict:
+        """Memory/recall accounting for reports and the soak benchmark."""
+        return {
+            "n_keys": sum(len(m) for m in self._maps),
+            "n_entries": sum(len(v) for m in self._maps
+                             for v in m.values()),
+            "n_docs_tracked": (len(self._entries)
+                               if self._entries is not None else 0),
+            "compacted_keys": self.compacted_keys,
+            "filter_only_hits": self.filter_only_hits,
+            "bloom_bytes": sum(f.memory_bytes for f in self._filters
+                               if f is not None),
+        }
 
 
 @dataclass
@@ -159,6 +261,12 @@ class ClusterSnapshot:
     device_scored: int = 0      # sharded stage2=device: pass-throughs
     host_rescored: int = 0      # sharded stage2=device: host re-scores
     row_overflow: int = 0       # sharded: cross-shard row-buffer overflow
+    # Retained-state view (bounded-memory sessions, DESIGN.md §7):
+    retained_rows: int = 0      # live verifier rows (== n_docs unevicted)
+    evicted: int = 0            # rows released by the retention policy
+    filter_only_hits: int = 0   # band hits whose partner was compacted
+    refine_merges: int = 0      # second-round merges so far
+    representatives: np.ndarray | None = None  # retained roots (sorted)
 
     @property
     def num_clusters(self) -> int:
@@ -222,6 +330,7 @@ class DedupSession:
         doc_id_base: int = 0,
         verifier: BatchVerifier | None = None,
         stream: bool | None = None,
+        retention: RetentionPolicy | None = None,
         _adopt_streaming=None,
     ):
         if backend not in BACKENDS:
@@ -238,12 +347,28 @@ class DedupSession:
             self.config.tree_threshold,
             use_disjoint_sets=self.config.use_disjoint_sets,
             batch=self.config.verify_batch)
-        self.band_index = BandIndex(self.config.num_bands)
+        self.retention = (RetentionManager(retention)
+                          if retention is not None else None)
+        if self.retention is not None:
+            # Incremental root-representative tracking: each union logs
+            # its deposed root so eviction sweeps never scan all docs.
+            self.acc.uf.track_deposed = True
+        self.band_index = BandIndex(
+            self.config.num_bands,
+            key_budget=(retention.band_key_budget
+                        if retention is not None else None),
+            bloom_bits=(retention.bloom_bits if retention is not None
+                        else 1 << 17),
+            bloom_hashes=(retention.bloom_hashes
+                          if retention is not None else 4),
+            track_entries=retention is not None)
         self.seeds = minhash.default_seeds(self.config.num_hashes)
         self.overflow = 0
         self.retried = 0
         self.row_overflow = 0
         self.steps_ingested = 0
+        self.refine_merges = 0
+        self.refines_run = 0
         # Docs whose merge has completed — snapshots cover these.  With
         # ingest_stream's one-chunk lookahead the allocator runs ahead
         # of the merges, so the two counters differ transiently.
@@ -306,7 +431,9 @@ class DedupSession:
 
     @property
     def signatures(self) -> np.ndarray:
-        """The retained (n_docs, M) signature matrix, row i == doc i.
+        """The retained signature matrix, row i == doc i until the
+        retention policy evicts a row (``verifier.rows_for`` is the
+        eviction-aware accessor).
 
         Owned by the session's verifier (one copy, grown in place);
         empty for exact-mode or external-verifier sessions, which do
@@ -319,6 +446,7 @@ class DedupSession:
 
     def snapshot(self) -> ClusterSnapshot:
         v = self._verifier
+        retained = getattr(v, "n_live_rows", None)
         return ClusterSnapshot(
             n_docs=self.n_docs,
             labels=self.uf.components()[: self.n_docs],
@@ -330,6 +458,15 @@ class DedupSession:
             device_scored=getattr(v, "n_passthrough", 0),
             host_rescored=getattr(v, "n_rescored", 0),
             row_overflow=self.row_overflow,
+            retained_rows=(retained if retained is not None
+                           else self.n_docs),
+            evicted=(self.retention.n_evicted
+                     if self.retention is not None else 0),
+            filter_only_hits=self.band_index.filter_only_hits,
+            refine_merges=self.refine_merges,
+            representatives=(np.array(self.retention.representatives(),
+                                      dtype=np.int64)
+                             if self.retention is not None else None),
         )
 
     # -- ingest ------------------------------------------------------------
@@ -346,6 +483,7 @@ class DedupSession:
         self._check_live()
         pending = self._impl.dispatch(list(texts))
         self._impl.merge(pending)
+        self._post_merge()
         return self.snapshot()
 
     def ingest_tokens(self,
@@ -354,10 +492,11 @@ class DedupSession:
         self._check_live()
         pending = self._impl.dispatch(list(token_lists), tokenized=True)
         self._impl.merge(pending)
+        self._post_merge()
         return self.snapshot()
 
     def ingest_stream(
-        self, chunks: Iterable[list[str]],
+        self, chunks: Iterable[list], *, tokenized: bool = False,
     ) -> Iterator[ClusterSnapshot]:
         """Pipelined multi-chunk ingest: one-chunk dispatch lookahead.
 
@@ -369,17 +508,23 @@ class DedupSession:
         calls (dispatch only allocates ids and launches device work —
         the merges still run in chunk order against the same
         accumulator and retained index).
+
+        ``tokenized=True`` streams pre-tokenized chunks (lists of token
+        lists) — the flag is threaded through to the backend dispatch
+        so already-tokenized documents are never re-tokenized.
         """
         self._check_live()
         pending = None
         for chunk in chunks:
-            nxt = self._impl.dispatch(list(chunk))
+            nxt = self._impl.dispatch(list(chunk), tokenized=tokenized)
             if pending is not None:
                 self._impl.merge(pending)
+                self._post_merge()
                 yield self.snapshot()
             pending = nxt
         if pending is not None:
             self._impl.merge(pending)
+            self._post_merge()
             yield self.snapshot()
 
     def _merge_precomputed(self, token_lists, sig,
@@ -399,6 +544,107 @@ class DedupSession:
         self._impl.merge((base, token_lists, np.asarray(sig),
                           np.asarray(bands)), index=False)
         self._finalized = True
+        return self.snapshot()
+
+    # -- bounded retained state (DESIGN.md §7) ------------------------------
+
+    def _post_merge(self) -> None:
+        """Retention sweep + auto-refine cadence after a chunk merge."""
+        if self.retention is None:
+            return
+        self.retention.sweep(self)
+        every = self.retention.policy.refine_every
+        if every and self.steps_ingested % every == 0:
+            self.refine()
+
+    def _release_rows(self, doc_ids) -> None:
+        """Evict docs' rows from the session verifier (retention hook).
+
+        External verifiers without a ``release_rows`` API keep their
+        rows (the policy still bounds the band index and logs roots).
+        """
+        v = self._verifier
+        if v is not None and hasattr(v, "release_rows"):
+            v.release_rows(doc_ids)
+
+    def _representatives(self) -> list[int]:
+        """Sorted current union-find roots (the retained-rep view).
+
+        Gap ids below the session's base (``doc_id_base`` sessions)
+        are excluded: they have no real document behind them — their
+        verifier rows are blank, so re-banding them would collide every
+        gap with every other gap at a bogus similarity of 1.0.
+        """
+        if self.retention is not None:
+            self.retention.sweep(self)   # sync roots with recent unions
+            return self.retention.representatives()
+        base = self.allocator.base
+        lab = self.uf.components()[: self.n_docs]
+        return sorted({int(r) for r in lab[base:]} if base else
+                      {int(r) for r in lab})
+
+    def _rep_band_pairs(self, reps: list[int],
+                        est: SignatureVerifier) -> np.ndarray:
+        """Re-band representatives, return their collision pairs.
+
+        The second clustering round's candidate generator: band values
+        are deterministic in the signature rows, so representative
+        collisions are exactly the original LSH collisions restricted
+        to the current root set — no O(reps^2) sweep.
+        """
+        rows = est.rows_for(reps)
+        bands = np.asarray(lsh.band_values(
+            jnp.asarray(rows), self.config.rows_per_band))
+        pairs: list[tuple[int, int]] = []
+        for j in range(bands.shape[1]):
+            seen: dict[tuple[int, int], list[int]] = {}
+            col = bands[:, j, :]
+            for i, rep in enumerate(reps):
+                key = (int(col[i, 0]), int(col[i, 1]))
+                olds = seen.get(key)
+                if olds is None:
+                    seen[key] = [rep]
+                else:
+                    pairs.extend((old, rep) for old in olds)
+                    olds.append(rep)
+        if not pairs:
+            return np.zeros((0, 2), dtype=np.int64)
+        return np.array(pairs, dtype=np.int64)
+
+    def refine(self) -> ClusterSnapshot:
+        """Incremental second clustering round (paper §10) over the
+        retained representatives.
+
+        Re-bands only the current cluster representatives and drives
+        their collision pairs through ``engine.merge_cluster_rounds``
+        with the accumulator's verified-sim cache — sims the session
+        already verified are served from cache, and second-round sims
+        become visible to later feeds.  Merges clusters whose
+        representatives clear ``edge_threshold`` (the over-partitioning
+        fix the paper runs as a batch pass; here it is incremental and
+        auto-triggered every ``RetentionPolicy.refine_every`` steps).
+
+        Verifiers without retained signatures (exact / callback
+        sessions) fall back to the full representative-pair sweep.
+        """
+        self._check_live()
+        reps = self._representatives()
+        merges = 0
+        if len(reps) >= 2 and self._verifier is not None:
+            est = self._estimate_verifier()
+            cand = None
+            if isinstance(est, SignatureVerifier) and \
+                    est.signatures.size:
+                cand = self._rep_band_pairs(reps, est)
+            merges = merge_cluster_rounds(
+                self.uf, est, self.config.edge_threshold,
+                roots=reps, candidate_pairs=cand,
+                sim_cache=self.acc.evaluated)
+        self.refine_merges += merges
+        self.refines_run += 1
+        if self.retention is not None and merges:
+            # Second-round unions deposed roots; evict their rows.
+            self.retention.sweep(self)
         return self.snapshot()
 
     # -- shared backend plumbing -------------------------------------------
@@ -449,12 +695,13 @@ class DedupSession:
         """
         if not isinstance(self._verifier, DeviceScoredEdgeVerifier):
             return self._verifier
-        sig = self._verifier.signatures  # shared, zero-copy
         if not hasattr(self, "_est_verifier"):
             self._est_verifier = SignatureVerifier(
-                sig, backend=self.config.resolved_backend())
-        elif self._est_verifier.signatures is not sig:
-            self._est_verifier._set_signatures(sig)
+                self._verifier.signatures,
+                backend=self.config.resolved_backend())
+        # Re-adopt buffer + slot layout every use: chunk extensions
+        # regrow the matrix and retention sweeps rewrite rows in place.
+        self._est_verifier.adopt_layout(self._verifier)
         return self._est_verifier
 
     def _feed_cross_step(self, bands: np.ndarray, base: int) -> None:
@@ -524,6 +771,7 @@ class _StreamingBackend:
     def __init__(self, sess: DedupSession, *, store_path: str,
                  chunk_docs: int, adopt=None):
         self.sess = sess
+        self._owned = adopt is None
         if adopt is not None:
             self.sd = adopt
         else:
@@ -551,6 +799,13 @@ class _StreamingBackend:
             sig = np.stack([self.sd._sig_cache[base + i]
                             for i in range(len(toks))])
             sess._retain(toks, sig)
+            if self._owned:
+                # The rows now live in the session verifier; keeping
+                # them in the phase-1 cache too would store every
+                # signature twice.  (Adopted StreamingDedups keep their
+                # cache — ``default_verifier`` may rebuild from it.)
+                for i in range(len(toks)):
+                    self.sd._sig_cache.pop(base + i, None)
         sess.n_merged = max(sess.n_merged, base + len(toks))
         sess.acc.grow(sess.n_docs)
         sess.acc.feed(self.sd.candidate_source(),
@@ -631,9 +886,18 @@ class _ShardedBackend:
         sess._retain(toks, sig)
         sess.n_merged = base + n_real
         sess.acc.grow(sess.n_docs)
+        on_group = None
+        if sess.retention is not None:
+            # Intra-step eviction between band-group merges: a giant
+            # chunk's own rows are shielded (protect_from=base) — the
+            # remaining groups and the sig-row-exchange re-score path
+            # only ever touch this chunk's rows and retained roots.
+            on_group = lambda: sess.retention.sweep(
+                sess, protect_from=base)
         feed = feed_step_groups(
             sess.acc, out, self.dcfg, num_docs=base + n_real,
-            edge_offset=0, verifier=sess._verifier, stream=self.stream)
+            edge_offset=0, verifier=sess._verifier, stream=self.stream,
+            on_group_merged=on_group)
         sess.overflow += feed.overflow
         sess.row_overflow += feed.row_overflow
         bands = np.asarray(lsh.band_values(jnp.asarray(sig),

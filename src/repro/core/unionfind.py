@@ -35,6 +35,16 @@ class ThresholdUnionFind:
         self.tree_threshold = float(tree_threshold)
         self.n_unions = 0
         self.n_rejected = 0
+        # Root-representative tracking (retention layer, DESIGN.md §7):
+        # every doc starts as the root of its own tree and loses
+        # roothood AT MOST ONCE — ``parent[d]`` changes away from ``d``
+        # only inside ``union`` where ``d`` is the losing root (path
+        # compression only rewires already-deposed nodes).  With
+        # ``track_deposed`` on, each union logs the deposed root, so an
+        # eviction policy can discover newly non-representative docs
+        # incrementally (O(unions drained), never an O(all docs) scan).
+        self.track_deposed = False
+        self.deposed: list[int] = []
 
     def grow(self, n: int) -> None:
         """Extend the forest to cover ``n`` docs (new ids are singletons).
@@ -85,6 +95,8 @@ class ThresholdUnionFind:
             x_root, y_root = y_root, x_root
         # Attach y under x.
         self.parent[y_root] = x_root
+        if self.track_deposed:
+            self.deposed.append(int(y_root))
         if self.rank[x_root] == self.rank[y_root]:
             self.rank[x_root] += 1
         self.min_score[x_root] = min(
@@ -92,6 +104,17 @@ class ThresholdUnionFind:
         )
         self.n_unions += 1
         return True
+
+    def drain_deposed(self) -> list[int]:
+        """Return (and clear) the roots deposed since the last drain.
+
+        Each doc appears at most once across ALL drains (roothood is
+        lost at most once), so a retention sweep can treat the drained
+        list as the exact set of newly eviction-eligible documents.
+        Requires ``track_deposed`` to have been on while the unions ran.
+        """
+        out, self.deposed = self.deposed, []
+        return out
 
     def components(self) -> np.ndarray:
         """Root label for every node (fully compressed)."""

@@ -123,10 +123,99 @@ class SignatureVerifier(BatchVerifier):
         # past ``_n_rows`` after a capacity-doubling copy, so repeated
         # chunk appends are amortized O(chunk), and the device copy
         # (jnp/pallas backends) is refreshed lazily at the next verify.
+        # Row i holds doc i until the first ``release_rows`` call, which
+        # switches the verifier to an explicit doc -> slot map with a
+        # free-slot pool (retention layer, DESIGN.md §7).
         self._buf = sig
         self._n_rows = len(sig)
         self.signatures = sig
         self._dev_dirty = True
+        self._slot_of: dict[int, int] | None = None
+        self._free: list[int] = []
+        self._n_docs = len(sig)
+        # Bumped on every mutation (extend/release/reset) so a sharing
+        # view (``adopt_layout``) can invalidate its device copy only
+        # when the matrix actually changed.
+        self._mutations = getattr(self, "_mutations", 0) + 1
+
+    # -- retention (free-slot pool) ----------------------------------------
+
+    @property
+    def n_live_rows(self) -> int:
+        """Rows currently holding a retained document's signature."""
+        if self._slot_of is None:
+            return self._n_rows
+        return len(self._slot_of)
+
+    def _slot_index(self, ids: np.ndarray) -> np.ndarray:
+        """Translate global doc ids to physical row slots."""
+        if self._slot_of is None:
+            return ids
+        so = self._slot_of
+        try:
+            return np.fromiter((so[int(i)] for i in ids.ravel()),
+                               dtype=np.int64,
+                               count=ids.size).reshape(ids.shape)
+        except KeyError as e:
+            raise KeyError(
+                f"doc {e.args[0]} has no retained signature row (evicted "
+                "by the retention policy); only union-find roots and the "
+                "LRU window are verifiable") from None
+
+    def release_rows(self, doc_ids) -> int:
+        """Evict docs' signature rows into the free-slot pool.
+
+        The first call switches the verifier from the implicit
+        ``row i == doc i`` layout to an explicit doc -> slot map; freed
+        slots are reused by later ``extend_signatures`` calls, so the
+        matrix stops growing once eviction keeps pace with ingest
+        (memory O(live rows), not O(docs ever ingested)).  Releasing an
+        unknown / already-released doc raises.
+        """
+        if self._slot_of is None:
+            self._slot_of = {i: i for i in range(self._n_rows)}
+        released = 0
+        for d in doc_ids:
+            d = int(d)
+            try:
+                slot = self._slot_of.pop(d)
+            except KeyError:
+                raise KeyError(f"doc {d} has no retained row to release")
+            self._free.append(slot)
+            released += 1
+        self._mutations += 1
+        return released
+
+    def adopt_layout(self, other: "SignatureVerifier") -> None:
+        """Share ``other``'s retained matrix and slot layout (zero-copy).
+
+        The session keeps a plain-estimator view over a
+        ``DeviceScoredEdgeVerifier``'s matrix for host-generated edges;
+        eviction mutates rows in place, so the view must re-adopt the
+        owner's buffer/slot state before each use.
+        """
+        if self.signatures is not other.signatures:
+            self._buf = other._buf
+            self._n_rows = other._n_rows
+            self.signatures = other.signatures
+        self._slot_of = other._slot_of
+        self._free = other._free
+        self._n_docs = other._n_docs
+        # Slot reuse rewrites rows without replacing the array object,
+        # so object identity alone cannot tell whether the device copy
+        # is stale — the owner's mutation counter can (and it spares
+        # jnp/pallas backends a full re-upload on every adopt).
+        if getattr(self, "_adopted_mutations", None) != other._mutations:
+            self._dev_dirty = True
+            self._adopted_mutations = other._mutations
+
+    def rows_for(self, doc_ids) -> np.ndarray:
+        """Retained signature rows for ``doc_ids`` (eviction-aware)."""
+        ids = np.asarray(doc_ids, dtype=np.int64)
+        if ids.size == 0:
+            return np.zeros((0,) + self.signatures.shape[1:],
+                            dtype=self.signatures.dtype)
+        return self.signatures[self._slot_index(ids)]
 
     def _device_signatures(self):
         import jax.numpy as jnp
@@ -157,6 +246,30 @@ class SignatureVerifier(BatchVerifier):
             raise ValueError(
                 f"signature width {rows.shape[-1]} != existing "
                 f"{self.signatures.shape[-1]}")
+        if self._slot_of is not None:
+            # Retention mode: fill freed slots before growing the
+            # matrix — new docs take the next sequential global ids.
+            n_append = max(0, len(rows) - len(self._free))
+            n_new = self._n_rows + n_append
+            if n_new > len(self._buf):
+                cap = max(n_new, 2 * max(1, len(self._buf)))
+                buf = np.empty((cap, self._buf.shape[1]),
+                               dtype=self._buf.dtype)
+                buf[: self._n_rows] = self._buf[: self._n_rows]
+                self._buf = buf
+            for row in rows:
+                if self._free:
+                    slot = self._free.pop()
+                else:
+                    slot = self._n_rows
+                    self._n_rows += 1
+                self._buf[slot] = row
+                self._slot_of[self._n_docs] = slot
+                self._n_docs += 1
+            self.signatures = self._buf[: self._n_rows]
+            self._dev_dirty = True
+            self._mutations += 1
+            return
         n_new = self._n_rows + len(rows)
         if n_new > len(self._buf):
             cap = max(n_new, 2 * max(1, len(self._buf)))
@@ -166,10 +279,13 @@ class SignatureVerifier(BatchVerifier):
             self._buf = buf
         self._buf[self._n_rows : n_new] = rows
         self._n_rows = n_new
+        self._n_docs = n_new
         self.signatures = self._buf[: self._n_rows]
         self._dev_dirty = True
+        self._mutations += 1
 
     def _verify_batch(self, pairs: np.ndarray) -> np.ndarray:
+        pairs = self._slot_index(np.asarray(pairs))
         a_idx, b_idx = pairs[:, 0], pairs[:, 1]
         if self.backend == "numpy":
             a = self.signatures[a_idx]
@@ -331,6 +447,12 @@ class ExactJaccardVerifier(BatchVerifier):
             np.asarray(r, dtype=np.int64) for r in id_rows]
         self._vocab = _vocab        # n-gram -> id (None: raw-id rows only)
         self._ngram = _ngram
+        # Retention: None = implicit "row i == doc i"; first
+        # release_rows switches to a doc -> slot map + free pool (same
+        # protocol as SignatureVerifier).
+        self._slot_of: dict[int, int] | None = None
+        self._free: list[int] = []
+        self._n_docs = len(self._rows)
         self._rebuild()
 
     def _pad_rows(self, rows: list[np.ndarray], row0: int,
@@ -370,14 +492,20 @@ class ExactJaccardVerifier(BatchVerifier):
         amortized O(chunk) — capacity-doubling row buffers, like
         ``SignatureVerifier.extend_signatures`` — while the new rows
         fit the current row width; only a chunk containing a longer
-        document than any before re-pads the whole matrix.
+        document than any before re-pads the whole matrix.  In
+        retention mode (after a ``release_rows`` call) freed slots are
+        reused before the buffers grow.
         """
         if not id_rows:
             return
         new = [np.asarray(r, dtype=np.int64) for r in id_rows]
+        if self._slot_of is not None:
+            self._extend_into_slots(new)
+            return
         n0 = self._n_rows
         n1 = n0 + len(new)
         self._rows.extend(new)
+        self._n_docs = n1
         if max((len(r) for r in new), default=1) > self._lmax:
             self._rebuild()
             return
@@ -393,6 +521,84 @@ class ExactJaccardVerifier(BatchVerifier):
         self._n_rows = n1
         self.ids = self._ids_buf[:n1]
         self.lengths = self._len_buf[:n1]
+
+    def _extend_into_slots(self, new: list[np.ndarray]) -> None:
+        """Retention-mode extension: fill freed slots, then append."""
+        slots = []
+        for row in new:
+            if self._free:
+                slot = self._free.pop()
+                self._rows[slot] = row
+            else:
+                slot = len(self._rows)
+                self._rows.append(row)
+            slots.append(slot)
+            self._slot_of[self._n_docs] = slot
+            self._n_docs += 1
+        if max((len(r) for r in new), default=1) > self._lmax:
+            self._rebuild()            # one full re-pad at the new width
+            return
+        n1 = len(self._rows)
+        if n1 > len(self._ids_buf):
+            n0 = self._n_rows
+            cap = max(n1, 2 * max(1, len(self._ids_buf)))
+            ids_buf = np.empty((cap, self._lmax), dtype=np.int64)
+            ids_buf[:n0] = self._ids_buf[:n0]
+            len_buf = np.empty((cap,), dtype=np.int64)
+            len_buf[:n0] = self._len_buf[:n0]
+            self._ids_buf, self._len_buf = ids_buf, len_buf
+        for slot, row in zip(slots, new):
+            self._ids_buf[slot] = self._pad_rows([row], slot,
+                                                 self._lmax)[0]
+            self._len_buf[slot] = len(row)
+        self._n_rows = n1
+        self.ids = self._ids_buf[:n1]
+        self.lengths = self._len_buf[:n1]
+
+    # -- retention (free-slot pool) ----------------------------------------
+
+    @property
+    def n_live_rows(self) -> int:
+        """Rows currently holding a retained document's n-gram ids."""
+        if self._slot_of is None:
+            return self._n_rows
+        return len(self._slot_of)
+
+    def _slot_index(self, ids: np.ndarray) -> np.ndarray:
+        if self._slot_of is None:
+            return ids
+        so = self._slot_of
+        try:
+            return np.fromiter((so[int(i)] for i in ids.ravel()),
+                               dtype=np.int64,
+                               count=ids.size).reshape(ids.shape)
+        except KeyError as e:
+            raise KeyError(
+                f"doc {e.args[0]} has no retained token row (evicted by "
+                "the retention policy); only union-find roots and the "
+                "LRU window are verifiable") from None
+
+    def release_rows(self, doc_ids) -> int:
+        """Evict docs' interned-id rows into the free-slot pool.
+
+        Frees the per-doc id array immediately (the dominant token-store
+        memory); the fixed-width padded row is reused by the next
+        extension.
+        """
+        if self._slot_of is None:
+            self._slot_of = {i: i for i in range(self._n_rows)}
+        released = 0
+        for d in doc_ids:
+            d = int(d)
+            try:
+                slot = self._slot_of.pop(d)
+            except KeyError:
+                raise KeyError(f"doc {d} has no retained row to release")
+            self._rows[slot] = np.zeros((0,), dtype=np.int64)
+            self._len_buf[slot] = 0
+            self._free.append(slot)
+            released += 1
+        return released
 
     def extend_token_lists(self, token_lists: list[list[str]]) -> None:
         """Intern + append new documents using the persistent vocab.
@@ -430,6 +636,7 @@ class ExactJaccardVerifier(BatchVerifier):
         return cls(rows, batch_pairs=batch_pairs, _vocab=vocab, _ngram=n)
 
     def _verify_batch(self, pairs: np.ndarray) -> np.ndarray:
+        pairs = self._slot_index(np.asarray(pairs))
         a_idx, b_idx = pairs[:, 0], pairs[:, 1]
         merged = np.concatenate(
             [self.ids[a_idx], self.ids[b_idx]], axis=1

@@ -27,6 +27,12 @@ def report_session(mode: str, snap, seconds: float, extra: str = ""):
     duplicates, verify throughput) so the three modes are comparable at
     a glance.
     """
+    retain = ""
+    if snap.evicted or snap.refine_merges or snap.filter_only_hits:
+        retain = (f", {snap.retained_rows} rows retained "
+                  f"({snap.evicted} evicted, "
+                  f"{snap.filter_only_hits} filter-only hits, "
+                  f"{snap.refine_merges} refine merges)")
     print(f"{mode}: {snap.n_docs} docs ingested, "
           f"{snap.num_clusters} clusters, "
           f"{snap.num_duplicates} duplicates, "
@@ -34,7 +40,7 @@ def report_session(mode: str, snap, seconds: float, extra: str = ""):
           f"({snap.stats.pairs_excluded} excluded) in "
           f"{snap.stats.verify_batches} batches "
           f"({snap.stats.verify_pairs_per_second:.0f} pairs/s)"
-          f"{extra}, {seconds:.2f}s total")
+          f"{extra}{retain}, {seconds:.2f}s total")
 
 
 def main(argv=None):
@@ -74,6 +80,17 @@ def main(argv=None):
                          "them incrementally through one DedupSession "
                          "(sharded mode pipelines: merge of step t "
                          "overlaps the shuffle of step t+1)")
+    ap.add_argument("--retain-budget", default="none",
+                    choices=("none", "small", "medium", "unlimited"),
+                    help="retained-state eviction policy: evict "
+                         "signature/token rows down to cluster "
+                         "representatives + an LRU window and compact "
+                         "old band-index keys into per-band Bloom "
+                         "filters (none = PR 4 append-only retention)")
+    ap.add_argument("--refine-every", type=int, default=0,
+                    help="auto-run the incremental second clustering "
+                         "round (DedupSession.refine) every K ingest "
+                         "steps (0 = off)")
     args = ap.parse_args(argv)
 
     if args.sharded and args.devices:
@@ -82,8 +99,15 @@ def main(argv=None):
 
     import numpy as np
     import jax
-    from repro.core import DedupConfig, DedupSession
+    from repro.core import DedupConfig, DedupSession, RetentionPolicy
     from repro.data import inject_near_duplicates, make_i2b2_like
+
+    retention = None
+    if args.retain_budget != "none" or args.refine_every:
+        # "none" + --refine-every keeps rows append-only (no eviction)
+        # while still tracking roots for the auto-refine cadence.
+        retention = RetentionPolicy.preset(
+            args.retain_budget, refine_every=args.refine_every)
 
     notes = make_i2b2_like(args.notes)
     notes, prov = inject_near_duplicates(notes, args.dups)
@@ -116,7 +140,8 @@ def main(argv=None):
         # host path uses (or the device-score registry for stage2
         # device).
         sess = DedupSession(replace(cfg, exact_verification=False),
-                            backend="sharded", dist_config=dcfg)
+                            backend="sharded", dist_config=dcfg,
+                            retention=retention)
         t0 = time.perf_counter()
         for snap in sess.ingest_stream(chunks):
             pass
@@ -147,15 +172,20 @@ def main(argv=None):
             verifier = ExactJaccardVerifier.from_token_lists(
                 toks, cfg.ngram)
         sess = DedupSession(cfg, backend="streaming",
-                            chunk_docs=args.chunk, verifier=verifier)
+                            chunk_docs=args.chunk, verifier=verifier,
+                            retention=retention)
         t0 = time.perf_counter()
-        for a, b in zip(bounds, bounds[1:]):
-            snap = sess.ingest_tokens(toks[a:b])
+        # Pre-tokenized chunks stream with the tokenized flag threaded
+        # through, so nothing downstream re-tokenizes or re-stores them.
+        for snap in sess.ingest_stream(
+                (toks[a:b] for a, b in zip(bounds, bounds[1:])),
+                tokenized=True):
+            pass
         dt = time.perf_counter() - t0
         report_session(f"streaming[{args.steps} step(s)]", snap, dt)
         return
 
-    sess = DedupSession(cfg, backend="host")
+    sess = DedupSession(cfg, backend="host", retention=retention)
     t0 = time.perf_counter()
     for chunk in chunks:
         snap = sess.ingest(chunk)

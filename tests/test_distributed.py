@@ -392,6 +392,57 @@ def test_session_multistep_sharded_matches_single_step():
 
 
 @pytest.mark.slow
+def test_session_eviction_multidevice_keeps_parity_and_device_scoring():
+    """Bounded retention on the 8-device sharded backend.
+
+    A tight LRU window evicts retained rows between steps (and between
+    band-group merges, via the feed hook); clusters and per-edge sims
+    must stay identical to the append-only session, and with
+    stage2="device" + the sig-row exchange the host re-score path must
+    stay pinned at ZERO on the no-overflow path — eviction never evicts
+    a row the device-scoring merge still needs.
+    """
+    run_with_devices("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import DedupConfig, DedupSession, RetentionPolicy
+        from repro.core.dist_lsh import DistLSHConfig, docs_mesh
+        from repro.data import make_i2b2_like, inject_near_duplicates
+        notes = make_i2b2_like(56, seed=0)
+        notes, _ = inject_near_duplicates(notes, 8, frac_low=0.0,
+                                          frac_high=0.005, seed=1)
+        # Interleave so duplicate pairs complete in EARLY chunks —
+        # their deposed roots age out of the LRU window and evict.
+        order = np.random.RandomState(2).permutation(len(notes))
+        notes = [notes[i] for i in order]
+        cfg = DedupConfig(edge_threshold=0.88, exact_verification=False)
+        base = dict(edge_capacity=4096, edge_threshold=0.88,
+                    bucket_slack=16.0, band_groups=2)
+        # Two equal-size chunks: one compiled step shape, four feeds.
+        chunks = [[notes[i] for i in idx] for idx in
+                  np.array_split(np.arange(len(notes)), 2)]
+        for stage2 in ("host", "device"):
+            dcfg = DistLSHConfig(**base, stage2=stage2)
+            plain = DedupSession(cfg, backend="sharded",
+                                 dist_config=dcfg)
+            for c in chunks:
+                ref = plain.ingest(c)
+            sess = DedupSession(cfg, backend="sharded",
+                                dist_config=dcfg,
+                                retention=RetentionPolicy(lru_window=8))
+            for c in chunks:
+                snap = sess.ingest(c)
+            assert snap.overflow == 0 and snap.row_overflow == 0
+            assert snap.evicted > 0, "eviction never ran"
+            np.testing.assert_array_equal(snap.labels, ref.labels)
+            assert snap.pairs == ref.pairs
+            if stage2 == "device":
+                assert snap.device_scored > 0
+                assert snap.host_rescored == 0, snap.host_rescored
+        print("session eviction multidevice ok")
+    """, n_devices=8)
+
+
+@pytest.mark.slow
 def test_dist_lsh_overflow_retry_through_engine():
     """Device buffer overflow falls back through the same engine.
 

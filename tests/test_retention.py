@@ -1,0 +1,519 @@
+"""Bounded retained state (DESIGN.md §7): eviction, Bloom compaction,
+free-slot pools, and the incremental second clustering round.
+
+The load-bearing pin: a session with retention ON (rows evicted down to
+cluster representatives + an LRU window) produces clusters and verified
+sims IDENTICAL to the PR 4 append-only session — eviction is lossless
+because the engine only ever verifies union-find roots, and roots are
+always retained.  Band-index KEY compaction (the Bloom layer) is the
+only lossy mechanism and is budget-gated + counted.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    BandBloomFilter,
+    DedupConfig,
+    DedupPipeline,
+    DedupSession,
+    RetentionPolicy,
+)
+from repro.core.engine import merge_cluster_rounds
+from repro.core.session import BandIndex
+from repro.core.unionfind import ThresholdUnionFind
+from repro.core.verify import (
+    CallbackVerifier, ExactJaccardVerifier, SignatureVerifier,
+)
+from repro.data import inject_near_duplicates, make_i2b2_like
+
+
+def _corpus(n=48, dups=32, seed=0):
+    """Near-exact duplicate mass so unions (and evictions) happen."""
+    notes = make_i2b2_like(n, seed=seed)
+    notes, _ = inject_near_duplicates(notes, dups, frac_low=0.0,
+                                      frac_high=0.005, seed=seed + 1)
+    # Interleave so duplicates land in different chunks than sources.
+    rng = np.random.RandomState(seed + 2)
+    order = rng.permutation(len(notes))
+    return [notes[i] for i in order]
+
+
+def _chunks(notes, k):
+    return [[notes[i] for i in idx]
+            for idx in np.array_split(np.arange(len(notes)), k)]
+
+
+def _assert_same_session_outcome(snap, ref_snap):
+    np.testing.assert_array_equal(snap.labels, ref_snap.labels)
+    assert snap.pairs == ref_snap.pairs   # bit-identical verified sims
+
+
+TIGHT = RetentionPolicy(lru_window=10, band_key_budget=None)
+
+
+# -- eviction == append-only, across backends ------------------------------
+
+@pytest.mark.parametrize("exact", [True, False])
+def test_host_evicted_session_matches_append_only(exact):
+    notes = _corpus()
+    cfg = DedupConfig(exact_verification=exact)
+    chunks = _chunks(notes, 6)
+    plain = DedupSession(cfg, backend="host")
+    for c in chunks:
+        ref_snap = plain.ingest(c)
+    sess = DedupSession(cfg, backend="host", retention=TIGHT)
+    for c in chunks:
+        snap = sess.ingest(c)
+    _assert_same_session_outcome(snap, ref_snap)
+    assert snap.evicted > 0, "budget never exercised eviction"
+    assert snap.retained_rows == snap.n_docs - snap.evicted
+    assert snap.filter_only_hits == 0      # no key budget -> lossless
+    # representatives are exactly the current roots
+    roots = sorted({int(r) for r in snap.labels})
+    assert snap.representatives.tolist() == roots
+
+
+def test_streaming_evicted_session_matches_append_only():
+    notes = _corpus(seed=3)
+    cfg = DedupConfig(exact_verification=False)
+    chunks = _chunks(notes, 5)
+    plain = DedupSession(cfg, backend="streaming", chunk_docs=16)
+    for c in chunks:
+        ref_snap = plain.ingest(c)
+    sess = DedupSession(cfg, backend="streaming", chunk_docs=16,
+                        retention=TIGHT)
+    for c in chunks:
+        snap = sess.ingest(c)
+    _assert_same_session_outcome(snap, ref_snap)
+    assert snap.evicted > 0
+
+
+@pytest.mark.parametrize("stage2", ["host", "device"])
+def test_sharded_evicted_session_matches_append_only(stage2):
+    from repro.core.dist_lsh import DistLSHConfig
+
+    rng = np.random.RandomState(0)
+    vocab = [f"t{i}" for i in range(300)]
+    docs = [" ".join(rng.choice(vocab, size=48)) for _ in range(32)]
+    docs[5] = docs[3]
+    docs[21] = docs[3]          # cross-chunk duplicate
+    docs[29] = docs[11]
+    cfg = DedupConfig(ngram=4, num_hashes=20, edge_threshold=0.5,
+                      exact_verification=False)
+    dcfg = DistLSHConfig(ngram=4, num_hashes=20, verify_k=8,
+                         edge_capacity=256, edge_threshold=0.5,
+                         bucket_slack=16.0, band_groups=2,
+                         stage2=stage2)
+    chunks = _chunks(docs, 4)
+    plain = DedupSession(cfg, backend="sharded", dist_config=dcfg)
+    for c in chunks:
+        ref_snap = plain.ingest(c)
+    sess = DedupSession(cfg, backend="sharded", dist_config=dcfg,
+                        retention=RetentionPolicy(lru_window=6))
+    for c in chunks:
+        snap = sess.ingest(c)
+    _assert_same_session_outcome(snap, ref_snap)
+    assert snap.evicted > 0
+    assert snap.overflow == 0
+    if stage2 == "device":
+        # Eviction must not push device-scored edges onto the host
+        # re-score path: the no-overflow pin survives retention.
+        assert snap.host_rescored == 0, snap.host_rescored
+
+
+def test_evicted_session_property_hypothesis():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(deadline=None, max_examples=15)
+    @given(seed=st.integers(0, 2**10), n_chunks=st.integers(1, 6),
+           window=st.integers(1, 40))
+    def prop(seed, n_chunks, window):
+        notes = _corpus(30, 20, seed=seed)
+        cfg = DedupConfig(exact_verification=False)
+        chunks = _chunks(notes, n_chunks)
+        plain = DedupSession(cfg, backend="host")
+        for c in chunks:
+            ref_snap = plain.ingest(c)
+        ref_snap = plain.refine()
+        sess = DedupSession(
+            cfg, backend="host",
+            retention=RetentionPolicy(lru_window=window))
+        for c in chunks:
+            sess.ingest(c)
+        snap = sess.refine()
+        _assert_same_session_outcome(snap, ref_snap)
+
+    prop()
+
+
+# -- bounded key budget: recurrence inside the window stays exact ----------
+
+def test_key_budget_keeps_parity_for_recurring_duplicates():
+    cfg = DedupConfig(exact_verification=False)
+    rng = np.random.RandomState(7)
+    chunks, recent = [], []
+    for t in range(6):
+        fresh = make_i2b2_like(12, seed=100 + t)
+        chunk = list(fresh)
+        if recent:
+            pool = [n for c in recent[-2:] for n in c]
+            picks = rng.choice(len(pool), size=4)
+            dup, _ = inject_near_duplicates(
+                [pool[i] for i in picks], 4, frac_low=0.0,
+                frac_high=0.005, seed=200 + t)
+            chunk.extend(dup[4:])
+        recent.append(fresh)
+        chunks.append(chunk)
+    plain = DedupSession(cfg, backend="host")
+    for c in chunks:
+        ref_snap = plain.ingest(c)
+    sess = DedupSession(cfg, backend="host",
+                        retention=RetentionPolicy(lru_window=40,
+                                                  band_key_budget=48))
+    for c in chunks:
+        snap = sess.ingest(c)
+    # Compacted keys may drop sub-threshold cross-step PAIRS (that loss
+    # is the counted recall trade) but duplicates recur within the
+    # window, so the CLUSTERS are identical and every shared pair's sim
+    # is bit-identical.
+    np.testing.assert_array_equal(snap.labels, ref_snap.labels)
+    ref_sims = {(a, b): s for a, b, s in ref_snap.pairs}
+    shared = [(a, b, s) for a, b, s in snap.pairs if (a, b) in ref_sims]
+    assert shared and all(s == ref_sims[(a, b)] for a, b, s in shared)
+    assert sess.band_index.compacted_keys > 0, \
+        "budget never compacted a key"
+    assert snap.evicted > 0
+
+
+def test_key_budget_is_lru_hot_key_survives_churn():
+    """Regression: compaction must pop the least-recently-HIT key, not
+    the least-recently-inserted one.  A template note duplicated every
+    chunk keeps hitting its band keys; fresh-note churn far beyond the
+    key budget must compact the cold keys, never the hot ones — under
+    FIFO compaction the template's chunk-1 keys were evicted and its
+    recurring duplicates stopped clustering."""
+    cfg = DedupConfig(exact_verification=False)
+    template = make_i2b2_like(1, seed=99)[0]
+    chunks = []
+    for t in range(10):
+        dup, _ = inject_near_duplicates([template], 1, frac_low=0.0,
+                                        frac_high=0.005, seed=300 + t)
+        chunks.append(make_i2b2_like(12, seed=400 + t) + [dup[1]])
+    plain = DedupSession(cfg, backend="host")
+    for c in chunks:
+        ref_snap = plain.ingest(c)
+    sess = DedupSession(cfg, backend="host",
+                        retention=RetentionPolicy(lru_window=30,
+                                                  band_key_budget=64))
+    for c in chunks:
+        snap = sess.ingest(c)
+    assert sess.band_index.compacted_keys > 0   # churn exceeded budget
+    np.testing.assert_array_equal(snap.labels, ref_snap.labels)
+    # all 10 template dups ended in ONE cluster (ids 12, 25, 38, ...)
+    dup_ids = [13 * t + 12 for t in range(10)]
+    assert len({int(snap.labels[i]) for i in dup_ids}) == 1
+
+
+# -- BandIndex compaction + eviction units ---------------------------------
+
+def test_band_index_evict_rewrites_onto_root():
+    idx = BandIndex(1, track_entries=True)
+    b = np.array([[[1, 1]], [[1, 1]], [[2, 2]]], dtype=np.uint32)
+    idx.match_then_insert(b, 0)               # docs 0, 1, 2
+    uf = ThresholdUnionFind(5, 0.3)
+    uf.union(0, 1, 1.0)                       # 1 deposed under 0
+    idx.evict([1], uf.find)
+    # doc 3 matching (1, 1) pairs with retained docs only (root 0)
+    edges = idx.match_then_insert(
+        np.array([[[1, 1]]], dtype=np.uint32), 3)
+    assert sorted(map(tuple, edges.tolist())) == [(0, 3)]
+    assert idx.filter_only_hits == 0
+
+
+def test_band_index_key_budget_compacts_into_bloom():
+    idx = BandIndex(1, key_budget=2, track_entries=True)
+    b = np.array([[[1, 1]], [[2, 2]], [[3, 3]]], dtype=np.uint32)
+    idx.match_then_insert(b, 0)               # 3 keys > budget 2
+    assert idx.compacted_keys == 1            # oldest key (1, 1) compacted
+    # A later doc with the compacted value: partner unknown -> counted,
+    # no edge.
+    edges = idx.match_then_insert(
+        np.array([[[1, 1]]], dtype=np.uint32), 3)
+    assert len(edges) == 0
+    assert idx.filter_only_hits == 1
+    # Values still exact keep producing pairs.
+    edges = idx.match_then_insert(
+        np.array([[[3, 3]]], dtype=np.uint32), 4)
+    assert sorted(map(tuple, edges.tolist())) == [(2, 4)]
+    st = idx.stats()
+    assert st["compacted_keys"] == idx.compacted_keys
+    assert st["bloom_bytes"] > 0
+
+
+def test_bloom_filter_membership():
+    flt = BandBloomFilter(bits=1 << 12, num_hashes=4)
+    rng = np.random.RandomState(0)
+    added = rng.randint(0, 2**31, size=(100, 2))
+    absent = rng.randint(2**31, 2**32, size=(100, 2), dtype=np.int64)
+    keys = [(int(a), int(b)) for a, b in np.concatenate([added, absent])]
+    for k in keys[:100]:
+        flt.add(k)
+    assert all(k in flt for k in keys[:100]), "no false negatives, ever"
+    fp = sum(1 for k in keys[100:] if k in flt)
+    assert fp < 30, f"false-positive rate implausibly high: {fp}/100"
+    with pytest.raises(ValueError):
+        BandBloomFilter(bits=1000)            # not a power of two
+
+
+# -- verifier free-slot pools ----------------------------------------------
+
+def test_signature_verifier_free_slot_pool():
+    rng = np.random.RandomState(2)
+    sig = rng.randint(0, 50, size=(12, 40)).astype(np.uint32)
+    v = SignatureVerifier(sig[:8].copy())
+    ref = SignatureVerifier(sig)
+    v.release_rows([1, 4, 6])
+    assert v.n_live_rows == 5
+    cap_before = len(v._buf)
+    v.extend_signatures(sig[8:11])            # docs 8..10 fill 3 slots
+    assert len(v._buf) == cap_before, "free slots must be reused"
+    v.extend_signatures(sig[11:12])           # doc 11 appends
+    assert v.n_live_rows == 9
+    live_pairs = np.array([(0, 8), (2, 9), (5, 10), (3, 11), (0, 2)],
+                          dtype=np.int64)
+    np.testing.assert_array_equal(v(live_pairs), ref(live_pairs))
+    with pytest.raises(KeyError):
+        v(np.array([[0, 4]]))                 # evicted doc
+    with pytest.raises(KeyError):
+        v.release_rows([4])                   # double release
+
+
+def test_signature_verifier_slot_pool_jnp_backend():
+    rng = np.random.RandomState(5)
+    sig = rng.randint(0, 50, size=(10, 40)).astype(np.uint32)
+    v = SignatureVerifier(sig[:8].copy(), backend="jnp")
+    ref = SignatureVerifier(sig)
+    v.release_rows([2, 5])
+    v.extend_signatures(sig[8:])              # docs 8, 9 reuse slots
+    pairs = np.array([(0, 8), (1, 9), (3, 8)], dtype=np.int64)
+    np.testing.assert_array_equal(v(pairs), ref(pairs))
+
+
+def test_exact_verifier_free_slot_pool():
+    notes = _corpus(20, 10, seed=9)
+    toks = [n.split() for n in notes]
+    ref = ExactJaccardVerifier.from_token_lists(toks, 8)
+    v = ExactJaccardVerifier.from_token_lists(toks[:14], 8)
+    v.release_rows([3, 7, 11])
+    assert v.n_live_rows == 11
+    rows_before = len(v._rows)
+    v.extend_token_lists(toks[14:17])         # docs 14..16 reuse slots
+    assert len(v._rows) == rows_before
+    v.extend_token_lists(toks[17:])           # docs 17..29 append
+    assert v.n_live_rows == len(toks) - 3
+    pairs = np.array([(0, 14), (2, 16), (5, 19), (1, 2)],
+                     dtype=np.int64)
+    np.testing.assert_array_equal(v(pairs), ref(pairs))
+    with pytest.raises(KeyError):
+        v(np.array([[0, 7]]))
+
+
+def test_exact_verifier_slot_pool_survives_repad():
+    """A longer-than-ever doc after eviction triggers the full re-pad;
+    slots and sims must survive."""
+    toks = [[f"w{i}{j}" for j in range(6)] for i in range(6)]
+    v = ExactJaccardVerifier.from_token_lists(toks, 2)
+    ref_rows = list(toks)
+    v.release_rows([1, 3])
+    long_doc = [f"x{j}" for j in range(40)]   # forces lmax growth
+    v.extend_token_lists([long_doc])          # doc 6 reuses a slot
+    ref_rows.append(long_doc)
+    ref = ExactJaccardVerifier.from_token_lists(ref_rows, 2)
+    pairs = np.array([(0, 6), (2, 4), (5, 6)], dtype=np.int64)
+    np.testing.assert_array_equal(v(pairs), ref(pairs))
+
+
+# -- deposed-root tracking -------------------------------------------------
+
+def test_unionfind_deposed_tracking_and_drain():
+    uf = ThresholdUnionFind(6, 0.3)
+    uf.track_deposed = True
+    uf.union(0, 1, 1.0)
+    uf.union(2, 3, 1.0)
+    uf.union(0, 2, 1.0)
+    drained = uf.drain_deposed()
+    assert len(drained) == 3
+    assert set(drained) == {i for i in range(6) if uf.find(i) != i}
+    assert uf.drain_deposed() == []           # drained exactly once
+    uf.union(4, 5, 1.0)
+    assert len(uf.drain_deposed()) == 1
+    # untracked unions log nothing
+    uf2 = ThresholdUnionFind(4, 0.3)
+    uf2.union(0, 1, 1.0)
+    assert uf2.drain_deposed() == []
+
+
+# -- incremental second clustering round -----------------------------------
+
+def _over_partitioned_uf():
+    uf = ThresholdUnionFind(8, 0.3)
+    for a, b in ((0, 1), (2, 3), (4, 5), (6, 7)):
+        uf.union(a, b, 0.95)
+    return uf
+
+
+def test_merge_cluster_rounds_candidate_pairs_matches_full_sweep():
+    sims = {(0, 2): 0.9, (4, 6): 0.85}
+
+    def fn(a, b):
+        return sims.get((min(a, b), max(a, b)), 0.5)
+
+    uf_full = _over_partitioned_uf()
+    m_full = merge_cluster_rounds(uf_full, fn, 0.75)
+    uf_cand = _over_partitioned_uf()
+    cand = np.array([(1, 3), (5, 7), (0, 4)], dtype=np.int64)
+    m_cand = merge_cluster_rounds(uf_cand, fn, 0.75,
+                                  candidate_pairs=cand)
+    # candidate pairs are compressed to current roots, so member-level
+    # pairs drive the same root merges the full sweep finds
+    assert m_cand == m_full == 2
+    np.testing.assert_array_equal(uf_full.components(),
+                                  uf_cand.components())
+
+
+def test_merge_cluster_rounds_shared_sim_cache_skips_dispatch():
+    sims = {(0, 2): 0.9}
+
+    def fn(a, b):
+        return sims.get((min(a, b), max(a, b)), 0.5)
+
+    uf = _over_partitioned_uf()
+    cache = {(0, 2): 0.9, (0, 4): 0.5}        # pre-verified by a session
+    v = CallbackVerifier(fn)
+    merges = merge_cluster_rounds(uf, v, 0.75, roots=[0, 2, 4, 6],
+                                  sim_cache=cache, max_batch_pairs=2)
+    assert merges == 1
+    # (0, 2) and (0, 4) served from cache; (2, 4)/(2, 6) collapse onto
+    # cached root pairs after the (0, 2) merge — only (0, 6) and (4, 6)
+    # ever reach the verifier.
+    assert v.n_pairs == 2
+    assert (0, 6) in cache and (4, 6) in cache  # results flow back
+
+
+def test_session_refine_merges_at_lower_threshold():
+    """refine() re-bands representatives and merges cluster pairs whose
+    reps clear the (current) edge threshold — re-thresholding an
+    already-ingested session without re-hashing."""
+    from dataclasses import replace
+
+    rng = np.random.RandomState(4)
+    vocab = [f"t{i}" for i in range(120)]
+    base_doc = list(rng.choice(vocab, size=60))
+    near = list(base_doc)
+    near[30] = "zz"         # one changed token: 8-gram Jaccard ~0.74
+
+    # two exact-duplicate pairs whose clusters are ~0.74 similar to
+    # each other — below the 0.9 ingest threshold, above 0.45
+    docs = [" ".join(base_doc), " ".join(base_doc),
+            " ".join(near), " ".join(near)]
+    cfg = DedupConfig(exact_verification=False, edge_threshold=0.9,
+                      tree_threshold=0.1)
+    sess = DedupSession(cfg, backend="host")
+    snap = sess.ingest(docs)
+    assert snap.labels[0] == snap.labels[1]
+    assert snap.labels[2] == snap.labels[3]
+    assert snap.labels[0] != snap.labels[2]   # over-partitioned
+    sess.config = replace(cfg, edge_threshold=0.45)
+    snap = sess.refine()
+    assert snap.refine_merges >= 1
+    assert snap.labels[0] == snap.labels[2]
+
+
+def test_refine_ignores_doc_id_base_gap_singletons():
+    """Regression: gap ids below the session base have blank verifier
+    rows; re-banding them would collide every gap with every other gap
+    at sim 1.0 and weld them into one bogus cluster."""
+    notes = _corpus(20, 10, seed=19)
+    base = 7
+    sess = DedupSession(DedupConfig(exact_verification=False),
+                        backend="host", doc_id_base=base)
+    sess.ingest(notes)
+    snap = sess.refine()
+    assert (snap.labels[:base] == np.arange(base)).all(), \
+        "gap singletons must survive refine()"
+    assert all(a >= base and b >= base for a, b, _ in snap.pairs)
+
+
+def test_retention_preset_none_tracks_roots_without_evicting():
+    """--retain-budget none + --refine-every: the auto-refine cadence
+    runs but rows stay append-only (no eviction ever)."""
+    notes = _corpus(24, 16, seed=23)
+    sess = DedupSession(
+        DedupConfig(exact_verification=False), backend="host",
+        retention=RetentionPolicy.preset("none", refine_every=2))
+    for c in _chunks(notes, 4):
+        snap = sess.ingest(c)
+    assert sess.refines_run == 2
+    assert snap.evicted == 0
+    assert snap.retained_rows == snap.n_docs
+    assert snap.stats.unions_done > 0       # dups clustered...
+    assert sess.retention.n_pending == 0    # ...but nothing queued
+    roots = sorted({int(r) for r in snap.labels})
+    assert snap.representatives.tolist() == roots
+
+
+def test_session_refine_auto_trigger_cadence():
+    notes = _corpus(24, 12, seed=11)
+    cfg = DedupConfig(exact_verification=False)
+    sess = DedupSession(
+        cfg, backend="host",
+        retention=RetentionPolicy(lru_window=8, refine_every=2))
+    for c in _chunks(notes, 4):
+        sess.ingest(c)
+    assert sess.refines_run == 2              # steps 2 and 4
+
+
+# -- tokenized threading (store/stream tokens exactly once) ----------------
+
+def test_ingest_stream_tokenized_never_retokenizes(monkeypatch):
+    notes = _corpus(24, 12, seed=13)
+    cfg = DedupConfig(exact_verification=True)
+    ref = DedupSession(cfg, backend="host")
+    for c in _chunks(notes, 3):
+        ref_snap = ref.ingest(c)
+
+    from repro.core import shingle
+    toks = [shingle.tokenize(t) for t in notes]
+    tok_chunks = [[toks[i] for i in idx]
+                  for idx in np.array_split(np.arange(len(notes)), 3)]
+
+    def boom(text, do_stem=True):
+        raise AssertionError("tokenize called on pre-tokenized ingest")
+
+    monkeypatch.setattr(shingle, "tokenize", boom)
+    sess = DedupSession(cfg, backend="host")
+    for snap in sess.ingest_stream(tok_chunks, tokenized=True):
+        pass
+    np.testing.assert_array_equal(snap.labels, ref_snap.labels)
+    assert snap.pairs == ref_snap.pairs
+
+
+def test_streaming_session_stores_signatures_once():
+    notes = _corpus(30, 15, seed=17)
+    cfg = DedupConfig(exact_verification=False)
+    plain = DedupSession(cfg, backend="streaming", chunk_docs=8)
+    for c in _chunks(notes, 3):
+        ref_snap = plain.ingest(c)
+    # The session verifier owns the rows; the phase-1 cache must not
+    # keep a second copy of every signature.
+    assert len(plain._impl.sd._sig_cache) == 0
+    assert plain._impl.sd.n_docs == len(notes)
+    # ...and the clustering is unchanged vs the pipeline reference.
+    ref = DedupPipeline(cfg).run(notes)
+
+    def canon(lab):
+        first = {}
+        return [first.setdefault(int(r), i) for i, r in enumerate(lab)]
+
+    assert canon(ref_snap.labels) == canon(ref.labels)
