@@ -65,6 +65,50 @@ def run():
     ]:
         emit(name, timeit(fn), "P=512")
 
+    run_fused_ingest()
+
+
+def run_fused_ingest(D: int = 256, L: int = 512, M: int = 128,
+                     n: int = 8, r: int = 2):
+    """Fused one-pass ingest vs the staged three-dispatch chain.
+
+    ``us_per_call`` is the fused wall time; ``derived`` carries the
+    staged wall, the speedup, and a ``drift`` canary (#mismatching
+    uint32 words across signatures AND band values vs staged — the
+    bit-parity contract, gated to 0 by ``compare_rows``).
+    """
+    section("fused ingest: one-pass shingle->minhash->fold vs staged")
+    rng = np.random.RandomState(7)
+    tokens = rng.randint(0, 2**32, size=(D, L), dtype=np.uint64
+                         ).astype(np.uint32)
+    lengths = rng.randint(L // 2, L, size=(D,)).astype(np.int32)
+    seeds = rng.randint(0, 2**32, size=(M,), dtype=np.uint64
+                        ).astype(np.uint32)
+    tj, lj, sj = map(jnp.asarray, (tokens, lengths, seeds))
+
+    def staged():
+        ng, valid = ops.ngram_hashes(tj, lj, n=n)
+        sig = ops.minhash_signatures(ng, valid, sj)
+        return jax.block_until_ready(ops.band_values(sig, r))
+
+    def fused():
+        return jax.block_until_ready(ops.fused_ingest(tj, lj, sj,
+                                                      n=n, r=r)[1])
+
+    bands_s = np.asarray(staged())
+    ng, valid = ops.ngram_hashes(tj, lj, n=n)
+    sig_s = np.asarray(ops.minhash_signatures(ng, valid, sj))
+    sig_f, bands_f, _ = ops.fused_ingest(tj, lj, sj, n=n, r=r)
+    drift = int((np.asarray(sig_f) != sig_s).sum()
+                + (np.asarray(bands_f) != bands_s).sum())
+
+    staged_us = timeit(staged)
+    fused_us = timeit(fused)
+    emit("fused_ingest_speedup", fused_us,
+         f"staged_us={staged_us:.1f};"
+         f"speedup={staged_us / max(fused_us, 1e-9):.2f};"
+         f"drift={drift};D={D};L={L};M={M}")
+
 
 if __name__ == "__main__":
     run()

@@ -60,6 +60,12 @@ def main(argv=None) -> None:
 
         designs.run_sharded(n_notes=96, n_dups=32)
         designs.run_band_group_overlap(n_notes=96, n_dups=32)
+        from benchmarks import kernels, roofline
+
+        # Fused-ingest perf gate: drift must stay 0 (bit parity with
+        # the staged chain) and the fused wall must not regress >2x.
+        kernels.run_fused_ingest()
+        roofline.run_ingest_roofline()
         # The smoke artifact is committed at the repo root so the perf
         # trajectory accumulates in-tree, not only as a CI artifact.
         write_json(args.json or os.path.join(REPO_ROOT,

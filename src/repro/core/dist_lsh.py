@@ -91,6 +91,7 @@ class DistLSHConfig:
     band_groups: int = 1        # G bounded buffers of b/G bands each
     stage2: str = "host"        # full-signature verify: "host" | "device"
     sig_row_capacity: int = 1024  # cross-shard published-row buffer (0: off)
+    fused_ingest: bool = False  # one-pass Pallas shingle->minhash->fold
 
     @property
     def num_bands(self) -> int:
@@ -270,6 +271,17 @@ def make_streamed_dedup_step(cfg: DistLSHConfig, mesh: Mesh, *,
     bg = cfg.bands_per_group
 
     def local_prepare(tokens, lengths, seeds):
+        if cfg.fused_ingest:
+            # One device-resident Pallas pass per shard: n-gram hashes
+            # and the minhash cube never leave VMEM, and the all_to_all
+            # below is fed directly — signatures never round-trip
+            # through the host.  Bit-identical to the staged branch.
+            from repro.kernels.fused_ingest import fused_ingest
+
+            sig, bands, _ = fused_ingest(
+                tokens, lengths, seeds, n=cfg.ngram,
+                r=cfg.rows_per_band)
+            return sig, bands
         ng, valid = ngram_hashes(tokens, lengths, n=cfg.ngram)
         sig = signatures(ng, valid, seeds, m_chunk=cfg.m_chunk)
         bands = band_values(sig, cfg.rows_per_band)  # (D_loc, b, 2)

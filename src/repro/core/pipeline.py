@@ -46,6 +46,7 @@ class DedupConfig:
     use_disjoint_sets: bool = True
     exact_verification: bool = True  # exact Jaccard vs signature estimate
     use_pallas: bool = False  # route signature computation through kernels
+    fused_ingest: bool = False  # one-pass Pallas shingle->minhash->fold
     verify_backend: str = "auto"  # estimate mode: numpy | jnp | pallas
     verify_batch: str = "run"  # engine batch granularity: run | band
     seed: int = 0x5EED
@@ -86,6 +87,25 @@ class DedupPipeline:
     def __init__(self, config: DedupConfig | None = None):
         self.config = config or DedupConfig()
         self.seeds = minhash.default_seeds(self.config.num_hashes)
+        self._seeds_dev = None
+        self._seeds_src = None
+        # Per-stage wall times of the LAST compute call (cumulative
+        # ``_s`` keys); chunked ingest (``core.session``) sums these
+        # across chunks, so the kops and fused paths time their device
+        # work (block-until-transfer) the same way the numpy path does.
+        self.stage_timings: dict[str, float] = {}
+
+    def device_seeds(self) -> jnp.ndarray:
+        """The seed vector as a cached device array.
+
+        Uploaded once per ``seeds`` assignment instead of re-running
+        ``jnp.asarray`` on every chunk (the old per-chunk host->device
+        copy was pure overhead in multi-step sessions).
+        """
+        if self._seeds_dev is None or self._seeds_src is not self.seeds:
+            self._seeds_dev = jnp.asarray(self.seeds)
+            self._seeds_src = self.seeds
+        return self._seeds_dev
 
     # -- stages ------------------------------------------------------------
 
@@ -93,29 +113,77 @@ class DedupPipeline:
         return [shingle.tokenize(t) for t in texts]
 
     def compute_signatures(self, token_lists: list[list[str]]) -> np.ndarray:
+        t0 = time.perf_counter()
         packed = shingle.pack_documents(token_lists)
-        if self.config.use_pallas:
+        if self.config.use_pallas or self.config.fused_ingest:
             from repro.kernels import ops as kops
 
-            ng, valid = kops.ngram_hashes(
-                jnp.asarray(packed.tokens),
-                jnp.asarray(packed.lengths),
-                n=self.config.ngram,
-            )
-            sig = kops.minhash_signatures(ng, valid, jnp.asarray(self.seeds))
+            if self.config.fused_ingest:
+                sig, _, _ = kops.fused_ingest(
+                    jnp.asarray(packed.tokens),
+                    jnp.asarray(packed.lengths),
+                    self.device_seeds(),
+                    n=self.config.ngram,
+                    r=self.config.rows_per_band,
+                )
+            else:
+                ng, valid = kops.ngram_hashes(
+                    jnp.asarray(packed.tokens),
+                    jnp.asarray(packed.lengths),
+                    n=self.config.ngram,
+                )
+                sig = kops.minhash_signatures(ng, valid,
+                                              self.device_seeds())
         else:
             ng, valid = shingle.ngram_hashes(
                 jnp.asarray(packed.tokens),
                 jnp.asarray(packed.lengths),
                 n=self.config.ngram,
             )
-            sig = minhash.signatures(ng, valid, jnp.asarray(self.seeds))
-        return np.asarray(sig)
+            sig = minhash.signatures(ng, valid, self.device_seeds())
+        # np.asarray blocks on the device work, so the kops/fused paths
+        # record the same wall semantics as the numpy path.
+        sig = np.asarray(sig)
+        self.stage_timings["signature_s"] = time.perf_counter() - t0
+        return sig
 
     def compute_bands(self, sig: np.ndarray) -> np.ndarray:
-        return np.asarray(
+        t0 = time.perf_counter()
+        bands = np.asarray(
             lsh.band_values(jnp.asarray(sig), self.config.rows_per_band)
         )
+        self.stage_timings["bands_s"] = time.perf_counter() - t0
+        return bands
+
+    def ingest_arrays(
+        self, token_lists: list[list[str]]
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """One chunk's (signatures, band values) — the ingest hot path.
+
+        With ``config.fused_ingest`` both arrays come out of ONE
+        device-resident Pallas pass (no intermediate n-gram/signature
+        HBM round-trip and no separate band dispatch); otherwise the
+        staged ``compute_signatures`` -> ``compute_bands`` chain runs.
+        Outputs are bit-identical either way.
+        """
+        if not self.config.fused_ingest:
+            sig = self.compute_signatures(token_lists)
+            return sig, self.compute_bands(sig)
+        from repro.kernels import ops as kops
+
+        t0 = time.perf_counter()
+        packed = shingle.pack_documents(token_lists)
+        sig, bands, _ = kops.fused_ingest(
+            jnp.asarray(packed.tokens),
+            jnp.asarray(packed.lengths),
+            self.device_seeds(),
+            n=self.config.ngram,
+            r=self.config.rows_per_band,
+        )
+        sig, bands = np.asarray(sig), np.asarray(bands)
+        self.stage_timings["signature_s"] = time.perf_counter() - t0
+        self.stage_timings["bands_s"] = 0.0  # fused into the one pass
+        return sig, bands
 
     def make_verifier(self, token_lists: list[list[str]],
                       sig: np.ndarray):
@@ -144,13 +212,9 @@ class DedupPipeline:
         token_lists = self.tokenize(texts)
         timings["tokenize_s"] = time.perf_counter() - t0
 
-        t0 = time.perf_counter()
-        sig = self.compute_signatures(token_lists)
-        timings["signatures_s"] = time.perf_counter() - t0
-
-        t0 = time.perf_counter()
-        bands = self.compute_bands(sig)
-        timings["bands_s"] = time.perf_counter() - t0
+        sig, bands = self.ingest_arrays(token_lists)
+        timings["signatures_s"] = self.stage_timings["signature_s"]
+        timings["bands_s"] = self.stage_timings["bands_s"]
 
         t0 = time.perf_counter()
         verifier = self.make_verifier(token_lists, sig)

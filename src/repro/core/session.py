@@ -738,8 +738,8 @@ class _HostBackend:
         base = sess.allocator.allocate(len(toks))
         if not toks:
             return (base, toks, None, None)
-        sig = self.pipe.compute_signatures(toks)
-        bands = self.pipe.compute_bands(sig)
+        # Fused-ingest configs compute both arrays in one Pallas pass.
+        sig, bands = self.pipe.ingest_arrays(toks)
         return (base, toks, sig, bands)
 
     def merge(self, pending, index: bool = True):
@@ -826,7 +826,8 @@ class _ShardedBackend:
         self.dcfg = dist_config or DistLSHConfig(
             ngram=cfg.ngram, num_hashes=cfg.num_hashes,
             rows_per_band=cfg.rows_per_band,
-            edge_threshold=cfg.edge_threshold)
+            edge_threshold=cfg.edge_threshold,
+            fused_ingest=cfg.fused_ingest)
         # The session's retained state (seeds, signature width, band
         # index shape) is derived from DedupConfig while the device
         # step runs the DistLSHConfig — they must describe the same

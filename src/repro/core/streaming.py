@@ -60,6 +60,16 @@ class StreamingDedup:
         self.n_docs = int(self.doc_id_base)
         self.n_ingested = 0
         self._sig_cache: dict[int, np.ndarray] = {}
+        self._seeds_dev = None
+        self._seeds_src = None
+
+    def _device_seeds(self) -> jnp.ndarray:
+        """Seeds as a cached device array (one upload per assignment,
+        not one per flushed chunk)."""
+        if self._seeds_dev is None or self._seeds_src is not self.seeds:
+            self._seeds_dev = jnp.asarray(self.seeds)
+            self._seeds_src = self.seeds
+        return self._seeds_dev
 
     # -- phase 1 -----------------------------------------------------------
 
@@ -84,13 +94,25 @@ class StreamingDedup:
 
     def _flush(self, token_lists, keep_signatures):
         packed = shingle.pack_documents(token_lists)
-        ng, valid = shingle.ngram_hashes(
-            jnp.asarray(packed.tokens), jnp.asarray(packed.lengths),
-            n=self.config.ngram)
-        sig = np.asarray(minhash.signatures(ng, valid,
-                                            jnp.asarray(self.seeds)))
-        bands = np.asarray(lsh.band_values(
-            jnp.asarray(sig), self.config.rows_per_band))
+        if self.config.fused_ingest:
+            # Phase 1 on the fused device pass: signatures AND band
+            # values come back from one Pallas dispatch (bit-identical
+            # to the staged chain below).
+            from repro.kernels.fused_ingest import fused_ingest
+
+            sig_j, bands_j, _ = fused_ingest(
+                jnp.asarray(packed.tokens), jnp.asarray(packed.lengths),
+                self._device_seeds(), n=self.config.ngram,
+                r=self.config.rows_per_band)
+            sig, bands = np.asarray(sig_j), np.asarray(bands_j)
+        else:
+            ng, valid = shingle.ngram_hashes(
+                jnp.asarray(packed.tokens), jnp.asarray(packed.lengths),
+                n=self.config.ngram)
+            sig = np.asarray(minhash.signatures(ng, valid,
+                                                self._device_seeds()))
+            bands = np.asarray(lsh.band_values(
+                jnp.asarray(sig), self.config.rows_per_band))
         for i in range(len(token_lists)):
             doc_id = self.n_docs + i
             self.store.insert_document(doc_id, bands[i])

@@ -1,0 +1,186 @@
+"""Pallas TPU kernel: fused device-resident ingest.
+
+One pass computes the whole signature-production chain the staged path
+runs as three dispatches (``kernels/ngram.py`` -> ``kernels/minhash.py``
+-> ``kernels/bandfold.py``):
+
+    packed (tokens, lengths, seeds) -> (signatures, band_values, valid)
+
+Grid (D/TD, M/TM, L/TL) with L innermost (sequential on TPU), exactly
+the minhash tiling (DESIGN.md §2/§8):
+
+* The rolling n-gram hash is recomputed per token tile from the tile
+  plus its L-halo (the ``kernels/ngram.py`` idiom: two in_specs over the
+  same operand with shifted index maps) — the (TD, TL) hash tile lives
+  only in VMEM and is never written to HBM.
+* The seeded (TD, TL, TM) hash cube is min-accumulated into the output
+  signature block, which Pallas keeps resident in VMEM across the L
+  revisits (the ``kernels/minhash.py`` accumulation).
+* At the LAST L tile the signature block is final, so the 2-lane band
+  fold (``kernels/bandfold.py``) runs on it in-register and writes the
+  (TD, TM/r, 2) band block — signatures are read back out of VMEM, not
+  HBM.  ``tm`` is clamped to a multiple of ``r`` so every band's r rows
+  live inside one M tile.
+
+Bit-parity contract: every op is exact uint32 arithmetic (wraparound
+multiply / xor / shift), so outputs are bit-identical to the staged
+kernels AND to the pure-jnp refs (``core.shingle`` / ``core.minhash`` /
+``core.lsh``) — drift = 0 is pinned by tests and the bench gate.
+
+``interpret=None`` auto-selects interpreter mode on CPU so the fused
+path runs (and is parity-checked in CI) without a TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.hashing import GOLDEN32, NGRAM_BASE, U32_MAX
+
+_LANE_SEEDS = (0x2545F491, 0x9E3779B9)
+
+# Defaults match kernels/minhash.py: (TD, TL, TM) cube = 512 KiB VMEM.
+TD, TL, TM = 8, 128, 128
+
+
+def _fmix(x):
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x85EBCA6B)
+    x = x ^ (x >> 13)
+    x = x * jnp.uint32(0xC2B2AE35)
+    x = x ^ (x >> 16)
+    return x
+
+
+def _fused_kernel(tok_ref, halo_ref, len_ref, seeds_ref, sig_ref,
+                  band_ref, *, n: int, r: int, td: int, tl: int,
+                  tm: int, n_l: int):
+    l_idx = pl.program_id(2)
+    tok = tok_ref[...].astype(jnp.uint32)     # (TD, TL)
+    halo = halo_ref[...].astype(jnp.uint32)   # (TD, TL) next tile (clamped)
+    lens = len_ref[...].astype(jnp.int32)     # (TD,)
+    seeds = seeds_ref[...].astype(jnp.uint32)  # (TM,)
+
+    # --- shingle: rolling n-gram polynomial hash over the halo'd tile.
+    cat = jnp.concatenate([tok, halo], axis=1)
+    acc = jnp.zeros_like(tok)
+    base = jnp.uint32(NGRAM_BASE)
+    for k in range(n):
+        acc = acc * base + jax.lax.dynamic_slice_in_dim(cat, k, tl, axis=1)
+    ng = _fmix(acc)                            # (TD, TL), VMEM-only
+
+    # Validity of each window position (incl. the short-doc single
+    # shingle at position 0), from lengths alone — no mask operand.
+    pos = l_idx * tl + jax.lax.broadcasted_iota(jnp.int32, (td, tl), 1)
+    ln = lens[:, None]
+    valid = (pos + n <= ln) | ((ln < n) & (pos == 0) & (ln > 0))
+
+    # --- minhash: seeded cube, min-accumulate into the resident block.
+    x = _fmix(ng[:, :, None] * GOLDEN32 + seeds[None, None, :])
+    x = jnp.where(valid[:, :, None], x, jnp.uint32(U32_MAX))
+    part = jnp.min(x, axis=1)                  # (TD, TM)
+
+    @pl.when(l_idx == 0)
+    def _init():
+        sig_ref[...] = part
+
+    @pl.when(l_idx > 0)
+    def _acc():
+        sig_ref[...] = jnp.minimum(sig_ref[...], part)
+
+    # --- band fold: the signature block is final on the last L tile;
+    # fold its bands in-register (tm % r == 0 by construction).
+    @pl.when(l_idx == n_l - 1)
+    def _fold():
+        s3 = sig_ref[...].reshape(td, tm // r, r)
+        for lane, seed in enumerate(_LANE_SEEDS):
+            h = jnp.full((td, tm // r), jnp.uint32(seed),
+                         dtype=jnp.uint32)
+            for k in range(r):
+                h = _fmix(h * GOLDEN32 + s3[:, :, k])
+            band_ref[:, :, lane] = h
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n", "r", "td", "tl", "tm", "interpret"))
+def fused_ingest(
+    tokens: jnp.ndarray,
+    lengths: jnp.ndarray,
+    seeds: jnp.ndarray,
+    *,
+    n: int = 8,
+    r: int = 2,
+    td: int = TD,
+    tl: int = TL,
+    tm: int = TM,
+    interpret: bool | None = None,
+):
+    """(D, L) uint32 tokens + (D,) lengths + (M,) seeds ->
+    ((D, M) signatures, (D, M//r, 2) band values, (D, L) validity).
+
+    One device-resident pass; n-gram hashes and the minhash cube never
+    leave VMEM.  Matches the staged kernels and the jnp refs bit-for-
+    bit.  Unlike the staged ngram kernel, batches whose padded width is
+    shorter than ``n`` are handled (the tile length is clamped up to
+    ``n`` and the zero right-padding reproduces the short-doc rule).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    tokens = tokens.astype(jnp.uint32)
+    lengths = lengths.astype(jnp.int32)
+    seeds = seeds.astype(jnp.uint32)
+    D, L = tokens.shape
+    M = seeds.shape[0]
+    assert M % r == 0, f"M={M} not divisible by r={r}"
+    b = M // r
+    if D == 0:
+        return (jnp.zeros((0, M), jnp.uint32),
+                jnp.zeros((0, b, 2), jnp.uint32),
+                jnp.zeros((0, L), jnp.bool_))
+    td_ = min(td, max(1, D))
+    # The halo read needs tl >= n (a window crosses at most one tile
+    # boundary); clamping up also absorbs batches with L < n.
+    tl_ = max(min(tl, max(1, L)), n)
+    # Every band's r rows must fall inside one M tile.
+    tm_ = min(tm, max(1, M))
+    tm_ = max(r, (tm_ // r) * r)
+    Dp = -(-D // td_) * td_
+    Lp = -(-L // tl_) * tl_
+    Mp = -(-M // tm_) * tm_
+    tok = jnp.pad(tokens, ((0, Dp - D), (0, Lp - L)))
+    ln = jnp.pad(lengths, (0, Dp - D))
+    sd = jnp.pad(seeds, (0, Mp - M))
+    n_l = Lp // tl_
+
+    sig, bands = pl.pallas_call(
+        functools.partial(_fused_kernel, n=n, r=r, td=td_, tl=tl_,
+                          tm=tm_, n_l=n_l),
+        grid=(Dp // td_, Mp // tm_, Lp // tl_),
+        in_specs=[
+            pl.BlockSpec((td_, tl_), lambda d, m, l: (d, l)),
+            # Halo: next L tile, clamped at the edge (edge positions
+            # are invalid by construction there).
+            pl.BlockSpec(
+                (td_, tl_),
+                lambda d, m, l: (d, jnp.minimum(l + 1, n_l - 1))),
+            pl.BlockSpec((td_,), lambda d, m, l: (d,)),
+            pl.BlockSpec((tm_,), lambda d, m, l: (m,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((td_, tm_), lambda d, m, l: (d, m)),
+            pl.BlockSpec((td_, tm_ // r, 2), lambda d, m, l: (d, m, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Dp, Mp), jnp.uint32),
+            jax.ShapeDtypeStruct((Dp, Mp // r, 2), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(tok, tok, ln, sd)
+
+    pos = jnp.arange(L, dtype=jnp.int32)[None, :]
+    ln2 = lengths[:, None]
+    valid = (pos + n <= ln2) | ((ln2 < n) & (pos == 0) & (ln2 > 0))
+    return sig[:D, :M], bands[:D, :b], valid

@@ -55,8 +55,10 @@ def ngram_hashes(
         interpret = jax.default_backend() == "cpu"
     D, L = tokens.shape
     td_ = min(td, max(1, D))
-    tl_ = min(tl, max(1, L))
-    assert tl_ >= n, f"tile length {tl_} must be >= n={n}"
+    # Clamp the L tile UP to n: a batch narrower than the window pads to
+    # one n-wide tile whose zero fill reproduces the oracle's zero-padded
+    # prefix hash (the short-document single-shingle rule).
+    tl_ = max(min(tl, max(1, L)), n)
     Dp, Lp = -(-D // td_) * td_, -(-L // tl_) * tl_
     tok = jnp.pad(tokens.astype(jnp.uint32), ((0, Dp - D), (0, Lp - L)))
     n_l = Lp // tl_

@@ -9,6 +9,7 @@ from __future__ import annotations
 from repro.kernels.minhash import minhash_signatures
 from repro.kernels.ngram import ngram_hashes
 from repro.kernels.bandfold import band_values
+from repro.kernels.fused_ingest import fused_ingest
 from repro.kernels.sigjaccard import (
     indexed_pair_estimate,
     masked_indexed_pair_counts,
@@ -22,6 +23,7 @@ __all__ = [
     "minhash_signatures",
     "ngram_hashes",
     "band_values",
+    "fused_ingest",
     "pair_estimate",
     "indexed_pair_estimate",
     "masked_indexed_pair_counts",

@@ -26,3 +26,10 @@ def band_values(sig, r: int):
 
 def pair_estimate(sig_a, sig_b):
     return jnp.mean((sig_a == sig_b).astype(jnp.float32), axis=-1)
+
+
+def fused_ingest(tokens, lengths, seeds, *, n: int = 8, r: int = 2):
+    """Staged-jnp oracle of the fused pass: shingle -> minhash -> fold."""
+    ng, valid = _shingle.ngram_hashes(tokens, lengths, n=n)
+    sig = _minhash.signatures(ng, valid, seeds)
+    return sig, _lsh.band_values(sig, r), valid

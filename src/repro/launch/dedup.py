@@ -50,6 +50,10 @@ def main(argv=None):
     ap.add_argument("--edge-threshold", type=float, default=0.75)
     ap.add_argument("--tree-threshold", type=float, default=0.40)
     ap.add_argument("--use-pallas", action="store_true")
+    ap.add_argument("--fused-ingest", action="store_true",
+                    help="one-pass device ingest: shingle -> minhash -> "
+                         "band fold in a single fused Pallas kernel "
+                         "(bit-identical to the staged path)")
     ap.add_argument("--backend", default="auto",
                     choices=("auto", "numpy", "jnp", "pallas"),
                     help="estimate-mode verification backend")
@@ -121,6 +125,7 @@ def main(argv=None):
         edge_threshold=args.edge_threshold,
         tree_threshold=args.tree_threshold,
         use_pallas=args.use_pallas,
+        fused_ingest=args.fused_ingest,
         exact_verification=not args.estimate,
         verify_backend=args.backend,
         verify_batch=args.batch)
@@ -132,7 +137,8 @@ def main(argv=None):
         dcfg = DistLSHConfig(edge_threshold=args.edge_threshold,
                              edge_capacity=8192,
                              band_groups=args.band_groups,
-                             stage2=args.stage2)
+                             stage2=args.stage2,
+                             fused_ingest=args.fused_ingest)
         from dataclasses import replace
 
         # Sharded verification is estimate-shaped by construction; the

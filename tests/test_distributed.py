@@ -392,6 +392,57 @@ def test_session_multistep_sharded_matches_single_step():
 
 
 @pytest.mark.slow
+def test_session_fused_ingest_matches_staged_sharded():
+    """Fused one-pass device ingest == staged, through a sharded session.
+
+    The fused shingle->minhash->band-fold kernel feeds the all_to_all
+    shuffle in ``local_prepare``; with bit-identical signatures and band
+    values the whole downstream pipeline (candidate shuffle, prescreen,
+    stage 2, host merge) must produce identical clusters and
+    bit-identical per-edge sims vs the staged chain — N-step ingest,
+    stage2 host AND device, with the device path's host re-scores
+    pinned at zero (overflow-only).  The device-stage2 cell runs once
+    (n_steps=2, band_groups=1): interpret-mode device scoring costs
+    minutes per session, and ingest parity is stage2-independent.
+    """
+    run_with_devices("""
+        import numpy as np
+        from repro.core import DedupConfig, DedupSession
+        from repro.core.dist_lsh import DistLSHConfig
+        from repro.data import make_i2b2_like, inject_near_duplicates
+        notes = make_i2b2_like(56, seed=0)
+        notes, _ = inject_near_duplicates(notes, 8, frac_low=0.0,
+                                          frac_high=0.005, seed=1)
+        base = dict(edge_capacity=4096, edge_threshold=0.88,
+                    bucket_slack=16.0)
+        cfg = DedupConfig(edge_threshold=0.88, exact_verification=False)
+        for stage2, n_steps, groups in [("host", 1, 5), ("host", 3, 5),
+                                        ("device", 2, 1)]:
+            chunks = [[notes[i] for i in idx] for idx in
+                      np.array_split(np.arange(len(notes)), n_steps)]
+            snaps = {}
+            for fused in (False, True):
+                dcfg = DistLSHConfig(**base, stage2=stage2,
+                                     band_groups=groups,
+                                     fused_ingest=fused)
+                sess = DedupSession(cfg, backend="sharded",
+                                    dist_config=dcfg)
+                for snap in sess.ingest_stream(chunks):
+                    pass
+                assert snap.overflow == 0
+                snaps[fused] = snap
+            a, b = snaps[False], snaps[True]
+            np.testing.assert_array_equal(a.labels, b.labels)
+            pa = {(x, y): s for x, y, s in a.pairs}
+            pb = {(x, y): s for x, y, s in b.pairs}
+            assert pa and pa == pb, (stage2, n_steps)
+            if stage2 == "device":
+                assert b.host_rescored == 0, b.host_rescored
+        print("fused sharded parity ok")
+    """, n_devices=8)
+
+
+@pytest.mark.slow
 def test_session_eviction_multidevice_keeps_parity_and_device_scoring():
     """Bounded retention on the 8-device sharded backend.
 

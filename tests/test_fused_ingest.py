@@ -1,0 +1,155 @@
+"""Fused one-pass ingest kernel vs every staged reference, bit for bit.
+
+The fused Pallas pass (shingle -> minhash -> band fold, no HBM
+round-trip) must be bit-identical to the staged pallas chain, the
+staged jnp ref, and the pure-numpy oracles — that parity is what lets
+``fused_ingest=True`` drop into any session backend with zero drift.
+
+Deterministic cases live here (no hypothesis dependency, so they run in
+tier-1 everywhere); the randomized shape sweep rides in
+``test_kernels.py`` under its hypothesis gate.
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+def _fused_numpy_oracle(tokens, lengths, seeds, n, r):
+    """Pure-numpy staged chain (the slow-but-obvious oracle)."""
+    from repro.core import lsh, minhash, shingle
+
+    ng, valid = shingle.ngram_hashes_np(tokens, lengths, n=n)
+    sig = minhash.signatures_np(ng, valid, seeds)
+    return sig, lsh.band_values_np(sig, r), valid
+
+
+def _staged_pallas(tj, lj, sj, n, r):
+    ng, valid = ops.ngram_hashes(tj, lj, n=n)
+    sig = ops.minhash_signatures(ng, valid, sj)
+    return (np.asarray(sig), np.asarray(ops.band_values(sig, r)),
+            np.asarray(valid))
+
+
+def assert_fused_parity(tokens, lengths, seeds, n=8, r=2, **tiles):
+    """Fused == staged pallas == jnp ref == numpy oracle, bit for bit."""
+    tj, lj, sj = map(jnp.asarray, (tokens, lengths, seeds))
+    sig_f, bands_f, valid_f = (np.asarray(x) for x in
+                               ops.fused_ingest(tj, lj, sj, n=n, r=r,
+                                                **tiles))
+    sig_s, bands_s, valid_s = _staged_pallas(tj, lj, sj, n, r)
+    sig_j, bands_j, valid_j = (np.asarray(x) for x in
+                               ref.fused_ingest(tj, lj, sj, n=n, r=r))
+    sig_n, bands_n, valid_n = _fused_numpy_oracle(tokens, lengths,
+                                                  seeds, n, r)
+    for sig, bands, valid in [(sig_s, bands_s, valid_s),
+                              (sig_j, bands_j, valid_j),
+                              (sig_n, bands_n, valid_n)]:
+        assert np.array_equal(sig_f, sig)
+        assert np.array_equal(bands_f, bands)
+        assert np.array_equal(valid_f, valid)
+
+
+def test_fused_ingest_random_batch():
+    rng = np.random.RandomState(0)
+    D, L, M = 24, 300, 50
+    tokens = rng.randint(0, 2**32, size=(D, L), dtype=np.uint64
+                         ).astype(np.uint32)
+    lengths = rng.randint(0, L + 1, size=(D,)).astype(np.int32)
+    seeds = rng.randint(0, 2**32, size=(M,), dtype=np.uint64
+                        ).astype(np.uint32)
+    assert_fused_parity(tokens, lengths, seeds, n=8, r=2)
+
+
+def test_fused_ingest_edge_cases():
+    """Empty docs, docs shorter than n, L < n batches, and lengths
+    pinned to tile boundaries (127/128/129) all bit-match the oracles."""
+    rng = np.random.RandomState(11)
+    seeds = rng.randint(0, 2**32, size=(10,), dtype=np.uint64
+                        ).astype(np.uint32)
+    # Tile-boundary raggedness around tl=128.
+    L = 160
+    tokens = rng.randint(0, 2**32, size=(8, L), dtype=np.uint64
+                         ).astype(np.uint32)
+    lengths = np.array([0, 1, 5, 7, 127, 128, 129, L], dtype=np.int32)
+    assert_fused_parity(tokens, lengths, seeds, n=8, r=2)
+    # Whole batch narrower than the n-gram window (L < n).
+    tokens = rng.randint(0, 2**32, size=(4, 5), dtype=np.uint64
+                         ).astype(np.uint32)
+    lengths = np.array([0, 2, 5, 3], dtype=np.int32)
+    assert_fused_parity(tokens, lengths, seeds, n=8, r=2)
+    # Zero documents.
+    sig, bands, valid = ops.fused_ingest(
+        jnp.zeros((0, 16), jnp.uint32), jnp.zeros((0,), jnp.int32),
+        jnp.asarray(seeds), n=8, r=2)
+    assert sig.shape == (0, 10) and bands.shape == (0, 5, 2)
+    assert valid.shape == (0, 16)
+
+
+def test_fused_ingest_nondefault_window_and_rows():
+    """n != 8 and r != 2 (odd band width) still bit-match."""
+    rng = np.random.RandomState(23)
+    D, L, M = 9, 70, 15
+    tokens = rng.randint(0, 2**32, size=(D, L), dtype=np.uint64
+                         ).astype(np.uint32)
+    lengths = rng.randint(0, L + 1, size=(D,)).astype(np.int32)
+    seeds = rng.randint(0, 2**32, size=(M,), dtype=np.uint64
+                        ).astype(np.uint32)
+    assert_fused_parity(tokens, lengths, seeds, n=4, r=3)
+
+
+def test_fused_ingest_tile_size_invariance():
+    """Tiling is an implementation detail: every (td, tl, tm) choice
+    yields the same bits (band folds never straddle M-tiles)."""
+    rng = np.random.RandomState(5)
+    D, L, M = 17, 150, 30
+    tokens = rng.randint(0, 2**32, size=(D, L), dtype=np.uint64
+                         ).astype(np.uint32)
+    lengths = rng.randint(0, L + 1, size=(D,)).astype(np.int32)
+    seeds = rng.randint(0, 2**32, size=(M,), dtype=np.uint64
+                        ).astype(np.uint32)
+    tj, lj, sj = map(jnp.asarray, (tokens, lengths, seeds))
+    outs = [
+        tuple(np.asarray(x) for x in
+              ops.fused_ingest(tj, lj, sj, n=8, r=3,
+                               td=td, tl=tl, tm=tm))
+        for td, tl, tm in [(8, 128, 128), (4, 32, 9), (17, 150, 30),
+                           (1, 8, 3)]
+    ]
+    for got in outs[1:]:
+        for g, w in zip(got, outs[0]):
+            assert np.array_equal(g, w)
+
+
+def test_fused_pipeline_parity():
+    """`DedupPipeline.ingest_arrays` fused vs staged: same bits, and the
+    fused path reports a single fused timing (bands_s folded to 0)."""
+    from repro.core.pipeline import DedupConfig, DedupPipeline
+    from repro.data import inject_near_duplicates, make_i2b2_like
+
+    notes = make_i2b2_like(20, seed=0)
+    notes, _ = inject_near_duplicates(notes, 6, frac_low=0.0,
+                                      frac_high=0.005, seed=1)
+    toks = DedupPipeline().tokenize(notes)
+    staged = DedupPipeline(DedupConfig(fused_ingest=False))
+    fused = DedupPipeline(DedupConfig(fused_ingest=True))
+    sig_s, bands_s = staged.ingest_arrays(toks)
+    sig_f, bands_f = fused.ingest_arrays(toks)
+    assert np.array_equal(sig_s, sig_f)
+    assert np.array_equal(bands_s, bands_f)
+    assert fused.stage_timings["signature_s"] > 0
+    assert fused.stage_timings["bands_s"] == 0.0
+    assert staged.stage_timings["bands_s"] > 0
+
+
+def test_pipeline_device_seeds_cached():
+    """The seed vector uploads once per assignment, not per chunk."""
+    from repro.core.pipeline import DedupPipeline
+
+    pipe = DedupPipeline()
+    dev = pipe.device_seeds()
+    assert pipe.device_seeds() is dev  # cached, no re-upload
+    pipe.seeds = pipe.seeds.copy()  # reassignment invalidates
+    assert pipe.device_seeds() is not dev
+    assert np.array_equal(np.asarray(pipe.device_seeds()),
+                          np.asarray(pipe.seeds))

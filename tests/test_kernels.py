@@ -125,6 +125,29 @@ def test_kernel_tile_size_invariance():
     assert np.array_equal(outs[0], outs[2])
 
 
+@given(st.integers(1, 24), st.integers(1, 200), st.integers(2, 10),
+       st.integers(1, 3))
+@settings(max_examples=12, deadline=None)
+def test_fused_ingest_sweep(d, l, n, r):
+    """Fused pass bit-matches every staged reference over random shapes,
+    including ragged lengths (0..L) and docs shorter than the window.
+
+    Deterministic fused-ingest cases (edge cases, tile invariance,
+    pipeline wiring) live in ``test_fused_ingest.py`` so they run even
+    without hypothesis installed.
+    """
+    from test_fused_ingest import assert_fused_parity
+
+    rng = np.random.RandomState(d * 131 + l * 7 + n)
+    m = r * rng.randint(1, 20)  # M must be a multiple of r
+    tokens = rng.randint(0, 2**32, size=(d, l), dtype=np.uint64
+                         ).astype(np.uint32)
+    lengths = rng.randint(0, l + 1, size=(d,)).astype(np.int32)
+    seeds = rng.randint(0, 2**32, size=(m,), dtype=np.uint64
+                        ).astype(np.uint32)
+    assert_fused_parity(tokens, lengths, seeds, n=n, r=r)
+
+
 def test_flash_attention_vs_blockwise():
     import jax
     from repro.kernels.flash_attention import flash_attention
