@@ -21,7 +21,7 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: accuracy,designs,"
-                         "clustering,scale,kernels,roofline")
+                         "clustering,scale,kernels,roofline,serving")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny-size CI smoke: sharded-vs-host parity, "
                          "verify throughput, band-group merge overlap; "
@@ -66,6 +66,11 @@ def main(argv=None) -> None:
         # the staged chain) and the fused wall must not regress >2x.
         kernels.run_fused_ingest()
         roofline.run_ingest_roofline()
+        from benchmarks import serving_dedup
+
+        # Online query service gate: p50/p99 latency + QPS rows, with
+        # the microbatch==sequential parity canary (same_clusters).
+        serving_dedup.run_smoke()
         # The smoke artifact is committed at the repo root so the perf
         # trajectory accumulates in-tree, not only as a CI artifact.
         write_json(args.json or os.path.join(REPO_ROOT,
@@ -106,6 +111,9 @@ def main(argv=None) -> None:
     if want("roofline"):
         from benchmarks import roofline
         roofline.run()
+    if want("serving"):
+        from benchmarks import serving_dedup
+        serving_dedup.run()
 
     if args.json:
         from benchmarks.common import write_json

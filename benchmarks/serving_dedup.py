@@ -1,0 +1,97 @@
+"""Online dedup query service: latency + sustained-QPS benchmark.
+
+Measures the PR 7 read path (DESIGN.md §9) over a warm session:
+
+* ``dedup_query_p50_ms`` — single-document synchronous query latency
+  (fused ingest of one doc -> band probe -> batched verify), p50 as
+  the row wall with p50/p99 in the derived field;
+* ``dedup_query_qps`` — sustained throughput of the microbatched
+  ``submit``/``step`` loop, with a ``same_clusters`` parity canary
+  (microbatched verdicts must equal sequential ones) that joins the
+  ``--compare`` regression gate.
+
+  PYTHONPATH=src python -m benchmarks.serving_dedup          # full
+  PYTHONPATH=src python -m benchmarks.serving_dedup --smoke  # CI sizes
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, section
+
+
+def _warm_service(n_notes: int, n_dups: int, *, max_batch: int = 32):
+    from repro.core import DedupConfig, DedupQueryService, DedupSession
+    from repro.data import inject_near_duplicates, make_i2b2_like
+
+    notes = make_i2b2_like(n_notes, seed=0)
+    notes, _ = inject_near_duplicates(notes, n_dups, seed=1)
+    sess = DedupSession(DedupConfig(exact_verification=False),
+                        backend="host")
+    sess.ingest(notes)
+    svc = DedupQueryService(sess, max_batch=max_batch)
+    svc.query([notes[0]])        # publish the view + jit/alloc warmup
+    return svc, notes
+
+
+def run_queries(n_notes: int = 240, n_dups: int = 120,
+                n_latency: int = 48, n_qps: int = 192,
+                max_batch: int = 32) -> None:
+    """Emit the p50/p99 latency and microbatched QPS rows."""
+    section("serving: online dedup query service")
+    svc, notes = _warm_service(n_notes, n_dups, max_batch=max_batch)
+    rng = np.random.default_rng(0)
+
+    # Single-document synchronous latency (the interactive path).
+    lat_docs = [notes[i] for i in
+                rng.integers(0, len(notes), size=n_latency)]
+    lats = []
+    for doc in lat_docs:
+        t0 = time.perf_counter()
+        svc.query([doc])
+        lats.append(time.perf_counter() - t0)
+    lats_us = np.array(lats) * 1e6
+    p50, p99 = np.percentile(lats_us, [50, 99])
+    emit("dedup_query_p50_ms", float(p50),
+         f"p50_ms={p50 / 1e3:.3f};p99_ms={p99 / 1e3:.3f};"
+         f"n={n_latency}")
+
+    # Microbatched sustained throughput + sequential-parity canary.
+    qps_docs = [notes[i] for i in
+                rng.integers(0, len(notes), size=n_qps)]
+    sequential = svc.query(qps_docs)
+    rids = [svc.submit(d) for d in qps_docs]
+    t0 = time.perf_counter()
+    finished = svc.run_until_drained()
+    elapsed = time.perf_counter() - t0
+    by_rid = {r.rid: r.result for r in finished}
+    same = int([by_rid[r] for r in rids] == sequential)
+    qps = n_qps / elapsed
+    emit("dedup_query_qps", elapsed / n_qps * 1e6,
+         f"qps={qps:.0f};same_clusters={same};"
+         f"batches={svc.stats.microbatches};n={n_qps}")
+
+
+def run_smoke() -> None:
+    """CI-sized rows for BENCH_smoke.json (seconds, not minutes)."""
+    run_queries(n_notes=96, n_dups=32, n_latency=24, n_qps=96,
+                max_batch=32)
+
+
+def run() -> None:
+    run_queries()
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    if args.smoke:
+        run_smoke()
+    else:
+        run()

@@ -59,6 +59,21 @@ def main(argv=None):
           f"({ref.num_clusters} clusters, {len(shared)} shared verified "
           f"pairs bit-identical)")
 
+    # The session stays warm: the immutable SessionView is the read
+    # path (DESIGN.md §9) — here, re-querying an ingested doc finds
+    # its own cluster with sim 1.0.  (The streaming backend keeps its
+    # retained state in the band store and has no view.)
+    if args.backend == "host":
+        view = sess.view()
+        from repro.core import query_view
+
+        sig, bands = DedupPipeline(cfg).compute_arrays(
+            DedupPipeline(cfg).tokenize([notes[0]]))
+        res = query_view(view, bands, sig=sig)[0]
+        print(f"view v{view.version}: query(notes[0]) -> "
+              f"duplicate={res.is_duplicate} sim={res.best_sim:.2f} "
+              f"cluster={res.cluster_root}")
+
 
 if __name__ == "__main__":
     main()

@@ -31,3 +31,14 @@ clean = [n for n, keep in zip(notes, result.keep_mask) if keep]
 print(f"clean corpus: {len(clean)} notes")
 largest = np.bincount(result.labels).max()
 print(f"largest cluster: {largest} notes")
+
+# 4. The online form ("is this NEW note a duplicate?") is a warm
+#    DedupSession behind a DedupQueryService — see
+#    examples/query_service.py for the full read-path demo.
+from repro.core import DedupQueryService, DedupSession  # noqa: E402
+
+service = DedupQueryService(DedupSession(DedupConfig()))
+service.admit(clean)
+verdict = service.query([notes[0]])[0]
+print(f"query(notes[0]): duplicate={verdict.is_duplicate} "
+      f"sim={verdict.best_sim:.2f} cluster={verdict.cluster_root}")

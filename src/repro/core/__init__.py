@@ -10,6 +10,29 @@ with three thin drivers: ``DedupPipeline`` (host, in-memory),
 on-device) — all adapters over ``DedupSession`` (``session.py``), the
 long-lived incremental-ingest layer (one accumulator, global doc-id
 allocation, retained signatures; chunked corpora cluster across steps).
+
+Public API surface (PR 7)
+-------------------------
+This package IS the blessed import surface — ``from repro.core import
+DedupSession, DedupConfig, ...`` — deep module paths stay importable
+but are not API-stable.  The blessed names:
+
+* write path — ``DedupSession`` (+ ``DedupConfig``, ``DistLSHConfig``,
+  ``RetentionPolicy``), returning pure-value ``ClusterSnapshot``s;
+* read path — ``SessionView`` (``DedupSession.view()``),
+  ``QueryResult`` / ``query_view`` (``core.query``), and the serving
+  shell ``DedupQueryService`` (``serving.dedup_service``, re-exported
+  here lazily so importing ``repro.core`` never pulls the serving
+  stack).
+
+Naming scheme for ingest-shaped entry points: a method is named
+``ingest*`` iff it ADDS DOCUMENTS to long-lived dedup state —
+``DedupSession.ingest`` / ``ingest_tokens`` / ``ingest_stream`` and
+``StreamingDedup.ingest`` (its store is retained state).  Pure stage
+computations are ``compute_*`` (``DedupPipeline.compute_signatures`` /
+``compute_bands`` / ``compute_arrays``); reads are ``query*`` / ``view``
+and never mutate.  Old spellings (``DedupPipeline.ingest_arrays``,
+``ClusterSnapshot.uf``) survive as ``DeprecationWarning`` shims.
 """
 from repro.core.pipeline import DedupConfig, DedupPipeline, DedupResult
 from repro.core.lsh import LSHParams, candidate_probability
@@ -34,7 +57,9 @@ from repro.core.session import (
     ClusterSnapshot,
     DedupSession,
     DocIdAllocator,
+    SessionView,
 )
+from repro.core.query import QueryResult, query_view
 from repro.core.candidates import (
     BandMatrixSource,
     CandidateSource,
@@ -75,7 +100,11 @@ __all__ = [
     "BandIndex",
     "ClusterSnapshot",
     "DedupSession",
+    "DedupQueryService",
     "DocIdAllocator",
+    "SessionView",
+    "QueryResult",
+    "query_view",
     "BandMatrixSource",
     "CandidateSource",
     "EdgeStreamSource",
@@ -92,3 +121,15 @@ __all__ = [
     "ShardedEdgeVerifier",
     "SignatureVerifier",
 ]
+
+
+def __getattr__(name: str):
+    # Lazy re-export: the serving shell lives in repro.serving (its
+    # package pulls the model stack), so it is resolved on first
+    # access instead of at `import repro.core` time.
+    if name == "DedupQueryService":
+        from repro.serving.dedup_service import DedupQueryService
+
+        return DedupQueryService
+    raise AttributeError(
+        f"module {__name__!r} has no attribute {name!r}")

@@ -112,9 +112,10 @@ class DedupPipeline:
     def tokenize(self, texts: list[str]) -> list[list[str]]:
         return [shingle.tokenize(t) for t in texts]
 
-    def compute_signatures(self, token_lists: list[list[str]]) -> np.ndarray:
+    def compute_signatures(self, token_lists: list[list[str]],
+                           pad_len: int | None = None) -> np.ndarray:
         t0 = time.perf_counter()
-        packed = shingle.pack_documents(token_lists)
+        packed = shingle.pack_documents(token_lists, pad_len)
         if self.config.use_pallas or self.config.fused_ingest:
             from repro.kernels import ops as kops
 
@@ -155,8 +156,9 @@ class DedupPipeline:
         self.stage_timings["bands_s"] = time.perf_counter() - t0
         return bands
 
-    def ingest_arrays(
-        self, token_lists: list[list[str]]
+    def compute_arrays(
+        self, token_lists: list[list[str]],
+        pad_len: int | None = None,
     ) -> tuple[np.ndarray, np.ndarray]:
         """One chunk's (signatures, band values) — the ingest hot path.
 
@@ -165,14 +167,24 @@ class DedupPipeline:
         HBM round-trip and no separate band dispatch); otherwise the
         staged ``compute_signatures`` -> ``compute_bands`` chain runs.
         Outputs are bit-identical either way.
+
+        ``pad_len`` (>= the longest document) widens the packed token
+        matrix; signatures are invariant to padding (the validity mask
+        comes from real lengths), so callers with many small batches —
+        the query service — bucket shapes to bound jit recompiles.
+
+        Named ``compute_*`` (not ``ingest_*``) per the public naming
+        scheme (``repro.core`` docstring): this is a pure stage
+        computation — only ``ingest*`` entry points add documents to
+        long-lived dedup state.
         """
         if not self.config.fused_ingest:
-            sig = self.compute_signatures(token_lists)
+            sig = self.compute_signatures(token_lists, pad_len)
             return sig, self.compute_bands(sig)
         from repro.kernels import ops as kops
 
         t0 = time.perf_counter()
-        packed = shingle.pack_documents(token_lists)
+        packed = shingle.pack_documents(token_lists, pad_len)
         sig, bands, _ = kops.fused_ingest(
             jnp.asarray(packed.tokens),
             jnp.asarray(packed.lengths),
@@ -184,6 +196,25 @@ class DedupPipeline:
         self.stage_timings["signature_s"] = time.perf_counter() - t0
         self.stage_timings["bands_s"] = 0.0  # fused into the one pass
         return sig, bands
+
+    def ingest_arrays(
+        self, token_lists: list[list[str]]
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Deprecated spelling of :meth:`compute_arrays`.
+
+        The old name collided with the session-layer ``ingest*`` verbs,
+        which add documents to long-lived dedup state; this method never
+        did (it is a pure stage computation).
+        """
+        import warnings
+
+        warnings.warn(
+            "DedupPipeline.ingest_arrays is deprecated; use "
+            "compute_arrays (same signature, same outputs). 'ingest*' "
+            "names are reserved for entry points that add documents to "
+            "long-lived dedup state.",
+            DeprecationWarning, stacklevel=2)
+        return self.compute_arrays(token_lists)
 
     def make_verifier(self, token_lists: list[list[str]],
                       sig: np.ndarray):
@@ -212,7 +243,7 @@ class DedupPipeline:
         token_lists = self.tokenize(texts)
         timings["tokenize_s"] = time.perf_counter() - t0
 
-        sig, bands = self.ingest_arrays(token_lists)
+        sig, bands = self.compute_arrays(token_lists)
         timings["signatures_s"] = self.stage_timings["signature_s"]
         timings["bands_s"] = self.stage_timings["bands_s"]
 
@@ -223,7 +254,7 @@ class DedupPipeline:
         t0 = time.perf_counter()
         sess = DedupSession(cfg, backend="host", verifier=verifier)
         snap = sess._merge_precomputed(token_lists, sig, bands)
-        uf, stats, pairs = snap.uf, snap.stats, snap.pairs
+        uf, stats, pairs = sess.uf, snap.stats, snap.pairs
         timings["cluster_s"] = time.perf_counter() - t0
         timings["verify_s"] = stats.verify_seconds
 

@@ -95,6 +95,14 @@ class BandBloomFilter:
     def memory_bytes(self) -> int:
         return self._words.nbytes
 
+    def copy(self) -> "BandBloomFilter":
+        """Independent copy (read-path views freeze the filter state so
+        a concurrent ingest's ``add`` can never flip a bit mid-probe)."""
+        out = BandBloomFilter(self.bits, self.num_hashes)
+        out._words = self._words.copy()
+        out.n_added = self.n_added
+        return out
+
 
 @dataclass(frozen=True)
 class RetentionPolicy:

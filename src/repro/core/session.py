@@ -44,7 +44,8 @@ sharded merge (both call ``dist_lsh.feed_step_groups``).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, replace
+import warnings
+from dataclasses import dataclass, field, replace
 from typing import Iterable, Iterator
 
 import numpy as np
@@ -232,6 +233,24 @@ class BandIndex:
                     olds.append(r)
                     self._entries.setdefault(r, []).append((j, key))
 
+    def export_maps(self) -> tuple:
+        """Frozen per-band bucket maps for a ``SessionView``.
+
+        Each band's ``{(hi, lo): [doc ids]}`` dict is copied with its
+        bucket lists frozen to tuples, so a published view's probe
+        results can never be changed by a later ``match_then_insert``
+        or ``evict`` (DESIGN.md §9).  Pure read — recency (the LRU
+        compaction order) is NOT refreshed.
+        """
+        return tuple({k: tuple(v) for k, v in m.items()}
+                     for m in self._maps)
+
+    def export_filters(self) -> tuple:
+        """Frozen per-band Bloom filters for a ``SessionView`` (copies;
+        a concurrent compaction's ``add`` cannot flip bits mid-probe)."""
+        return tuple(f.copy() if f is not None else None
+                     for f in self._filters)
+
     def stats(self) -> dict:
         """Memory/recall accounting for reports and the soak benchmark."""
         return {
@@ -247,15 +266,25 @@ class BandIndex:
         }
 
 
-@dataclass
+@dataclass(frozen=True)
 class ClusterSnapshot:
-    """Cluster state after an ``ingest`` call (cumulative, global ids)."""
+    """Cluster state after an ``ingest`` call — a pure VALUE object.
+
+    Every public field is a copy (``labels`` is frozen read-only,
+    ``stats`` is a counter copy, ``pairs`` is a fresh list built from
+    the verified-sim cache) or an immutable scalar: holding a snapshot
+    never pins live session state, and later ingests cannot change what
+    a snapshot already reported.  The LIVE handles moved off the public
+    surface in PR 7 — ``DedupSession.uf`` is the live union-find, and
+    the read path goes through the immutable ``SessionView``
+    (``DedupSession.view``, DESIGN.md §9).  The deprecated ``uf``
+    property still serves old call sites via the private ``_uf`` handle.
+    """
 
     n_docs: int                 # docs ingested so far (id upper bound)
-    labels: np.ndarray          # (n_docs,) cluster root per doc
-    stats: ClusterStats         # cumulative engine counters
-    pairs: list                 # every evaluated (a, b, sim) so far
-    uf: ThresholdUnionFind      # the live union-find (not a copy)
+    labels: np.ndarray          # (n_docs,) cluster root per doc (frozen)
+    stats: ClusterStats         # cumulative engine counters (a copy)
+    pairs: list                 # every evaluated (a, b, sim) so far (a copy)
     overflow: int = 0           # sharded: device buffer overflow so far
     retried: int = 0            # sharded: overflow fallback passes run
     device_scored: int = 0      # sharded stage2=device: pass-throughs
@@ -267,6 +296,20 @@ class ClusterSnapshot:
     filter_only_hits: int = 0   # band hits whose partner was compacted
     refine_merges: int = 0      # second-round merges so far
     representatives: np.ndarray | None = None  # retained roots (sorted)
+    _uf: ThresholdUnionFind | None = field(default=None, repr=False,
+                                           compare=False)
+
+    @property
+    def uf(self) -> ThresholdUnionFind | None:
+        """Deprecated: the LIVE union-find (not part of the snapshot's
+        value semantics).  Use ``DedupSession.uf`` for live clustering
+        state, or ``labels`` for the frozen per-doc roots."""
+        warnings.warn(
+            "ClusterSnapshot.uf is deprecated: snapshots are pure value "
+            "objects; use DedupSession.uf for the live union-find or "
+            "ClusterSnapshot.labels for the frozen roots",
+            DeprecationWarning, stacklevel=2)
+        return self._uf
 
     @property
     def num_clusters(self) -> int:
@@ -284,6 +327,84 @@ class ClusterSnapshot:
         for i, r in enumerate(self.labels):
             groups.setdefault(int(r), []).append(i)
         return [v for v in groups.values() if len(v) >= min_size]
+
+
+@dataclass(frozen=True)
+class ExactRowsView:
+    """Frozen exact-verifier rows inside a ``SessionView`` (host
+    exact-verification sessions).
+
+    ``vocab`` is shared with the live verifier BY REFERENCE: interning
+    is append-only (an n-gram's id never changes once assigned), so
+    read-only lookups stay valid across later ingests; the read path
+    must only ever ``get`` from it, never ``setdefault``.
+    """
+
+    ids: np.ndarray             # (R, lmax) padded sorted n-gram id rows
+    lengths: np.ndarray         # (R,) real row lengths
+    slot_of: dict | None        # doc -> row (eviction layout; None = id)
+    vocab: dict                 # n-gram -> id (append-only, shared)
+    ngram: int
+
+    def row_for(self, doc: int) -> np.ndarray:
+        slot = doc if self.slot_of is None else self.slot_of[doc]
+        return self.ids[slot][: int(self.lengths[slot])]
+
+
+@dataclass(frozen=True)
+class SessionView:
+    """Immutable read-path handle over a ``DedupSession`` (DESIGN.md §9).
+
+    Published atomically (one attribute swap on the session) at the end
+    of an ingest: a query running against a view can never race a
+    concurrent ingest or retention sweep, because everything it touches
+    is either a frozen copy (labels, band maps, Bloom filters, the
+    eviction-mode row matrix) or an append-only buffer whose visible
+    rows are never rewritten (the unevicted signature/token matrices —
+    see ``SignatureVerifier.frozen_rows``).  Two consecutive views share
+    those append-only buffers, so publication is O(band-index entries),
+    not O(corpus).
+
+    ``core.query`` implements probe/verify over a view;
+    ``serving.dedup_service.DedupQueryService`` serves it.
+    """
+
+    version: int                # monotone publication counter
+    n_docs: int                 # docs covered (labels bound)
+    edge_threshold: float       # the engine's duplicate threshold
+    num_bands: int
+    rows_per_band: int
+    labels: np.ndarray          # (n_docs,) cluster root per doc (frozen)
+    band_maps: tuple            # per band: {(hi, lo): (doc ids,)}
+    band_filters: tuple         # per band: BandBloomFilter | None
+    signatures: np.ndarray      # retained rows (estimate sessions)
+    slot_of: dict | None        # doc -> signature row (eviction layout)
+    exact: ExactRowsView | None = None   # exact-verification sessions
+
+    @property
+    def mode(self) -> str:
+        return "exact" if self.exact is not None else "estimate"
+
+    def root_of(self, doc: int) -> int:
+        return int(self.labels[doc])
+
+    def slot_index(self, ids: np.ndarray) -> np.ndarray:
+        """Global doc ids -> physical signature rows (eviction-aware)."""
+        ids = np.asarray(ids, dtype=np.int64)
+        if self.slot_of is None:
+            return ids
+        so = self.slot_of
+        return np.fromiter((so[int(i)] for i in ids.ravel()),
+                           dtype=np.int64,
+                           count=ids.size).reshape(ids.shape)
+
+    def rows_for(self, doc_ids) -> np.ndarray:
+        """Retained signature rows for ``doc_ids`` at publication time."""
+        ids = np.asarray(doc_ids, dtype=np.int64)
+        if ids.size == 0:
+            return np.zeros((0,) + self.signatures.shape[1:],
+                            dtype=self.signatures.dtype)
+        return self.signatures[self.slot_index(ids)]
 
 
 class DedupSession:
@@ -374,6 +495,10 @@ class DedupSession:
         # of the merges, so the two counters differ transiently.
         self.n_merged = int(doc_id_base)
         self._finalized = False
+        # Read-path publication state (SessionView, DESIGN.md §9).
+        self._view_cache: SessionView | None = None
+        self._view_key = None
+        self._view_version = 0
         if backend == "host":
             self._impl = _HostBackend(self)
         elif backend == "streaming":
@@ -447,12 +572,14 @@ class DedupSession:
     def snapshot(self) -> ClusterSnapshot:
         v = self._verifier
         retained = getattr(v, "n_live_rows", None)
+        labels = self.uf.components()[: self.n_docs]
+        labels.setflags(write=False)
         return ClusterSnapshot(
             n_docs=self.n_docs,
-            labels=self.uf.components()[: self.n_docs],
+            labels=labels,
             stats=replace(self.acc.stats),
             pairs=self.acc.pairs,
-            uf=self.uf,
+            _uf=self.uf,
             overflow=self.overflow,
             retried=self.retried,
             device_scored=getattr(v, "n_passthrough", 0),
@@ -468,6 +595,79 @@ class DedupSession:
                                       dtype=np.int64)
                              if self.retention is not None else None),
         )
+
+    # -- read path (SessionView publication, DESIGN.md §9) -------------------
+
+    def _view_state_key(self) -> tuple:
+        """Covers every mutation that can change a view's contents."""
+        return (self.steps_ingested, self.n_merged, self.refines_run,
+                self.acc.stats.unions_done,
+                self.retention.n_evicted if self.retention is not None
+                else 0,
+                self.band_index.compacted_keys)
+
+    def view(self) -> SessionView:
+        """The current immutable read-path handle over this session.
+
+        Built on first read after a mutation and cached — the cache
+        swap is the atomic publication, and the publication key covers
+        every state-mutating counter (ingest steps, merges, unions,
+        refines, evictions, band compaction), so the SAME object comes
+        back until the session actually changes.  Queries holding an
+        older view keep working unchanged across later ingests: their
+        frozen copies never see them (see ``SessionView``).
+
+        The streaming backend keeps its retained state in the band
+        store, not the cross-step ``BandIndex``, so it has nothing to
+        probe; use a host or sharded session for the query service.
+        """
+        if self.backend == "streaming":
+            raise ValueError(
+                "SessionView needs a backend that maintains the "
+                "cross-step BandIndex (host or sharded); the streaming "
+                "backend's retained state is its band store")
+        key = self._view_state_key()
+        if self._view_cache is not None and self._view_key == key:
+            return self._view_cache
+        labels = self.uf.components()[: self.n_docs]
+        labels.setflags(write=False)
+        cfg = self.config
+        v = self._verifier
+        empty_sig = np.zeros((0, cfg.num_hashes), dtype=np.uint32)
+        exact = None
+        sig, slot_of = empty_sig, None
+        if isinstance(v, ExactJaccardVerifier):
+            if v._vocab is None or v._ngram is None:
+                raise ValueError(
+                    "exact verifier was built from raw id rows (no "
+                    "vocab/ngram); the read path cannot intern query "
+                    "documents — build it with from_token_lists")
+            ids, lengths, slot = v.frozen_rows()
+            exact = ExactRowsView(ids=ids, lengths=lengths, slot_of=slot,
+                                  vocab=v._vocab, ngram=v._ngram)
+        elif isinstance(v, SignatureVerifier):
+            sig, slot_of = v.frozen_rows()
+        elif v is not None and self.n_docs > self.allocator.base:
+            raise ValueError(
+                "SessionView needs retained signature or token rows; "
+                "external callback verifiers keep neither — pass a "
+                "SignatureVerifier/ExactJaccardVerifier instead")
+        view = SessionView(
+            version=self._view_version + 1,
+            n_docs=self.n_docs,
+            edge_threshold=cfg.edge_threshold,
+            num_bands=cfg.num_bands,
+            rows_per_band=cfg.rows_per_band,
+            labels=labels,
+            band_maps=self.band_index.export_maps(),
+            band_filters=self.band_index.export_filters(),
+            signatures=sig,
+            slot_of=slot_of,
+            exact=exact,
+        )
+        self._view_version = view.version
+        self._view_cache, self._view_key = view, key
+        return view
 
     # -- ingest ------------------------------------------------------------
 
@@ -739,7 +939,7 @@ class _HostBackend:
         if not toks:
             return (base, toks, None, None)
         # Fused-ingest configs compute both arrays in one Pallas pass.
-        sig, bands = self.pipe.ingest_arrays(toks)
+        sig, bands = self.pipe.compute_arrays(toks)
         return (base, toks, sig, bands)
 
     def merge(self, pending, index: bool = True):

@@ -181,7 +181,7 @@ class StreamingDedup:
                                  tree_threshold=tree_t),
             verifier=verifier)
         snap = sess.snapshot()
-        return snap.uf, {"pairs_evaluated": snap.stats.pairs_evaluated,
+        return sess.uf, {"pairs_evaluated": snap.stats.pairs_evaluated,
                          "pairs_excluded": snap.stats.pairs_excluded,
                          "verify_batches": snap.stats.verify_batches,
                          "verify_seconds": snap.stats.verify_seconds}

@@ -217,6 +217,22 @@ class SignatureVerifier(BatchVerifier):
                             dtype=self.signatures.dtype)
         return self.signatures[self._slot_index(ids)]
 
+    def frozen_rows(self) -> tuple[np.ndarray, dict | None]:
+        """(signatures, doc->slot) safe against later session mutation.
+
+        Read-path snapshot for ``core.session.SessionView``.  In the
+        append-only layout later extensions only ever write past this
+        view's row bound or reallocate into a fresh buffer, so the
+        current row-slice object is already immutable — shared
+        zero-copy.  In the eviction layout (``_slot_of`` set) freed
+        slots are rewritten in place by later chunks, so the live rows
+        — bounded O(clusters + LRU window) by the retention invariant —
+        are copied together with the doc->slot map.
+        """
+        if self._slot_of is None:
+            return self.signatures, None
+        return self.signatures.copy(), dict(self._slot_of)
+
     def _device_signatures(self):
         import jax.numpy as jnp
 
@@ -599,6 +615,15 @@ class ExactJaccardVerifier(BatchVerifier):
             self._free.append(slot)
             released += 1
         return released
+
+    def frozen_rows(self) -> tuple[np.ndarray, np.ndarray, dict | None]:
+        """(ids, lengths, doc->slot) safe against later session mutation
+        (same snapshot protocol as ``SignatureVerifier.frozen_rows``:
+        zero-copy while append-only, copied under the eviction layout
+        where slot reuse rewrites rows in place)."""
+        if self._slot_of is None:
+            return self.ids, self.lengths, None
+        return self.ids.copy(), self.lengths.copy(), dict(self._slot_of)
 
     def extend_token_lists(self, token_lists: list[list[str]]) -> None:
         """Intern + append new documents using the persistent vocab.

@@ -11,6 +11,7 @@ helper.
   PYTHONPATH=src python -m repro.launch.dedup --streaming --chunk 128
   PYTHONPATH=src python -m repro.launch.dedup --sharded --devices 8
   PYTHONPATH=src python -m repro.launch.dedup --sharded --steps 4
+  PYTHONPATH=src python -m repro.launch.dedup --estimate --query 8
 """
 from __future__ import annotations
 
@@ -41,6 +42,37 @@ def report_session(mode: str, snap, seconds: float, extra: str = ""):
           f"{snap.stats.verify_batches} batches "
           f"({snap.stats.verify_pairs_per_second:.0f} pairs/s)"
           f"{extra}{retain}, {seconds:.2f}s total")
+
+
+def run_query_demo(sess, notes, n: int):
+    """Read-path demo: re-query ``n`` ingested notes + one novel note.
+
+    Stands up a ``DedupQueryService`` over the warm session and prints
+    one summary line.  Queries never mutate the session — the snapshot
+    the caller just reported stays valid.  Modes whose session cannot
+    publish a ``SessionView`` (streaming: no cross-step band index;
+    stage2=device: external verifier callback) are reported and
+    skipped rather than failed.
+    """
+    from repro.serving.dedup_service import DedupQueryService
+
+    try:
+        view = sess.view()
+    except ValueError as e:
+        print(f"query demo skipped: {e}")
+        return
+    svc = DedupQueryService(sess)
+    n = min(n, len(notes))
+    novel = "entirely unrelated query text " * 12
+    t0 = time.perf_counter()
+    results = svc.query(list(notes[:n]) + [novel])
+    dt = time.perf_counter() - t0
+    hits = sum(r.is_duplicate for r in results[:n])
+    best = max((r.best_sim for r in results[:n]), default=0.0)
+    print(f"query[view v{view.version}]: {hits}/{n} re-queried notes "
+          f"matched their clusters (best sim {best:.2f}), novel note "
+          f"{'came back novel' if results[-1].novel else 'MATCHED (!)'}"
+          f", {n + 1} queries in {dt * 1e3:.1f} ms")
 
 
 def main(argv=None):
@@ -95,6 +127,12 @@ def main(argv=None):
                     help="auto-run the incremental second clustering "
                          "round (DedupSession.refine) every K ingest "
                          "steps (0 = off)")
+    ap.add_argument("--query", type=int, default=0, metavar="N",
+                    help="after ingest, stand up a DedupQueryService "
+                         "over the warm session and re-query N ingested "
+                         "notes plus one novel note (read path demo; "
+                         "host/sharded modes only — streaming has no "
+                         "band index to publish a view over)")
     args = ap.parse_args(argv)
 
     if args.sharded and args.devices:
@@ -161,6 +199,8 @@ def main(argv=None):
         report_session(
             f"sharded[{ndev} devices x {dcfg.band_groups} band-group(s) "
             f"x {args.steps} step(s)]", snap, dt, extra)
+        if args.query:
+            run_query_demo(sess, notes, args.query)
         return
 
     if args.streaming:
@@ -189,6 +229,8 @@ def main(argv=None):
             pass
         dt = time.perf_counter() - t0
         report_session(f"streaming[{args.steps} step(s)]", snap, dt)
+        if args.query:
+            run_query_demo(sess, notes, args.query)
         return
 
     sess = DedupSession(cfg, backend="host", retention=retention)
@@ -197,6 +239,8 @@ def main(argv=None):
         snap = sess.ingest(chunk)
     dt = time.perf_counter() - t0
     report_session(f"host[{args.steps} step(s)]", snap, dt)
+    if args.query:
+        run_query_demo(sess, notes, args.query)
 
 
 if __name__ == "__main__":

@@ -122,7 +122,7 @@ def test_fused_ingest_tile_size_invariance():
 
 
 def test_fused_pipeline_parity():
-    """`DedupPipeline.ingest_arrays` fused vs staged: same bits, and the
+    """`DedupPipeline.compute_arrays` fused vs staged: same bits, and the
     fused path reports a single fused timing (bands_s folded to 0)."""
     from repro.core.pipeline import DedupConfig, DedupPipeline
     from repro.data import inject_near_duplicates, make_i2b2_like
@@ -133,8 +133,8 @@ def test_fused_pipeline_parity():
     toks = DedupPipeline().tokenize(notes)
     staged = DedupPipeline(DedupConfig(fused_ingest=False))
     fused = DedupPipeline(DedupConfig(fused_ingest=True))
-    sig_s, bands_s = staged.ingest_arrays(toks)
-    sig_f, bands_f = fused.ingest_arrays(toks)
+    sig_s, bands_s = staged.compute_arrays(toks)
+    sig_f, bands_f = fused.compute_arrays(toks)
     assert np.array_equal(sig_s, sig_f)
     assert np.array_equal(bands_s, bands_f)
     assert fused.stage_timings["signature_s"] > 0

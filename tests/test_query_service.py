@@ -1,0 +1,292 @@
+"""Online dedup query service: the read path over a warm session.
+
+Pins the PR 7 contract (DESIGN.md §9):
+
+* query-after-ingest parity — every already-ingested doc queries back
+  to its own cluster root with sim 1.0, and every candidate sim the
+  query reports is bit-identical to the session's recorded pair sims;
+* queries never mutate session state (labels / pairs / counters /
+  band-index stats before == after, asserted);
+* ``SessionView`` immutability — a view taken before an ingest keeps
+  answering identically after it, and its arrays are read-only;
+* Bloom-compacted-key fallback — a query hitting a compacted band key
+  reports ``filter_only_hits`` without touching the session counter;
+* microbatched serving == sequential queries, result for result.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    DedupConfig,
+    DedupPipeline,
+    DedupQueryService,
+    DedupSession,
+    QueryResult,
+    RetentionPolicy,
+    SessionView,
+    query_view,
+)
+from repro.data import inject_near_duplicates, make_i2b2_like
+
+
+def _corpus(n=40, dups=25, seed=0):
+    notes = make_i2b2_like(n, seed=seed)
+    notes, _ = inject_near_duplicates(notes, dups, frac_low=0.0,
+                                      frac_high=0.005, seed=seed + 1)
+    return notes
+
+
+def _warm(notes, *, exact=False, retention=None, chunks=1):
+    sess = DedupSession(DedupConfig(exact_verification=exact),
+                        backend="host", retention=retention)
+    for idx in np.array_split(np.arange(len(notes)), chunks):
+        snap = sess.ingest([notes[i] for i in idx])
+    return sess, snap
+
+
+def _session_state(sess):
+    """Everything a query could illegally touch."""
+    return (
+        sess.uf.components()[: sess.n_docs].tolist(),
+        list(sess.acc.pairs),
+        sess.n_docs,
+        sess.steps_ingested,
+        sess.acc.stats.pairs_evaluated,
+        sess.acc.stats.unions_done,
+        sess.band_index.stats(),
+        sess.band_index.filter_only_hits,
+    )
+
+
+# -- query-after-ingest parity ---------------------------------------------
+
+@pytest.mark.parametrize("exact", [False, True])
+def test_every_ingested_doc_queries_to_own_root_with_sim_one(exact):
+    notes = _corpus()
+    sess, snap = _warm(notes, exact=exact, chunks=3)
+    svc = DedupQueryService(sess)
+    results = svc.query(notes)
+    assert len(results) == len(notes)
+    for i, r in enumerate(results):
+        assert r.is_duplicate, f"doc {i} not recognised"
+        assert r.best_sim == 1.0
+        assert r.cluster_root == int(snap.labels[i])
+
+
+@pytest.mark.parametrize("exact", [False, True])
+def test_candidate_sims_bit_identical_to_recorded_pairs(exact):
+    notes = _corpus()
+    sess, snap = _warm(notes, exact=exact, chunks=2)
+    recorded = {(a, b): s for a, b, s in snap.pairs}
+    svc = DedupQueryService(sess)
+    overlap = 0
+    for i, r in enumerate(svc.query(notes)):
+        for doc, sim in r.candidates:
+            key = (min(doc, i), max(doc, i))
+            if key in recorded:
+                overlap += 1
+                assert np.float32(sim) == recorded[key], (i, doc)
+    assert overlap > 0, "queries must re-evaluate recorded pairs"
+
+
+def test_queries_never_mutate_session_state():
+    notes = _corpus()
+    sess, snap = _warm(notes, chunks=2)
+    svc = DedupQueryService(sess)
+    before = _session_state(sess)
+    labels_before = snap.labels.copy()
+    svc.query(notes)
+    svc.query(["utterly novel content " * 20])
+    for r in [svc.submit(t) for t in notes[:7]]:
+        pass
+    svc.run_until_drained()
+    assert _session_state(sess) == before
+    np.testing.assert_array_equal(sess.snapshot().labels, labels_before)
+
+
+# -- SessionView publication protocol --------------------------------------
+
+def test_view_cached_until_mutation_and_versioned():
+    notes = _corpus(30, 15)
+    sess, _ = _warm(notes)
+    v1 = sess.view()
+    assert sess.view() is v1
+    sess.ingest(notes[:5])
+    v2 = sess.view()
+    assert v2 is not v1 and v2.version == v1.version + 1
+    assert v2.n_docs == v1.n_docs + 5
+
+
+def test_old_view_answers_identically_after_interleaved_ingest():
+    notes = _corpus()
+    sess, _ = _warm(notes, chunks=2)
+    view = sess.view()
+    pipe = DedupPipeline(sess.config)
+    pipe.seeds = sess.seeds
+    toks = pipe.tokenize(notes[:10])
+    sig, bands = pipe.compute_arrays(toks)
+    before = query_view(view, bands, sig=sig)
+    # Interleave: admit brand-new near-dups of the queried docs, which
+    # mutates labels, band index, signature matrix.
+    sess.ingest([n + " trailing edit" for n in notes[:10]])
+    sess.ingest(notes[:10])
+    after = query_view(view, bands, sig=sig)
+    assert before == after
+    # The fresh view DOES see the new docs.
+    fresh = query_view(sess.view(), bands, sig=sig)
+    assert fresh != before
+
+
+def test_view_arrays_are_frozen():
+    notes = _corpus(20, 10)
+    sess, _ = _warm(notes)
+    view = sess.view()
+    with pytest.raises(ValueError):
+        view.labels[0] = 99
+    with pytest.raises(Exception):
+        view.band_maps[0].clear() if not view.band_maps[0] else \
+            view.band_maps[0].popitem()[1].append(123)
+
+
+def test_streaming_backend_has_no_view():
+    sess = DedupSession(DedupConfig(), backend="streaming")
+    sess.ingest(_corpus(10, 5))
+    with pytest.raises(ValueError, match="band store"):
+        sess.view()
+
+
+# -- retention: eviction + Bloom compaction --------------------------------
+
+def test_query_after_eviction_finds_cluster_via_retained_root():
+    notes = _corpus(60, 40)
+    pol = RetentionPolicy(lru_window=8)
+    sess, snap = _warm(notes, retention=pol, chunks=6)
+    assert snap.evicted > 0, "test needs actual evictions"
+    view = sess.view()
+    assert view.slot_of is not None  # eviction layout reached
+    svc = DedupQueryService(sess)
+    evicted = [d for d in range(sess.n_docs)
+               if d not in view.slot_of]
+    assert evicted
+    for d in evicted[:5]:
+        r = svc.query([notes[d]])[0]
+        assert r.is_duplicate
+        assert r.cluster_root == int(snap.labels[d])
+        # The matched doc must be retained (candidates were rewritten
+        # onto roots at eviction time).
+        assert r.matched_doc in view.slot_of
+
+
+def test_bloom_compacted_key_query_fallback():
+    notes = _corpus(60, 10, seed=7)
+    pol = RetentionPolicy(lru_window=None, band_key_budget=4)
+    sess, _ = _warm(notes, retention=pol, chunks=6)
+    assert sess.band_index.compacted_keys > 0
+    svc = DedupQueryService(sess)
+    counter_before = sess.band_index.filter_only_hits
+    results = svc.query(notes)
+    # Early docs' band keys were compacted into the per-band Bloom
+    # filters: the query still learns "seen before, partner unnameable".
+    assert sum(r.filter_only_hits for r in results) > 0
+    # ...but the SESSION's counter is untouched (pure read).
+    assert sess.band_index.filter_only_hits == counter_before
+
+
+# -- microbatching ----------------------------------------------------------
+
+def test_microbatch_equals_sequential_queries():
+    notes = _corpus()
+    sess, _ = _warm(notes, chunks=2)
+    svc = DedupQueryService(sess, max_batch=4)
+    queries = notes[:13] + ["novel text " * 25]
+    sequential = svc.query(queries)
+    rids = [svc.submit(t) for t in queries]
+    finished = svc.run_until_drained()
+    assert svc.stats.microbatches >= len(queries) // 4
+    by_rid = {r.rid: r for r in finished}
+    assert [by_rid[rid].result for rid in rids] == sequential
+    assert all(by_rid[rid].done and by_rid[rid].latency_s >= 0.0
+               for rid in rids)
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_device_backends_match_numpy(backend):
+    notes = _corpus(30, 20)
+    sess, _ = _warm(notes, chunks=2)
+    queries = notes[:9] + ["something else entirely " * 20]
+    ref = DedupQueryService(sess, backend="numpy").query(queries)
+    got = DedupQueryService(sess, backend=backend).query(queries)
+    assert got == ref
+
+
+# -- admit (the write path) -------------------------------------------------
+
+def test_admit_then_query_roundtrip():
+    notes = _corpus(30, 15)
+    sess, snap = _warm(notes)
+    svc = DedupQueryService(sess)
+    novel = "previously unseen admission note " * 10
+    assert not svc.query([novel])[0].is_duplicate
+    snap2 = svc.admit([novel])
+    assert snap2.n_docs == snap.n_docs + 1
+    r = svc.query([novel])[0]
+    assert r.is_duplicate and r.best_sim == 1.0
+    assert r.cluster_root == int(snap2.labels[snap.n_docs])
+    assert svc.stats.admitted == snap2.n_docs
+
+
+# -- deprecation shims ------------------------------------------------------
+
+def test_snapshot_uf_is_deprecated_but_live():
+    sess, snap = _warm(_corpus(20, 10))
+    with pytest.deprecated_call():
+        uf = snap.uf
+    assert uf is sess.uf
+
+
+def test_pipeline_ingest_arrays_is_deprecated_alias():
+    pipe = DedupPipeline(DedupConfig())
+    toks = pipe.tokenize(_corpus(6, 3))
+    with pytest.deprecated_call():
+        old = pipe.ingest_arrays(toks)
+    new = pipe.compute_arrays(toks)
+    assert np.array_equal(old[0], new[0])
+    assert np.array_equal(old[1], new[1])
+
+
+def test_public_api_surface():
+    import repro.core as core
+
+    for name in ("DedupSession", "ClusterSnapshot", "SessionView",
+                 "DedupConfig", "DistLSHConfig", "RetentionPolicy",
+                 "DedupQueryService", "QueryResult", "query_view"):
+        assert hasattr(core, name), name
+    from repro.serving import DedupQueryService as via_serving
+
+    assert core.DedupQueryService is via_serving
+
+
+# -- query result shape -----------------------------------------------------
+
+def test_novel_query_result_shape():
+    sess, _ = _warm(_corpus(20, 10))
+    r = DedupQueryService(sess).query(["nothing like the corpus " * 15])[0]
+    assert r == QueryResult(is_duplicate=False, cluster_root=None,
+                            best_sim=0.0, matched_doc=None,
+                            n_candidates=0, filter_only_hits=0,
+                            candidates=())
+    assert r.novel
+
+
+def test_query_view_requires_matching_operands():
+    sess, _ = _warm(_corpus(20, 10), exact=False)
+    view = sess.view()
+    pipe = DedupPipeline(sess.config)
+    toks = pipe.tokenize(["x " * 40])
+    _, bands = pipe.compute_arrays(toks)
+    with pytest.raises(ValueError, match="sig"):
+        query_view(view, bands)  # estimate view needs sig
+    with pytest.raises(ValueError):
+        query_view(view, np.zeros((1, 3, 2), np.uint32), sig=None)
