@@ -39,7 +39,6 @@ def _true_pairs(sets, threshold):
 def run():
     section("figs 1-3: FP/FN vs (b, r) at thresholds 0.2/0.3/0.4")
     notes, sets, ng, valid = _prepare()
-    n = len(notes)
     seeds_all = minhash.default_seeds(512)
 
     results = []

@@ -9,7 +9,6 @@ from __future__ import annotations
 import time
 
 import numpy as np
-import jax.numpy as jnp
 
 from benchmarks.common import emit, section
 from repro.core import jaccard, shingle
@@ -179,7 +178,7 @@ def run_louvain():
             if sum(1 for x in labels if x == l) == 1)
         emit(f"louvain_cmp_{name}", secs * 1e6,
              f"sameHigh={sh};sameMid={sm};sameLow={sl};diffHigh={dh};"
-             f"Q={q:.3f}")
+             f"Q={q:.3f};clusters={nclust}")
     emit("louvain_cmp_saved_evals", 0.0,
          f"excluded={st.pairs_excluded}")
 

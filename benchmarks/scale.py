@@ -29,7 +29,7 @@ def run():
             jnp.asarray(packed.tokens), jnp.asarray(packed.lengths), n=8)
         sig = minhash.signatures(
             ng, valid, jnp.asarray(minhash.default_seeds(100)))
-        bands = np.asarray(lsh.band_values(sig, 2))
+        _bands = np.asarray(lsh.band_values(sig, 2))
         dt = time.perf_counter() - t0
         rates.append(n / dt)
         emit(f"scale_signatures_n{n}", dt * 1e6 / n,

@@ -66,9 +66,14 @@ def main(argv=None):
     if args.backend == "host":
         view = sess.view()
         from repro.core import query_view
+        from repro.core.shingle import pow2_bucket
 
-        sig, bands = DedupPipeline(cfg).compute_arrays(
-            DedupPipeline(cfg).tokenize([notes[0]]))
+        pipe = DedupPipeline(cfg)
+        toks = pipe.tokenize([notes[0]])
+        # pow2 pad_len keeps repeated queries on one jit compile
+        # (RPR003; the query service does this internally).
+        sig, bands = pipe.compute_arrays(
+            toks, pad_len=pow2_bucket(len(toks[0])))
         res = query_view(view, bands, sig=sig)[0]
         print(f"view v{view.version}: query(notes[0]) -> "
               f"duplicate={res.is_duplicate} sim={res.best_sim:.2f} "

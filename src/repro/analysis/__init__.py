@@ -1,0 +1,43 @@
+"""repro.analysis — repo-specific static analysis (the lint pass).
+
+The engine's correctness story is a set of hand-enforced invariants:
+exact uint32 wraparound arithmetic in the kernel chain (bit parity is
+the paper's exact-dedup contract), queries that never mutate session
+state, jit entry points fed shape-stable operands, the blessed
+``ingest*/compute_*/query*`` naming scheme, and Pallas BlockSpec tiling
+that stays inside the documented VMEM budget.  Until this package,
+nothing checked any of that until a test happened to trip it.
+
+``python -m repro.analysis`` runs five AST rules over the repo
+(DESIGN.md §10 documents each invariant):
+
+* **RPR001 dtype-discipline** — uint32 wraparound arithmetic in
+  ``kernels/*`` and ``core/hashing.py`` / ``core/minhash.py`` must not
+  mix in bare int literals, true/floor division, or int32 operands.
+* **RPR002 query-purity** — ``query*`` / ``view`` / ``probe_*`` /
+  ``frozen_*`` functions must not assign to ``self.*``, call
+  ``ingest*`` / ``admit*`` or mutating index/union-find methods, or
+  mutate view state.
+* **RPR003 recompilation-hazard** — calls into the jitted signature
+  stages (``compute_arrays`` / ``compute_signatures`` /
+  ``fused_ingest``) must route shape-bearing args through ``pad_len``
+  / pow2 bucketing (the PR 7 ~350 ms-p50 recompile bug, DESIGN.md §9).
+* **RPR004 naming/deprecation** — no new calls to the
+  ``DeprecationWarning`` shims (``ingest_arrays``,
+  ``ClusterSnapshot.uf``); new public defs in ``core/`` follow the
+  naming scheme.
+* **RPR005 pallas-spec** — ``pl.pallas_call`` sites: BlockSpec
+  index-map arity must match the grid rank, block ranks must match the
+  operand/out_shape ranks, tile dims must be clamped/padded per the
+  documented TL/TM rules, and the static VMEM estimate must stay under
+  the configured ceiling (DESIGN.md §8's ~530 KiB budget, checked).
+
+Findings are suppressible per line (``# repro-lint: disable=RPR00x``)
+or grandfathered via the committed baseline
+(``.repro-lint-baseline.json``; regenerate with ``--write-baseline``).
+The CI ``lint`` job runs this pass plus ``ruff`` before tier-1.
+"""
+from repro.analysis.findings import Finding
+from repro.analysis.lint import main, run_analysis
+
+__all__ = ["Finding", "main", "run_analysis"]

@@ -1,0 +1,63 @@
+"""Baseline file: grandfathered findings so CI starts green-but-strict.
+
+The baseline maps finding fingerprints (line-insensitive, see
+``findings.Finding.fingerprint``) to ``{"count": N, "reason": ...}``.
+A run matches up to ``count`` findings per fingerprint against the
+baseline; the (N+1)-th occurrence of the same construct is NEW and
+fails the run — adding more of a grandfathered pattern is not free.
+
+``--write-baseline`` regenerates the file from the current findings,
+preserving reasons for fingerprints that survive.
+"""
+from __future__ import annotations
+
+import json
+from collections import Counter
+
+from repro.analysis.findings import Finding
+
+DEFAULT_BASELINE = ".repro-lint-baseline.json"
+_SCHEMA = 1
+
+
+def load_baseline(path: str) -> dict[str, dict]:
+    try:
+        with open(path, "r", encoding="utf-8") as f:
+            data = json.load(f)
+    except FileNotFoundError:
+        return {}
+    if data.get("schema") != _SCHEMA:
+        raise ValueError(
+            f"{path}: unknown baseline schema {data.get('schema')!r} "
+            f"(expected {_SCHEMA})")
+    return dict(data.get("findings", {}))
+
+
+def save_baseline(path: str, findings: list[Finding],
+                  old: dict[str, dict] | None = None) -> dict[str, dict]:
+    """Write a baseline covering ``findings``; keeps old reasons."""
+    old = old or {}
+    counts = Counter(f.fingerprint for f in findings)
+    entries: dict[str, dict] = {}
+    for fp in sorted(counts):
+        entries[fp] = {
+            "count": counts[fp],
+            "reason": old.get(fp, {}).get("reason", "grandfathered"),
+        }
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump({"schema": _SCHEMA, "findings": entries}, f, indent=2,
+                  sort_keys=True)
+        f.write("\n")
+    return entries
+
+
+def apply_baseline(findings: list[Finding],
+                   baseline: dict[str, dict]) -> None:
+    """Mark findings covered by the baseline (in file order)."""
+    used: Counter = Counter()
+    for f in findings:
+        fp = f.fingerprint
+        allowed = int(baseline.get(fp, {}).get("count", 0))
+        if used[fp] < allowed:
+            used[fp] += 1
+            object.__setattr__(f, "status", "baselined")

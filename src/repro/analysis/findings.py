@@ -1,0 +1,48 @@
+"""Finding model shared by the lint driver, rules, and baseline."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One rule violation at one source location.
+
+    ``fingerprint`` is the line-number-insensitive identity used for
+    baseline matching: a file can be edited above a grandfathered
+    finding without un-grandfathering it, but moving the construct to
+    another function (or changing what it does) produces a fresh
+    fingerprint that must be fixed or re-baselined.
+    """
+
+    rule: str                   # "RPR001" .. "RPR005"
+    path: str                   # repo-relative posix path
+    line: int                   # 1-indexed
+    col: int                    # 0-indexed
+    message: str
+    symbol: str = ""            # short stable slug for the construct
+    qualname: str = ""          # enclosing scope, e.g. "DedupSession.view"
+    status: str = field(default="new", compare=False)
+    # "new" | "baselined" | "suppressed"
+
+    @property
+    def fingerprint(self) -> str:
+        return f"{self.rule}::{self.path}::{self.qualname}::{self.symbol}"
+
+    def render(self) -> str:
+        scope = f" [{self.qualname}]" if self.qualname else ""
+        return (f"{self.path}:{self.line}:{self.col + 1}: "
+                f"{self.rule} {self.message}{scope}")
+
+    def to_json(self) -> dict:
+        return {
+            "rule": self.rule,
+            "path": self.path,
+            "line": self.line,
+            "col": self.col,
+            "message": self.message,
+            "symbol": self.symbol,
+            "qualname": self.qualname,
+            "fingerprint": self.fingerprint,
+            "status": self.status,
+        }

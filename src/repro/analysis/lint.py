@@ -1,0 +1,221 @@
+"""Lint driver: discovery, suppression, baseline, reporting, CLI.
+
+``python -m repro.analysis [paths...]`` parses every ``.py`` file under
+the given paths (default: ``src benchmarks examples tests`` minus the
+intentionally-bad fixture corpus), runs the RPR rules, then resolves
+each finding through two escape hatches:
+
+* inline suppression — ``# repro-lint: disable=RPR001[,RPR002]`` (or a
+  bare ``disable`` for all rules) on the finding's line or on a
+  comment line directly above it;
+* the committed baseline (``.repro-lint-baseline.json``) of
+  grandfathered findings, matched by line-insensitive fingerprint.
+
+Exit status is non-zero iff NEW findings remain.  Suppressed and
+baselined counts are always reported so drift stays visible.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import sys
+
+from repro.analysis.baseline import (
+    DEFAULT_BASELINE,
+    apply_baseline,
+    load_baseline,
+    save_baseline,
+)
+from repro.analysis.findings import Finding
+from repro.analysis.rules import ALL_RULES
+from repro.analysis.rules.base import FileContext
+
+DEFAULT_PATHS = ("src", "benchmarks", "examples", "tests")
+# The bad-fixture corpus is linted on purpose by tests, never by default.
+EXCLUDED_PARTS = {"__pycache__", ".git", "fixtures"}
+
+_DISABLE_RE = re.compile(
+    r"#\s*repro-lint:\s*disable(?:=([A-Z0-9,\s]+))?(?:\s|$)")
+_DISABLE_FILE_RE = re.compile(
+    r"#\s*repro-lint:\s*disable-file(?:=([A-Z0-9,\s]+))?(?:\s|$)")
+
+
+def discover(paths) -> list[str]:
+    files: list[str] = []
+    for p in paths:
+        if os.path.isfile(p):
+            files.append(p)
+            continue
+        for root, dirs, names in os.walk(p):
+            dirs[:] = sorted(d for d in dirs
+                             if d not in EXCLUDED_PARTS
+                             and not d.startswith("."))
+            for n in sorted(names):
+                if n.endswith(".py"):
+                    files.append(os.path.join(root, n))
+    return files
+
+
+def _parse_rule_set(spec: str | None) -> set[str] | None:
+    """None = all rules; else the listed rule ids."""
+    if spec is None or not spec.strip():
+        return None
+    return {s.strip().upper() for s in spec.split(",") if s.strip()}
+
+
+def _suppressed(finding: Finding, lines: list[str]) -> bool:
+    for lineno in (finding.line, finding.line - 1):
+        if not (1 <= lineno <= len(lines)):
+            continue
+        text = lines[lineno - 1]
+        if lineno != finding.line and not text.lstrip().startswith("#"):
+            continue  # the line above only counts if comment-only
+        m = _DISABLE_RE.search(text)
+        if m:
+            rules = _parse_rule_set(m.group(1))
+            if rules is None or finding.rule in rules:
+                return True
+    return False
+
+
+def _file_disabled(lines: list[str]) -> set[str] | None:
+    """Rules disabled for the whole file ({"*"} = all)."""
+    for text in lines[:15]:
+        m = _DISABLE_FILE_RE.search(text)
+        if m:
+            rules = _parse_rule_set(m.group(1))
+            return rules if rules is not None else {"*"}
+    return None
+
+
+def lint_file(relpath: str, source: str, *,
+              vmem_limit: int = 1 << 20) -> list[Finding]:
+    """All findings for one file, with suppressions already applied."""
+    ctx = FileContext.parse(relpath, source, vmem_limit=vmem_limit)
+    file_off = _file_disabled(ctx.lines)
+    findings: list[Finding] = []
+    for rule in ALL_RULES:
+        if file_off is not None and ("*" in file_off
+                                     or rule.rule_id in file_off):
+            continue
+        if not rule.applies(ctx):
+            continue
+        findings.extend(rule.check(ctx))
+    findings.sort(key=lambda f: (f.line, f.col, f.rule))
+    for f in findings:
+        if _suppressed(f, ctx.lines):
+            object.__setattr__(f, "status", "suppressed")
+    return findings
+
+
+def run_analysis(paths=DEFAULT_PATHS, *, baseline_path=DEFAULT_BASELINE,
+                 use_baseline: bool = True,
+                 vmem_limit: int = 1 << 20,
+                 root: str = ".") -> dict:
+    """Run the pass; returns the report dict the CLI renders."""
+    files = discover([os.path.join(root, p) if not os.path.isabs(p)
+                      else p for p in paths])
+    findings: list[Finding] = []
+    errors: list[str] = []
+    for path in files:
+        rel = os.path.relpath(path, root).replace(os.sep, "/")
+        try:
+            with open(path, "r", encoding="utf-8") as f:
+                source = f.read()
+            findings.extend(
+                lint_file(rel, source, vmem_limit=vmem_limit))
+        except SyntaxError as e:
+            errors.append(f"{rel}: syntax error: {e}")
+    baseline = {}
+    if use_baseline:
+        bp = baseline_path if os.path.isabs(baseline_path) else \
+            os.path.join(root, baseline_path)
+        baseline = load_baseline(bp)
+        apply_baseline([f for f in findings if f.status == "new"],
+                       baseline)
+    new = [f for f in findings if f.status == "new"]
+    return {
+        "files_checked": len(files),
+        "findings": findings,
+        "new": new,
+        "suppressed": [f for f in findings if f.status == "suppressed"],
+        "baselined": [f for f in findings if f.status == "baselined"],
+        "errors": errors,
+        "baseline_entries": len(baseline),
+    }
+
+
+def _render_text(report: dict, out) -> None:
+    for f in report["new"]:
+        print(f.render(), file=out)
+    for e in report["errors"]:
+        print(e, file=out)
+    n, s, b = (len(report["new"]), len(report["suppressed"]),
+               len(report["baselined"]))
+    print(f"repro-lint: {report['files_checked']} files checked — "
+          f"{n} new finding{'s' if n != 1 else ''}, "
+          f"{b} baselined, {s} suppressed", file=out)
+
+
+def _render_json(report: dict, out) -> None:
+    json.dump({
+        "files_checked": report["files_checked"],
+        "new": [f.to_json() for f in report["new"]],
+        "baselined": [f.to_json() for f in report["baselined"]],
+        "suppressed": [f.to_json() for f in report["suppressed"]],
+        "errors": report["errors"],
+    }, out, indent=2)
+    out.write("\n")
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="repo-specific static analysis (RPR001-RPR005; "
+                    "see DESIGN.md §10)")
+    ap.add_argument("paths", nargs="*", default=None,
+                    help=f"files/dirs to lint (default: "
+                         f"{' '.join(DEFAULT_PATHS)})")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="baseline file (grandfathered findings)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore the baseline: report everything as new")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="regenerate the baseline from current findings "
+                         "and exit 0")
+    ap.add_argument("--vmem-limit", type=int, default=1 << 20,
+                    help="RPR005 VMEM ceiling in bytes (default 1 MiB; "
+                         "DESIGN.md §8 budgets ~530 KiB)")
+    ap.add_argument("--root", default=".",
+                    help="repo root (paths/baseline resolve against it)")
+    args = ap.parse_args(argv)
+
+    paths = args.paths if args.paths else list(DEFAULT_PATHS)
+    report = run_analysis(
+        paths, baseline_path=args.baseline,
+        use_baseline=not args.no_baseline and not args.write_baseline,
+        vmem_limit=args.vmem_limit, root=args.root)
+
+    if args.write_baseline:
+        bp = args.baseline if os.path.isabs(args.baseline) else \
+            os.path.join(args.root, args.baseline)
+        old = {}
+        try:
+            old = load_baseline(bp)
+        except ValueError:
+            pass
+        entries = save_baseline(
+            bp, [f for f in report["findings"] if f.status == "new"],
+            old)
+        print(f"repro-lint: wrote {len(entries)} baseline "
+              f"fingerprints to {bp}")
+        return 0
+
+    if args.format == "json":
+        _render_json(report, sys.stdout)
+    else:
+        _render_text(report, sys.stdout)
+    return 1 if (report["new"] or report["errors"]) else 0

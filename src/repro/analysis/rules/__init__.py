@@ -1,0 +1,16 @@
+"""Per-rule AST visitors.  ``ALL_RULES`` is the driver's registry."""
+from repro.analysis.rules.rpr001_dtype import DtypeDiscipline
+from repro.analysis.rules.rpr002_purity import QueryPurity
+from repro.analysis.rules.rpr003_recompile import RecompilationHazard
+from repro.analysis.rules.rpr004_naming import NamingDeprecation
+from repro.analysis.rules.rpr005_pallas import PallasSpec
+
+ALL_RULES = [
+    DtypeDiscipline(),
+    QueryPurity(),
+    RecompilationHazard(),
+    NamingDeprecation(),
+    PallasSpec(),
+]
+
+__all__ = ["ALL_RULES"]

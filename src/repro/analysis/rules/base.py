@@ -1,0 +1,123 @@
+"""Shared rule plumbing: file context, scope walking, AST helpers."""
+from __future__ import annotations
+
+import ast
+import re
+from dataclasses import dataclass, field
+
+from repro.analysis.findings import Finding
+
+# File-level scope pragma: lets a file outside the path-scoped
+# directories opt into scoped rules (fixtures use this; so can a new
+# kernel module that lives elsewhere):  # repro-lint: scope=kernel
+_SCOPE_RE = re.compile(r"#\s*repro-lint:\s*scope=([\w,\- ]+)")
+
+
+@dataclass
+class FileContext:
+    """One parsed file handed to every rule."""
+
+    relpath: str                # repo-relative posix path
+    tree: ast.Module
+    lines: list[str]            # raw source lines (0-indexed)
+    vmem_limit: int = 1 << 20   # RPR005 ceiling, bytes
+    scopes: set[str] = field(default_factory=set)
+    is_test: bool = False
+
+    @classmethod
+    def parse(cls, relpath: str, source: str, *,
+              vmem_limit: int = 1 << 20) -> "FileContext":
+        lines = source.splitlines()
+        scopes: set[str] = set()
+        for ln in lines[:15]:
+            m = _SCOPE_RE.search(ln)
+            if m:
+                scopes.update(s.strip() for s in m.group(1).split(","))
+        name = relpath.rsplit("/", 1)[-1]
+        is_test = relpath.startswith("tests/") or name.startswith("test_")
+        return cls(relpath=relpath, tree=ast.parse(source, relpath),
+                   lines=lines, vmem_limit=vmem_limit, scopes=scopes,
+                   is_test=is_test)
+
+
+class Rule:
+    """Base class: subclasses set ``rule_id`` and implement ``check``."""
+
+    rule_id = "RPR000"
+    name = "base"
+
+    def applies(self, ctx: FileContext) -> bool:
+        return True
+
+    def check(self, ctx: FileContext) -> list[Finding]:
+        raise NotImplementedError
+
+    def finding(self, ctx: FileContext, node: ast.AST, message: str,
+                symbol: str, qualname: str = "") -> Finding:
+        return Finding(
+            rule=self.rule_id, path=ctx.relpath,
+            line=getattr(node, "lineno", 1),
+            col=getattr(node, "col_offset", 0),
+            message=message, symbol=symbol, qualname=qualname)
+
+
+def iter_scopes(tree: ast.Module):
+    """Yield (func_node, qualname) for every def, including nested."""
+
+    def walk(node, prefix):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                q = f"{prefix}{child.name}"
+                yield child, q
+                yield from walk(child, f"{q}.")
+            elif isinstance(child, ast.ClassDef):
+                yield from walk(child, f"{prefix}{child.name}.")
+            else:
+                yield from walk(child, prefix)
+
+    yield from walk(tree, "")
+
+
+def enclosing_qualname(tree: ast.Module, node: ast.AST) -> str:
+    """Qualname of the innermost def containing ``node`` ("" if none)."""
+    best = ""
+    for fn, q in iter_scopes(tree):
+        if (fn.lineno <= node.lineno <= max(
+                getattr(fn, "end_lineno", fn.lineno), fn.lineno)):
+            best = q  # scopes yield outer-first; last hit is innermost
+    return best
+
+
+def attr_root(node: ast.AST) -> str | None:
+    """Base Name of an Attribute/Subscript/Call chain, else None."""
+    while isinstance(node, (ast.Attribute, ast.Subscript, ast.Call)):
+        node = node.func if isinstance(node, ast.Call) else node.value
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+def callee_name(call: ast.Call) -> str | None:
+    """Final name of the callee: ``a.b.c(...)`` -> "c", ``f(...)`` -> "f"."""
+    f = call.func
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    if isinstance(f, ast.Name):
+        return f.id
+    return None
+
+
+def is_int_literal(node: ast.AST) -> bool:
+    if isinstance(node, ast.Constant) and type(node.value) is int:
+        return True
+    return (isinstance(node, ast.UnaryOp)
+            and isinstance(node.op, (ast.USub, ast.UAdd, ast.Invert))
+            and is_int_literal(node.operand))
+
+
+def build_parents(tree: ast.Module) -> dict[ast.AST, ast.AST]:
+    parents: dict[ast.AST, ast.AST] = {}
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            parents[child] = node
+    return parents

@@ -1,0 +1,230 @@
+"""RPR001 dtype-discipline: exact uint32 wraparound arithmetic.
+
+Bit parity is the exact-dedup contract (PAPER.md; SEDD in PAPERS.md
+shows how fragile GPU dedup parity is to dtype/promotion drift): every
+hash value in the kernel chain is uint32 with wraparound multiply /
+xor / shift, and the same source expression must produce the same bits
+on the numpy oracle, the jnp ref, and the Pallas kernels.  Three
+things silently break that:
+
+* a bare Python int literal in a binary op — jax weak types usually
+  forgive it, numpy sometimes promotes to int64, and the two disagree;
+* ``/`` or ``//`` on hash values — division is not part of the
+  wraparound algebra and rounds differently across backends;
+* mixing an int32 operand into uint32 arithmetic — promotion rules
+  differ between numpy and jnp.
+
+The rule runs a small per-function taint pass: names become
+"uint32-tainted" when assigned from ``*.astype(jnp.uint32)`` /
+``jnp.uint32(...)`` / ``np.uint32(...)`` or from the module's uint32
+constants (module-level ``np.uint32`` assignments plus the
+``core.hashing`` family), and taint propagates through arithmetic,
+subscripts, and calls (``jnp.where`` / ``jnp.min`` / ``fmix`` keep the
+dtype) but not through comparisons or casts to another dtype.  Checks
+fire only on tainted operands, so int32 position math next to hash
+math stays clean.
+
+Scope: ``kernels/`` plus ``core/hashing.py`` / ``core/minhash.py``
+(the bit-parity chain), or any file with ``# repro-lint: scope=kernel``.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.findings import Finding
+from repro.analysis.rules.base import (
+    FileContext,
+    Rule,
+    build_parents,
+    is_int_literal,
+    iter_scopes,
+)
+
+# Names from repro.core.hashing that are uint32 by construction.
+KNOWN_UINT32 = {
+    "GOLDEN32", "NGRAM_BASE", "NGRAM_BASE2", "U32_MAX",
+    "_FMIX_C1", "_FMIX_C2",
+}
+
+_ARITH = (ast.Mult, ast.Add, ast.Sub, ast.BitXor, ast.BitOr, ast.BitAnd)
+_DIV = (ast.Div, ast.FloorDiv)
+
+
+def _is_uint32_cast(call: ast.Call) -> bool:
+    """``jnp.uint32(x)`` / ``np.uint32(x)`` / ``x.astype(jnp.uint32)``."""
+    f = call.func
+    if isinstance(f, ast.Attribute) and f.attr == "uint32":
+        return True
+    if isinstance(f, ast.Name) and f.id == "uint32":
+        return True
+    if isinstance(f, ast.Attribute) and f.attr == "astype":
+        return any("uint32" in ast.dump(a) for a in call.args)
+    return False
+
+
+def _is_other_cast(call: ast.Call) -> bool:
+    """A cast to a non-uint32 dtype (breaks the taint chain)."""
+    f = call.func
+    if isinstance(f, ast.Attribute) and f.attr == "astype":
+        return not any("uint32" in ast.dump(a) for a in call.args)
+    dtypes = {"int32", "int64", "float32", "float64", "bool_", "int8",
+              "int16", "uint8", "uint16", "uint64", "bfloat16",
+              "float16"}
+    name = f.attr if isinstance(f, ast.Attribute) else (
+        f.id if isinstance(f, ast.Name) else None)
+    return name in dtypes
+
+
+def _is_int32_operand(node: ast.AST) -> bool:
+    """``jnp.int32(x)`` / ``x.astype(jnp.int32)`` used as an operand."""
+    if not isinstance(node, ast.Call):
+        return False
+    f = node.func
+    if isinstance(f, ast.Attribute) and f.attr in ("int32", "int64"):
+        return True
+    if isinstance(f, ast.Attribute) and f.attr == "astype":
+        return any(_names_int32(a) for a in node.args)
+    return False
+
+
+def _names_int32(node: ast.AST) -> bool:
+    """A dtype expression naming int32/int64 (NOT uint32/uint64)."""
+    return any(isinstance(n, (ast.Attribute, ast.Name))
+               and (n.attr if isinstance(n, ast.Attribute) else n.id)
+               in ("int32", "int64")
+               for n in ast.walk(node))
+
+
+class _Taint:
+    """Per-function forward taint over local names (two fixpoint passes)."""
+
+    def __init__(self, seed: set[str]):
+        self.names = set(seed)
+
+    def expr(self, node: ast.AST) -> bool:
+        if isinstance(node, ast.Name):
+            return node.id in self.names
+        if isinstance(node, ast.Constant):
+            return False
+        if isinstance(node, ast.Call):
+            if _is_uint32_cast(node):
+                return True
+            if _is_other_cast(node):
+                return False
+            return any(self.expr(a) for a in node.args) or any(
+                self.expr(k.value) for k in node.keywords)
+        if isinstance(node, ast.Attribute):
+            # Metadata reads leave the hash domain: shape/index math on
+            # a tainted array's .shape is int, not uint32.
+            if node.attr in ("shape", "ndim", "size", "dtype",
+                             "nbytes", "itemsize"):
+                return False
+            return self.expr(node.value)
+        if isinstance(node, ast.Subscript):
+            return self.expr(node.value)
+        if isinstance(node, ast.BinOp):
+            return self.expr(node.left) or self.expr(node.right)
+        if isinstance(node, ast.UnaryOp):
+            return self.expr(node.operand)
+        if isinstance(node, ast.IfExp):
+            return self.expr(node.body) or self.expr(node.orelse)
+        if isinstance(node, (ast.Tuple, ast.List)):
+            return any(self.expr(e) for e in node.elts)
+        if isinstance(node, ast.Starred):
+            return self.expr(node.value)
+        return False  # Compare, BoolOp, comprehensions, lambdas: no taint
+
+    def learn(self, fn: ast.FunctionDef) -> None:
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign):
+                if self.expr(node.value):
+                    for t in node.targets:
+                        if isinstance(t, ast.Name):
+                            self.names.add(t.id)
+            elif isinstance(node, ast.AugAssign):
+                if isinstance(node.target, ast.Name) and (
+                        self.expr(node.value)
+                        or node.target.id in self.names):
+                    self.names.add(node.target.id)
+            elif isinstance(node, ast.AnnAssign):
+                if node.value is not None and self.expr(node.value) and \
+                        isinstance(node.target, ast.Name):
+                    self.names.add(node.target.id)
+
+
+class DtypeDiscipline(Rule):
+    rule_id = "RPR001"
+    name = "dtype-discipline"
+
+    def applies(self, ctx: FileContext) -> bool:
+        if "kernel" in ctx.scopes:
+            return True
+        p = ctx.relpath
+        return ("/kernels/" in p or p.startswith("kernels/")
+                or p.endswith("core/hashing.py")
+                or p.endswith("core/minhash.py"))
+
+    def check(self, ctx: FileContext) -> list[Finding]:
+        out: list[Finding] = []
+        module_taint = set(KNOWN_UINT32)
+        for node in ctx.tree.body:
+            if isinstance(node, ast.Assign) and isinstance(
+                    node.value, ast.Call) and _is_uint32_cast(node.value):
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        module_taint.add(t.id)
+        parents = build_parents(ctx.tree)
+        for fn, qual in iter_scopes(ctx.tree):
+            taint = _Taint(module_taint)
+            taint.learn(fn)
+            taint.learn(fn)  # second pass: forward-referenced chains
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.BinOp):
+                    continue
+                out.extend(self._check_binop(ctx, node, taint, parents,
+                                             qual))
+        return out
+
+    def _check_binop(self, ctx, node: ast.BinOp, taint: _Taint,
+                     parents, qual: str) -> list[Finding]:
+        out: list[Finding] = []
+        lt, rt = taint.expr(node.left), taint.expr(node.right)
+        if isinstance(node.op, _DIV) and (lt or rt):
+            out.append(self.finding(
+                ctx, node,
+                "division (`/` or `//`) on uint32 hash values breaks "
+                "wraparound bit parity; use shifts/masks or cast off "
+                "the hash domain explicitly",
+                symbol="uint32-division", qualname=qual))
+            return out
+        if not isinstance(node.op, _ARITH):
+            return out  # shifts: a literal shift amount does not promote
+        for lit, other in ((node.left, node.right),
+                           (node.right, node.left)):
+            if is_int_literal(lit) and taint.expr(other):
+                if self._wrapped_in_uint32(node, parents):
+                    break
+                out.append(self.finding(
+                    ctx, node,
+                    "bare int literal in uint32 arithmetic; wrap it "
+                    "(`jnp.uint32(...)`/`np.uint32(...)`) so numpy and "
+                    "jnp promote identically",
+                    symbol="bare-int-literal", qualname=qual))
+                break
+        if (lt and _is_int32_operand(node.right)) or \
+                (rt and _is_int32_operand(node.left)):
+            out.append(self.finding(
+                ctx, node,
+                "uint32/int32 mixed arithmetic; promotion rules differ "
+                "between numpy and jnp — cast both operands to uint32",
+                symbol="int32-mix", qualname=qual))
+        return out
+
+    @staticmethod
+    def _wrapped_in_uint32(node: ast.AST, parents) -> bool:
+        """True if the whole BinOp feeds straight into a uint32 cast."""
+        p = parents.get(node)
+        while isinstance(p, ast.BinOp):
+            node, p = p, parents.get(p)
+        return (isinstance(p, ast.Call) and _is_uint32_cast(p)
+                and node in p.args)

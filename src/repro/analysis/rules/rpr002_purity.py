@@ -1,0 +1,143 @@
+"""RPR002 query-purity: the read path must never mutate session state.
+
+The blessed naming scheme (ROADMAP "API stability", ``repro.core``
+docstring) reserves ``query*`` / ``view`` / ``probe_*`` / ``frozen_*``
+for reads: DESIGN.md §9's whole concurrency story — a query can never
+race a concurrent ingest — rests on those functions touching only
+frozen copies.  A stray ``self.x = ...`` or a call into a write-path
+verb inside one of them is a torn-state bug waiting for load.
+
+Flagged inside functions matching the read-path naming (test functions
+are exempt — a ``test_query_*`` exercising ``admit`` is the point of
+the test):
+
+* assignments (plain, augmented, annotated, ``del``) whose target is
+  rooted at ``self`` or at a ``view`` parameter;
+* calls to ``ingest*`` / ``admit*`` entry points;
+* calls to known-mutating ``BandIndex`` / union-find / verifier /
+  store methods (``match_then_insert``, ``union``, ``evict``, ...);
+* mutating container-method calls (``append`` / ``update`` /
+  ``setdefault`` / ...) on receivers rooted at ``self`` or a ``view``
+  parameter — local accumulators stay allowed.
+
+Benign memoization (e.g. ``DedupSession.view``'s atomic cache swap,
+service stats counters) is declared with an inline
+``# repro-lint: disable=RPR002`` carrying its justification.
+"""
+from __future__ import annotations
+
+import ast
+import re
+
+from repro.analysis.findings import Finding
+from repro.analysis.rules.base import (
+    FileContext,
+    Rule,
+    attr_root,
+    callee_name,
+    iter_scopes,
+)
+
+READ_NAME = re.compile(r"^(query\w*|view|probe_\w+|frozen_\w+)$")
+
+# Known-mutating methods on session collaborators (BandIndex,
+# ThresholdUnionFind, verifiers, stores, allocator).
+MUTATOR_METHODS = {
+    "match_then_insert", "evict", "union", "grow", "drain_deposed",
+    "release_rows", "extend_signatures", "extend_id_rows",
+    "extend_token_lists", "allocate", "adopt_layout", "refine",
+    "feed", "merge", "sweep", "compact",
+}
+
+# Container mutators — only flagged on self/view-rooted receivers.
+CONTAINER_MUTATORS = {
+    "append", "extend", "insert", "remove", "pop", "popleft", "clear",
+    "update", "add", "discard", "setdefault", "sort", "reverse",
+    "appendleft", "setflags", "fill", "resize", "put",
+}
+
+
+def _target_roots(node: ast.AST):
+    if isinstance(node, (ast.Tuple, ast.List)):
+        for elt in node.elts:
+            yield from _target_roots(elt)
+    elif isinstance(node, (ast.Attribute, ast.Subscript)):
+        yield attr_root(node), node
+    elif isinstance(node, ast.Starred):
+        yield from _target_roots(node.value)
+
+
+class QueryPurity(Rule):
+    rule_id = "RPR002"
+    name = "query-purity"
+
+    def check(self, ctx: FileContext) -> list[Finding]:
+        out: list[Finding] = []
+        for fn, qual in iter_scopes(ctx.tree):
+            if not READ_NAME.match(fn.name) or fn.name.startswith("test"):
+                continue
+            if ctx.is_test:
+                continue
+            view_params = {
+                a.arg for a in (fn.args.posonlyargs + fn.args.args
+                                + fn.args.kwonlyargs)
+                if a.arg == "view" or a.arg.endswith("_view")}
+            guarded = {"self", "cls"} | view_params
+            out.extend(self._check_body(ctx, fn, qual, guarded))
+        return out
+
+    def _check_body(self, ctx, fn, qual, guarded) -> list[Finding]:
+        out: list[Finding] = []
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+                targets = (node.targets if isinstance(node, ast.Assign)
+                           else [node.target])
+                for t in targets:
+                    for root, tnode in _target_roots(t):
+                        if root in guarded:
+                            out.append(self.finding(
+                                ctx, node,
+                                f"read-path function `{fn.name}` assigns "
+                                f"to `{ast.unparse(tnode)}`; query*/view/"
+                                "probe_*/frozen_* must not mutate state",
+                                symbol=f"assign:{ast.unparse(tnode)}",
+                                qualname=qual))
+            elif isinstance(node, ast.Delete):
+                for t in node.targets:
+                    for root, tnode in _target_roots(t):
+                        if root in guarded:
+                            out.append(self.finding(
+                                ctx, node,
+                                f"read-path function `{fn.name}` deletes "
+                                f"`{ast.unparse(tnode)}`",
+                                symbol=f"del:{ast.unparse(tnode)}",
+                                qualname=qual))
+            elif isinstance(node, ast.Call):
+                out.extend(self._check_call(ctx, fn, node, qual, guarded))
+        return out
+
+    def _check_call(self, ctx, fn, call, qual, guarded) -> list[Finding]:
+        name = callee_name(call)
+        if name is None:
+            return []
+        if name.startswith("ingest") or name.startswith("admit"):
+            return [self.finding(
+                ctx, call,
+                f"read-path function `{fn.name}` calls write-path entry "
+                f"point `{name}`", symbol=f"call:{name}", qualname=qual)]
+        if name in MUTATOR_METHODS and isinstance(call.func,
+                                                  ast.Attribute):
+            return [self.finding(
+                ctx, call,
+                f"read-path function `{fn.name}` calls mutating method "
+                f"`{name}`", symbol=f"call:{name}", qualname=qual)]
+        if name in CONTAINER_MUTATORS and isinstance(call.func,
+                                                     ast.Attribute):
+            root = attr_root(call.func.value)
+            if root in guarded:
+                return [self.finding(
+                    ctx, call,
+                    f"read-path function `{fn.name}` mutates "
+                    f"`{ast.unparse(call.func.value)}` via `.{name}()`",
+                    symbol=f"mutate:{name}", qualname=qual)]
+        return []

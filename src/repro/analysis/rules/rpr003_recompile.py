@@ -1,0 +1,123 @@
+"""RPR003 recompilation-hazard: shape-stable calls into jitted stages.
+
+PR 7's ~350 ms-p50 serving bug was exactly this: every novel query
+document length handed ``compute_signatures`` a fresh ``(D, L)`` shape
+and silently jit-recompiled the signature stage per request.  The fix
+— signature-invariant ``pad_len`` padding plus power-of-two shape
+bucketing — lives in the callers, so nothing stops the next call site
+from reintroducing the hazard.  This rule does.
+
+A call into a jitted signature-stage entry point (``compute_arrays``,
+``compute_signatures``, ``fused_ingest``) must route its shape-bearing
+arguments through the bucketing machinery, any of:
+
+* an explicit ``pad_len=`` keyword at the call site;
+* an enclosing function that itself takes/derives ``pad_len`` or a
+  pow2/bucket helper (the pipeline's internal staged chain);
+* an argument expression built by a ``*pow2*`` / ``*bucket*`` helper.
+
+One-shot batch drivers whose chunk shapes are amortized (a single
+compile per run) are grandfathered via the baseline rather than
+exempted structurally — new long-lived callers start strict.  Test
+files are exempt: parity tests call the stages directly on purpose.
+"""
+from __future__ import annotations
+
+import ast
+import re
+
+from repro.analysis.findings import Finding
+from repro.analysis.rules.base import (
+    FileContext,
+    Rule,
+    callee_name,
+    iter_scopes,
+)
+
+JIT_ENTRY_POINTS = {"compute_arrays", "compute_signatures",
+                    "fused_ingest"}
+_BUCKET_RE = re.compile(r"(pow2|bucket|pad_len)", re.IGNORECASE)
+
+
+def _has_bucketing_context(fn: ast.FunctionDef) -> bool:
+    """Enclosing function takes or derives pad_len/pow2 bucketing."""
+    args = fn.args
+    for a in (args.posonlyargs + args.args + args.kwonlyargs):
+        if _BUCKET_RE.search(a.arg):
+            return True
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name) and _BUCKET_RE.search(t.id):
+                    return True
+        elif isinstance(node, ast.Call):
+            name = callee_name(node)
+            if name and _BUCKET_RE.search(name):
+                return True
+    return False
+
+
+def _args_use_bucketing(call: ast.Call) -> bool:
+    for a in list(call.args) + [k.value for k in call.keywords]:
+        for sub in ast.walk(a):
+            if isinstance(sub, ast.Call):
+                name = callee_name(sub)
+                if name and _BUCKET_RE.search(name):
+                    return True
+            elif isinstance(sub, ast.Name) and _BUCKET_RE.search(sub.id):
+                return True
+    return False
+
+
+class RecompilationHazard(Rule):
+    rule_id = "RPR003"
+    name = "recompilation-hazard"
+
+    def applies(self, ctx: FileContext) -> bool:
+        return not ctx.is_test
+
+    def check(self, ctx: FileContext) -> list[Finding]:
+        # The defining modules are the implementation, not call sites.
+        defined_here = {
+            n.name for n in ast.walk(ctx.tree)
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+        out: list[Finding] = []
+        covered: set[ast.Call] = set()
+        for fn, qual in iter_scopes(ctx.tree):
+            ctx_ok = None  # lazy: only computed if an entry call appears
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Call) or node in covered:
+                    continue
+                covered.add(node)
+                name = callee_name(node)
+                if name not in JIT_ENTRY_POINTS or name in defined_here:
+                    continue
+                if any(k.arg == "pad_len" for k in node.keywords):
+                    continue
+                if ctx_ok is None:
+                    ctx_ok = _has_bucketing_context(fn)
+                if ctx_ok or _args_use_bucketing(node):
+                    continue
+                out.append(self.finding(
+                    ctx, node,
+                    f"jitted entry point `{name}` called without "
+                    "pad_len/pow2 shape bucketing; varying operand "
+                    "shapes silently recompile per call (the PR 7 "
+                    "~350ms-p50 bug, DESIGN.md §9/§10)",
+                    symbol=f"unbucketed:{name}", qualname=qual))
+        # Module-level calls (scripts) outside any def:
+        in_fns = {id(n) for fn, _ in iter_scopes(ctx.tree)
+                  for n in ast.walk(fn)}
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Call) and id(node) not in in_fns:
+                name = callee_name(node)
+                if (name in JIT_ENTRY_POINTS and name not in defined_here
+                        and not any(k.arg == "pad_len"
+                                    for k in node.keywords)
+                        and not _args_use_bucketing(node)):
+                    out.append(self.finding(
+                        ctx, node,
+                        f"jitted entry point `{name}` called without "
+                        "pad_len/pow2 shape bucketing",
+                        symbol=f"unbucketed:{name}", qualname=""))
+        return out

@@ -1,0 +1,107 @@
+"""RPR004 naming/deprecation: the blessed API scheme stays blessed.
+
+ROADMAP "API stability" (PR 7) fixed the public verb scheme —
+``ingest*`` adds documents to long-lived dedup state, ``compute_*`` is
+pure stage computation, ``query*`` / ``view`` / ``probe_*`` /
+``frozen_*`` read and never mutate — and demoted the old spellings
+(``DedupPipeline.ingest_arrays``, ``ClusterSnapshot.uf``) to
+``DeprecationWarning`` shims kept green until the next major
+re-anchor.  New code must not grow fresh callers of the shims (they
+make the eventual removal a breaking change again), and new public
+defs in ``core/`` must not coin off-scheme spellings of the reserved
+verbs.
+
+Checks:
+
+* calls to ``ingest_arrays`` (the deprecated ``compute_arrays``);
+* ``.uf`` reads on snapshot-shaped receivers (``snap`` / ``snapshot``
+  / ``*_snap``) — ``ClusterSnapshot.uf`` is the shim; live handles
+  (``self.uf``, ``session.uf``, ``acc.uf``) stay fine;
+* public defs in ``src/repro/core/`` whose name contains a reserved
+  verb (``ingest`` / ``query`` / ``compute``) as a non-leading token —
+  e.g. ``get_query`` or ``run_ingest`` — instead of the scheme prefix.
+
+The shims' own definitions and regression tests suppress inline.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.findings import Finding
+from repro.analysis.rules.base import (
+    FileContext,
+    Rule,
+    callee_name,
+    enclosing_qualname,
+    iter_scopes,
+)
+
+DEPRECATED_CALLS = {"ingest_arrays"}
+SNAPSHOT_RECEIVERS = {"snap", "snapshot"}
+RESERVED_STEMS = {"ingest", "query", "compute"}
+SCHEME_PREFIXES = ("ingest", "query", "compute_", "probe_", "frozen_",
+                   "view")
+
+
+class NamingDeprecation(Rule):
+    rule_id = "RPR004"
+    name = "naming-deprecation"
+
+    def check(self, ctx: FileContext) -> list[Finding]:
+        out: list[Finding] = []
+        out.extend(self._check_shim_calls(ctx))
+        if ("/core/" in ctx.relpath or ctx.relpath.startswith("core/")
+                or "core" in ctx.scopes) and not ctx.is_test:
+            out.extend(self._check_core_names(ctx))
+        return out
+
+    def _check_shim_calls(self, ctx) -> list[Finding]:
+        out: list[Finding] = []
+        defined_here = {
+            n.name for n in ast.walk(ctx.tree)
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Call):
+                name = callee_name(node)
+                if name in DEPRECATED_CALLS and name not in defined_here:
+                    out.append(self.finding(
+                        ctx, node,
+                        f"call to deprecated shim `{name}` (use "
+                        "`compute_arrays`; `ingest*` names are reserved "
+                        "for entry points that add documents to "
+                        "long-lived state)",
+                        symbol=f"deprecated-call:{name}",
+                        qualname=enclosing_qualname(ctx.tree, node)))
+            elif isinstance(node, ast.Attribute) and node.attr == "uf":
+                base = node.value
+                if isinstance(base, ast.Name) and (
+                        base.id in SNAPSHOT_RECEIVERS
+                        or base.id.endswith("_snap")):
+                    out.append(self.finding(
+                        ctx, node,
+                        "`ClusterSnapshot.uf` is a DeprecationWarning "
+                        "shim; snapshots are pure value objects — use "
+                        "`DedupSession.uf` for the live union-find or "
+                        "`snapshot.labels` for frozen roots",
+                        symbol="deprecated-attr:uf",
+                        qualname=enclosing_qualname(ctx.tree, node)))
+        return out
+
+    def _check_core_names(self, ctx) -> list[Finding]:
+        out: list[Finding] = []
+        for fn, qual in iter_scopes(ctx.tree):
+            name = fn.name
+            if name.startswith("_") or name.startswith(SCHEME_PREFIXES):
+                continue
+            tokens = name.split("_")
+            offending = RESERVED_STEMS.intersection(tokens[1:])
+            if offending:
+                stem = sorted(offending)[0]
+                out.append(self.finding(
+                    ctx, fn,
+                    f"public def `{name}` in core/ uses reserved verb "
+                    f"`{stem}` off-scheme; spell it `{stem}*` (or "
+                    "`compute_*`/`query*`/`probe_*` per the blessed "
+                    "naming scheme, ROADMAP \"API stability\")",
+                    symbol=f"off-scheme:{name}", qualname=qual))
+        return out

@@ -15,7 +15,6 @@ from __future__ import annotations
 import json
 import os
 import shutil
-import threading
 from concurrent.futures import Future, ThreadPoolExecutor
 
 import numpy as np

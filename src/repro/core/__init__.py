@@ -33,7 +33,24 @@ computations are ``compute_*`` (``DedupPipeline.compute_signatures`` /
 ``compute_bands`` / ``compute_arrays``); reads are ``query*`` / ``view``
 and never mutate.  Old spellings (``DedupPipeline.ingest_arrays``,
 ``ClusterSnapshot.uf``) survive as ``DeprecationWarning`` shims.
+
+Running the linter
+------------------
+The scheme above — plus the uint32 bit-parity discipline, read-path
+purity, jit shape bucketing, and Pallas BlockSpec/VMEM budgets — is
+machine-checked by the repo's own static-analysis pass::
+
+    PYTHONPATH=src python -m repro.analysis            # text report
+    PYTHONPATH=src python -m repro.analysis --format json
+
+Rules RPR001-RPR005 are documented in DESIGN.md §10; grandfathered
+findings live in ``.repro-lint-baseline.json`` and intentional
+exceptions carry ``# repro-lint: disable=RPR00x`` comments.  CI runs
+the pass (plus ruff) as the ``lint`` job before tier-1.  Set
+``REPRO_SANITIZE=1`` for the runtime tripwires (``core.sanitize``):
+``jax_debug_nans`` and the SessionView mutation check in query paths.
 """
+from repro.core import sanitize as _sanitize
 from repro.core.pipeline import DedupConfig, DedupPipeline, DedupResult
 from repro.core.lsh import LSHParams, candidate_probability
 from repro.core.unionfind import ThresholdUnionFind, connected_components
@@ -121,6 +138,10 @@ __all__ = [
     "ShardedEdgeVerifier",
     "SignatureVerifier",
 ]
+
+# REPRO_SANITIZE=1 flips jax_debug_nans once, at import (the view
+# tripwire in core.query reads the env per call and needs no install).
+_sanitize.maybe_install()
 
 
 def __getattr__(name: str):

@@ -14,7 +14,6 @@ On the TPU pod these map to band-major resharding vs doc-major band_parts
 """
 from __future__ import annotations
 
-import os
 import sqlite3
 
 import numpy as np

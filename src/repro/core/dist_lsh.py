@@ -57,17 +57,16 @@ collision-free ids across multiple step invocations.
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass, field
 
 import numpy as np
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.jaxcompat import shard_map_compat
 
-from repro.core.hashing import GOLDEN32, U32_MAX, fmix32
+from repro.core.hashing import U32_MAX
 from repro.core.lsh import band_values
 from repro.core.minhash import signatures
 from repro.core.shingle import ngram_hashes

@@ -39,7 +39,7 @@ import numpy as np
 
 from repro.core.candidates import CandidateSource
 from repro.core.unionfind import ThresholdUnionFind
-from repro.core.verify import BatchVerifier, as_verifier
+from repro.core.verify import as_verifier
 
 
 @dataclass

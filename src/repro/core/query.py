@@ -32,6 +32,7 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from repro.core import sanitize
 from repro.core.session import SessionView
 
 
@@ -269,7 +270,12 @@ def query_view(
     ``DedupPipeline.compute_arrays`` / ``tokenize``).  Pass a cached
     ``ViewVerifier`` / ``ExactViewVerifier`` via ``verifier`` to reuse
     its device-resident retained rows across calls (the service does).
+
+    With ``REPRO_SANITIZE=1`` the view's arrays are fingerprinted and
+    re-checked on entry and exit (``sanitize.SessionViewMutated`` on
+    drift) — the dynamic half of the RPR002 purity contract.
     """
+    sanitize.check_view(view, "query entry")
     cands, filter_hits = probe_candidates(view, bands)
     cand_ids, q_idx = _flatten(cands)
     if view.mode == "estimate":
@@ -311,4 +317,5 @@ def query_view(
             n_candidates=len(c),
             filter_only_hits=filter_hits[i],
             candidates=ranked))
+    sanitize.check_view(view, "query exit")
     return out

@@ -1,0 +1,86 @@
+"""``REPRO_SANITIZE=1``: opt-in runtime tripwires for debugging.
+
+Two checks, both free when the knob is off:
+
+* ``jax_debug_nans`` — jax raises at the first NaN any jitted stage
+  produces instead of propagating garbage through the hash chain
+  (``maybe_install`` flips the config once, at ``repro.core`` import);
+* a **SessionView mutation tripwire** — the read path's whole
+  concurrency story (DESIGN.md §9) is that a published view is frozen;
+  RPR002 enforces it statically for this repo's code, and this hook
+  enforces it dynamically against *anything* (user code, a buggy
+  verifier, an aliased buffer mutated by a later ingest):
+  ``query_view`` fingerprints the view's arrays on first use and
+  re-checks the fingerprint at entry and exit of every query, raising
+  ``SessionViewMutated`` the moment the bytes differ.
+
+The env var is read per call, so tests can flip it with monkeypatch;
+the fingerprint cache is keyed by ``(id(view), view.version)`` and
+bounded, so long-running services can leave the knob on.
+"""
+from __future__ import annotations
+
+import hashlib
+import os
+from collections import OrderedDict
+
+import numpy as np
+
+_MAX_TRACKED_VIEWS = 64
+_fingerprints: OrderedDict[tuple[int, int], str] = OrderedDict()
+
+
+class SessionViewMutated(RuntimeError):
+    """A published (immutable) SessionView changed underneath a query."""
+
+
+def enabled() -> bool:
+    return os.environ.get("REPRO_SANITIZE", "") not in ("", "0")
+
+
+def maybe_install() -> bool:
+    """Turn on ``jax_debug_nans`` when the knob is set; idempotent."""
+    if not enabled():
+        return False
+    import jax
+
+    jax.config.update("jax_debug_nans", True)
+    return True
+
+
+def view_fingerprint(view) -> str:
+    """Content hash of a view's query-visible arrays."""
+    h = hashlib.blake2b(digest_size=16)
+    h.update(repr((view.version, view.n_docs, view.edge_threshold,
+                   view.num_bands, view.rows_per_band)).encode())
+    h.update(np.ascontiguousarray(view.labels).tobytes())
+    h.update(np.ascontiguousarray(view.signatures).tobytes())
+    if view.slot_of is not None:
+        h.update(np.ascontiguousarray(view.slot_of).tobytes())
+    if view.exact is not None:
+        h.update(np.ascontiguousarray(view.exact.ids).tobytes())
+        h.update(np.ascontiguousarray(view.exact.lengths).tobytes())
+    for m in view.band_maps:
+        h.update(str(len(m)).encode())
+    return h.hexdigest()
+
+
+def check_view(view, where: str) -> None:
+    """Record-or-compare the view's fingerprint (no-op when disabled)."""
+    if not enabled():
+        return
+    key = (id(view), view.version)
+    fp = view_fingerprint(view)
+    stored = _fingerprints.get(key)
+    if stored is None:
+        _fingerprints[key] = fp
+        while len(_fingerprints) > _MAX_TRACKED_VIEWS:
+            _fingerprints.popitem(last=False)
+        return
+    _fingerprints.move_to_end(key)
+    if stored != fp:
+        raise SessionViewMutated(
+            f"SessionView v{view.version} content changed ({where}): "
+            "published views are immutable (DESIGN.md §9) — a writer "
+            "mutated labels/signatures/rows in place instead of "
+            "publishing a new view (REPRO_SANITIZE tripwire)")

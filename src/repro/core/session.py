@@ -665,8 +665,12 @@ class DedupSession:
             slot_of=slot_of,
             exact=exact,
         )
+        # The one sanctioned read-path mutation: this cache swap IS the
+        # atomic single-writer publication protocol (DESIGN.md §9) —
+        # same key, same object; queries never observe a half-built view.
+        # repro-lint: disable=RPR002
         self._view_version = view.version
-        self._view_cache, self._view_key = view, key
+        self._view_cache, self._view_key = view, key  # repro-lint: disable=RPR002
         return view
 
     # -- ingest ------------------------------------------------------------
@@ -939,7 +943,12 @@ class _HostBackend:
         if not toks:
             return (base, toks, None, None)
         # Fused-ingest configs compute both arrays in one Pallas pass.
-        sig, bands = self.pipe.compute_arrays(toks)
+        # The token dim buckets to a power of two so repeated chunked
+        # ingests reuse a bounded jit-compile set instead of paying one
+        # recompile per novel max-document-length (the PR 7 serving
+        # bug, on the write path); signatures are padding-invariant.
+        pad = shingle.pow2_bucket(max((len(t) for t in toks), default=1))
+        sig, bands = self.pipe.compute_arrays(toks, pad_len=pad)
         return (base, toks, sig, bands)
 
     def merge(self, pending, index: bool = True):

@@ -18,8 +18,6 @@ import jax.numpy as jnp
 
 from repro.core.hashing import (
     NGRAM_BASE,
-    NGRAM_BASE2,
-    U32_MAX,
     fmix32,
     fmix32_np,
     hash_u32_np,
@@ -85,6 +83,25 @@ class PackedDocs:
     @property
     def num_docs(self) -> int:
         return self.tokens.shape[0]
+
+
+def pow2_bucket(n: int, floor: int = 256) -> int:
+    """Smallest power-of-two >= max(n, floor).
+
+    The shared shape-bucketing helper (DESIGN.md §9/§10): every call
+    site that feeds varying-length batches into a jitted stage
+    (``compute_arrays`` / ``compute_signatures`` / ``fused_ingest``)
+    routes its padded length through this so the compile set stays
+    bounded — lengths bucket to {floor, 2*floor, 4*floor, ...} instead
+    of one compile per novel (D, L).  Signatures are invariant to the
+    padding (validity masks come from real lengths), so bucketing is
+    bit-transparent.  RPR003 (``python -m repro.analysis``) flags call
+    sites that skip it.
+    """
+    b = max(1, int(floor))
+    while b < n:
+        b *= 2
+    return b
 
 
 def pack_documents(

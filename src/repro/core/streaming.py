@@ -93,7 +93,13 @@ class StreamingDedup:
         self.store.commit()
 
     def _flush(self, token_lists, keep_signatures):
-        packed = shingle.pack_documents(token_lists)
+        # Bucket the padded token dim to a power of two: full chunks
+        # share one jit compile regardless of each chunk's longest
+        # document, instead of recompiling the fused/staged stages per
+        # novel (D, L) (signatures are padding-invariant).
+        pad_len = shingle.pow2_bucket(
+            max((len(t) for t in token_lists), default=1))
+        packed = shingle.pack_documents(token_lists, pad_len)
         if self.config.fused_ingest:
             # Phase 1 on the fused device pass: signatures AND band
             # values come back from one Pallas dispatch (bit-identical

@@ -17,7 +17,6 @@ TPU-friendly alternative for the scalable path (DESIGN.md §2).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
 
 import numpy as np
 import jax
@@ -148,7 +147,6 @@ def connected_components(
     doubling (shortcutting), O(log N) rounds inside lax.while_loop.
     TPU-friendly: only scatter-min / gather ops, static shapes.
     """
-    E = edges.shape[0]
     u = jnp.where(mask, edges[:, 0], 0).astype(jnp.int32)
     v = jnp.where(mask, edges[:, 1], 0).astype(jnp.int32)
     labels0 = jnp.arange(num_nodes, dtype=jnp.int32)

@@ -10,7 +10,6 @@ protocol exactly.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
 
 import numpy as np
 

@@ -28,7 +28,6 @@ import traceback
 
 import numpy as np
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import optim
@@ -39,7 +38,7 @@ from repro.launch.hlo_analysis import cost_terms, model_flops, param_counts
 from repro.launch.mesh import make_production_mesh, make_test_mesh
 from repro.models import lm, whisper
 from repro.models.config import SHAPE_CELLS, cell_applicable
-from repro.models.sharding import (DEFAULT_RULES, DP_HEAVY_RULES,
+from repro.models.sharding import (DEFAULT_RULES,
                                    LONG_CONTEXT_RULES, RULES_PRESETS,
                                    activate, shardings_for, spec_for,
                                    tree_specs)

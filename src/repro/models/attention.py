@@ -9,7 +9,6 @@ chain; remat recomputes blocks in the backward pass.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -6,7 +6,6 @@ zamba2 units are `shared_every` mamba layers + one shared attention block).
 """
 from __future__ import annotations
 
-from typing import Any
 
 import jax
 import jax.numpy as jnp

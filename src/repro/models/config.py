@@ -1,7 +1,7 @@
 """Model configuration schema for the 10-architecture zoo."""
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Optional
 
 import jax.numpy as jnp

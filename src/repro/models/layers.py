@@ -188,7 +188,6 @@ def cross_entropy(logits, labels, mask=None, z_coef: float = 0.0):
     valid = labels >= 0 if mask is None else mask & (labels >= 0)
     safe = jnp.maximum(labels, 0)
     lse = jax.nn.logsumexp(logits, axis=-1)
-    vocab = logits.shape[-1]
     col = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
                                    logits.ndim - 1)
     ll = jnp.sum(jnp.where(col == safe[..., None], logits, 0.0), axis=-1)

@@ -14,8 +14,6 @@ Public entry points: init / loss_fn / prefill / decode / make_cache.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -23,9 +21,8 @@ import jax.numpy as jnp
 from repro.models import blocks
 from repro.models.config import ModelConfig
 from repro.models.layers import Builder, apply_norm, cross_entropy, make_norm
-from repro.models.mla import make_mla
 from repro.models.sharding import constrain
-from repro.models.ssm import ssm_cache_shape, ssm_dims
+from repro.models.ssm import ssm_cache_shape
 
 
 # -- structure ----------------------------------------------------------------

@@ -19,7 +19,6 @@ import jax.numpy as jnp
 from repro.models.attention import blockwise_attention
 from repro.models.config import MLACfg, ModelConfig
 from repro.models.layers import Builder, apply_rope, make_norm, apply_norm
-from repro.models.sharding import constrain
 
 
 def make_mla(b: Builder, cfg: ModelConfig, stack: int = 0):
@@ -47,7 +46,6 @@ def make_mla(b: Builder, cfg: ModelConfig, stack: int = 0):
 
 def _queries(p, cfg: ModelConfig, x, positions):
     m = cfg.mla
-    H = cfg.n_heads
     if m.q_lora_rank:
         cq = x @ p["w_dq"]
         cq = apply_norm("rmsnorm", cq, p.get("q_norm"))

@@ -21,7 +21,6 @@ from __future__ import annotations
 
 import math
 
-import numpy as np
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P

@@ -27,7 +27,7 @@ from repro.jaxcompat import shard_map_compat
 
 from repro.models import blocks
 from repro.models.config import ModelConfig
-from repro.models.layers import apply_norm, cross_entropy
+from repro.models.layers import cross_entropy
 
 
 def split_stages(cfg: ModelConfig, params: dict, n_stages: int):
@@ -115,8 +115,6 @@ def make_pipelined_loss(cfg: ModelConfig, mesh: Mesh, *, n_micro: int,
             jnp.where(jax.lax.axis_index(pp_axis) == n_stages - 1,
                       loss_acc, 0.0), pp_axis)
         return total / n_micro
-
-    other_axes = tuple(a for a in mesh.axis_names if a != pp_axis)
 
     def pipelined(params, batch):
         tokens = batch["tokens"]          # (n_micro, B_mb, S)

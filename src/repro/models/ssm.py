@@ -14,7 +14,6 @@ import jax.numpy as jnp
 
 from repro.models.config import ModelConfig, SSMCfg
 from repro.models.layers import Builder, rmsnorm
-from repro.models.sharding import constrain
 
 
 def ssm_dims(cfg: ModelConfig):

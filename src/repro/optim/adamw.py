@@ -7,9 +7,7 @@ difference between deepseek-v2-236b fitting a 256-chip pod or not
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -49,7 +47,6 @@ def _block_size(last: int, block: int) -> int:
 
 
 def _blocks(x: jnp.ndarray, block: int):
-    last = x.shape[-1] if x.ndim else 1
     x = x.reshape(x.shape if x.ndim else (1,))
     blk = _block_size(x.shape[-1], block)
     return x.reshape(*x.shape[:-1], x.shape[-1] // blk, blk)

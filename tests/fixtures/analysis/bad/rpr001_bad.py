@@ -1,0 +1,11 @@
+# repro-lint: scope=kernel
+"""Intentionally-bad fixture: RPR001 dtype-discipline violations."""
+import jax.numpy as jnp
+
+
+def bad_mix(h):
+    h = h.astype(jnp.uint32)
+    a = h * 31             # bare int literal in uint32 arithmetic
+    b = h // 2             # division on the hash domain
+    c = h + jnp.int32(1)   # uint32/int32 promotion mix
+    return a, b, c

@@ -1,0 +1,18 @@
+"""Intentionally-bad fixture: RPR002 query-purity violations."""
+
+
+class Service:
+    def query_stats(self, batch):
+        self.count = len(batch)        # assigns to self.*
+        self.index.evict(3)            # mutating collaborator method
+        self.seen.append(batch)        # container mutator on self
+        return self.count
+
+    def query_and_refresh(self, docs):
+        self.session.ingest(docs)      # write-path entry point
+        return self.session.view()
+
+
+def probe_rows(session_view):
+    session_view.labels.fill(0)        # container mutator on a view param
+    return session_view.labels

@@ -1,0 +1,11 @@
+"""Intentionally-bad fixture: RPR003 recompilation hazards."""
+
+
+def serve_batch(pipe, token_lists):
+    sig, bands = pipe.compute_arrays(token_lists)   # no shape bucketing
+    return sig, bands
+
+
+def stream(pipe, chunks):
+    for c in chunks:
+        yield pipe.compute_signatures(c)            # recompiles per shape

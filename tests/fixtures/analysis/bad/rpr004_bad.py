@@ -1,0 +1,12 @@
+# repro-lint: scope=core
+"""Intentionally-bad fixture: RPR004 naming/deprecation violations."""
+
+
+def run_query(session, texts):        # off-scheme use of a reserved verb
+    return session.query(texts)
+
+
+def refresh(pipe, snap, toks):
+    old = pipe.ingest_arrays(toks)    # deprecated shim call
+    labels = snap.uf.components()     # deprecated snapshot attr
+    return old, labels

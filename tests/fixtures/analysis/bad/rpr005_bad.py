@@ -1,0 +1,34 @@
+"""Intentionally-bad fixture: RPR005 pallas-spec violations."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TL = 2048
+
+
+def _copy_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def launch(x):
+    return pl.pallas_call(
+        _copy_kernel,
+        grid=(4, 4),
+        # index map takes 1 arg for a 2-axis grid; TL is unclamped
+        in_specs=[pl.BlockSpec((TL, TL), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((TL, TL), lambda i, j: (i, j)),
+        # 2048x2048 f32 tiles: ~32 MiB resident, way past the ceiling
+        out_shape=jax.ShapeDtypeStruct((8192, 8192), jnp.float32),
+    )(x)
+
+
+def launch_bad_rank(x):
+    t = min(TL, 128)
+    return pl.pallas_call(
+        _copy_kernel,
+        grid=(4,),
+        in_specs=[pl.BlockSpec((t,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((t,), lambda i: (i,)),
+        # rank-1 block tuple against a rank-2 out_shape
+        out_shape=jax.ShapeDtypeStruct((512, 4), jnp.float32),
+    )(x)

@@ -1,0 +1,13 @@
+# repro-lint: scope=kernel
+"""Clean fixture: disciplined uint32 arithmetic (RPR001)."""
+import jax.numpy as jnp
+import numpy as np
+
+
+def good_mix(h):
+    h = h.astype(jnp.uint32)
+    a = h * np.uint32(31)          # wrapped literal: no promotion
+    b = h ^ (h >> np.uint32(16))   # shifts never promote
+    rows = h.shape[0] // 2         # shape math leaves the hash domain
+    c = jnp.uint32(h + 1)          # whole expression feeds a uint32 cast
+    return a, b, rows, c

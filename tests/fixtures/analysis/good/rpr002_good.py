@@ -1,0 +1,19 @@
+"""Clean fixture: pure read paths (RPR002)."""
+
+
+class Service:
+    def query_stats(self, batch):
+        results = []                   # local accumulator is fine
+        for b in batch:
+            results.append(b)
+        return len(results)
+
+    def ingest_and_count(self, docs):  # write path may mutate freely
+        self.count = len(docs)
+        return self.count
+
+
+def frozen_rows(view):
+    rows = list(view.labels)
+    rows.sort()                        # local sort, not view-rooted
+    return rows

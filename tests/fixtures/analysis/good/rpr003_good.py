@@ -1,0 +1,12 @@
+"""Clean fixture: bucketed calls into jitted stages (RPR003)."""
+from repro.core.shingle import pow2_bucket
+
+
+def serve_batch(pipe, token_lists):
+    lb = pow2_bucket(max(len(t) for t in token_lists))
+    return pipe.compute_arrays(token_lists, pad_len=lb)
+
+
+def stream(pipe, chunks, pad_len):
+    for c in chunks:
+        yield pipe.compute_signatures(c, pad_len=pad_len)

@@ -1,0 +1,14 @@
+# repro-lint: scope=core
+"""Clean fixture: on-scheme names, no shim callers (RPR004)."""
+
+
+def query_texts(session, texts):      # reserved verb as the scheme prefix
+    return session.query(texts)
+
+
+def compute_rows(pipe, toks):
+    return pipe.compute_arrays(toks, pad_len=256)
+
+
+def refresh(sess, snap):
+    return sess.uf.components(), snap.labels   # live handle + frozen roots

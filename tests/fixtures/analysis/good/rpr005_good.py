@@ -1,0 +1,25 @@
+"""Clean fixture: clamped, budgeted pallas_call (RPR005).
+
+Mirrors the repo kernels' tiling idiom (DESIGN.md §8): tile dims that
+vary with a grid axis are min/max-clamped locals, and the resident
+tiles fit the 1 MiB default VMEM ceiling.
+"""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _copy_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def launch(x, tl: int = 128):
+    D, L = x.shape
+    tl_ = min(tl, max(1, L))
+    return pl.pallas_call(
+        _copy_kernel,
+        grid=(D, -(-L // tl_)),
+        in_specs=[pl.BlockSpec((1, tl_), lambda d, l: (d, l))],
+        out_specs=pl.BlockSpec((1, tl_), lambda d, l: (d, l)),
+        out_shape=jax.ShapeDtypeStruct((D, L), jnp.float32),
+    )(x)

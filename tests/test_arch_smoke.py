@@ -8,7 +8,7 @@ import pytest
 
 from repro import optim
 from repro.configs import ARCH_IDS, get_config, get_reduced, input_specs
-from repro.models import lm, whisper
+from repro.models import lm
 from repro.models.config import SHAPE_CELLS
 from repro.training.step import TrainConfig, init_state, make_train_step
 

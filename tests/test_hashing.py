@@ -7,7 +7,7 @@ pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.hashing import (
-    fmix32_inverse_np, fmix32_np, fmix32, hash_u32, hash_u32_np,
+    fmix32_inverse_np, fmix32_np, hash_u32, hash_u32_np,
     make_seeds,
 )
 

@@ -120,7 +120,6 @@ def test_lsh_candidate_probability_matches_empirical():
     """Statistical check of the §4.4 S-curve: empirical candidate rate
     over many (document pair, hash seed-set) draws matches
     1-(1-s^r)^b within binomial CI."""
-    rng = np.random.RandomState(7)
     r, b = 2, 10
     M = r * b
     n_trials = 60

@@ -1,0 +1,103 @@
+"""REPRO_SANITIZE=1 runtime tripwires (core.sanitize)."""
+from __future__ import annotations
+
+import pytest
+
+from repro.core import DedupConfig, DedupSession, query_view, sanitize
+from repro.core.shingle import pow2_bucket
+
+
+def _warm_session():
+    notes = [f"note alpha beta gamma delta {i} epsilon zeta eta theta"
+             for i in range(12)]
+    sess = DedupSession(DedupConfig(exact_verification=False))
+    sess.ingest(notes)
+    return sess, notes
+
+
+def _query_arrays(sess, notes):
+    pipe = sess._impl.pipe
+    toks = pipe.tokenize([notes[0]])
+    return pipe.compute_arrays(
+        toks, pad_len=pow2_bucket(len(toks[0])))
+
+
+def test_disabled_by_default(monkeypatch):
+    monkeypatch.delenv("REPRO_SANITIZE", raising=False)
+    assert not sanitize.enabled()
+    assert sanitize.maybe_install() is False
+
+
+def test_view_tripwire_catches_in_place_mutation(monkeypatch):
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    assert sanitize.enabled()
+    sess, notes = _warm_session()
+    view = sess.view()
+    sig, bands = _query_arrays(sess, notes)
+
+    # Clean pass: fingerprint recorded on entry, re-checked on exit.
+    res = query_view(view, bands, sig=sig)[0]
+    assert res.is_duplicate and res.best_sim == 1.0
+
+    # Mutate the published labels in place — exactly what the
+    # immutability contract (DESIGN.md §9, RPR002) forbids.
+    view.labels.setflags(write=True)
+    try:
+        view.labels[0] += 1
+        with pytest.raises(sanitize.SessionViewMutated):
+            query_view(view, bands, sig=sig)
+        view.labels[0] -= 1
+    finally:
+        view.labels.setflags(write=False)
+
+    # Restored bytes: the same view object queries cleanly again.
+    res = query_view(view, bands, sig=sig)[0]
+    assert res.is_duplicate
+
+
+def test_view_tripwire_is_noop_when_disabled(monkeypatch):
+    monkeypatch.delenv("REPRO_SANITIZE", raising=False)
+    sess, notes = _warm_session()
+    view = sess.view()
+    sig, bands = _query_arrays(sess, notes)
+    view.labels.setflags(write=True)
+    try:
+        view.labels[0] += 1
+        assert len(query_view(view, bands, sig=sig)) == 1  # no tripwire
+        view.labels[0] -= 1
+    finally:
+        view.labels.setflags(write=False)
+
+
+def test_maybe_install_flips_jax_debug_nans(monkeypatch):
+    import jax
+
+    before = jax.config.jax_debug_nans
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    try:
+        assert sanitize.maybe_install() is True
+        assert jax.config.jax_debug_nans is True
+    finally:
+        jax.config.update("jax_debug_nans", before)
+
+
+def test_fingerprint_stable_and_content_sensitive():
+    sess, _ = _warm_session()
+    view = sess.view()
+    fp = sanitize.view_fingerprint(view)
+    assert sanitize.view_fingerprint(view) == fp  # pure function
+
+    sess2, _ = _warm_session()
+    notes_extra = ["an entirely different note about something else"]
+    sess2.ingest(notes_extra)
+    fp2 = sanitize.view_fingerprint(sess2.view())
+    assert fp2 != fp  # different session content, different bytes
+
+    view.labels.setflags(write=True)
+    try:
+        view.labels[0] += 1
+        assert sanitize.view_fingerprint(view) != fp
+        view.labels[0] -= 1
+    finally:
+        view.labels.setflags(write=False)
+    assert sanitize.view_fingerprint(view) == fp

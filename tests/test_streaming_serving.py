@@ -1,12 +1,10 @@
 """Streaming dedup (paper §12 two-phase mode) + continuous-batching engine."""
 import numpy as np
 import jax
-import pytest
 
-from repro.core import jaccard, shingle
 from repro.core.pipeline import DedupConfig, DedupPipeline
 from repro.core.streaming import StreamingDedup, merge_cluster_rounds
-from repro.data import inject_near_duplicates, make_i2b2_like
+from repro.data import make_i2b2_like
 
 
 def test_streaming_matches_batch_pipeline():
@@ -21,7 +19,6 @@ def test_streaming_matches_batch_pipeline():
     uf, stats = sd.cluster()
     # identical exact-dup clusters
     sl = uf.components()
-    bl = batch.labels
     assert (sl[80] == sl[0]) and (sl[81] == sl[0]) and (sl[82] == sl[0])
     assert (sl[83] == sl[5]) and (sl[84] == sl[5])
     # same number of duplicates found
@@ -76,8 +73,9 @@ def test_serve_engine_continuous_batching():
     eng = ServeEngine(cfg, state["params"], slots=4, cache_len=64,
                       eos_id=-1)  # no eos in random model
     rng = np.random.RandomState(0)
-    rids = [eng.submit(rng.randint(2, cfg.vocab_size, size=rng.randint(4, 12)),
-                       max_tokens=6) for _ in range(10)]
+    for _ in range(10):
+        eng.submit(rng.randint(2, cfg.vocab_size, size=rng.randint(4, 12)),
+                   max_tokens=6)
     finished = eng.run_until_drained()
     assert len(finished) == 10
     assert all(len(r.out) == 6 for r in finished)

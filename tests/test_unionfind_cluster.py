@@ -8,7 +8,7 @@ pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import jaccard, shingle
-from repro.core.cluster import cluster_bands, modularity
+from repro.core.cluster import cluster_bands
 from repro.core.unionfind import (
     ThresholdUnionFind, connected_components, cluster_min_score_audit,
 )
