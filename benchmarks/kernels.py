@@ -66,6 +66,7 @@ def run():
         emit(name, timeit(fn), "P=512")
 
     run_fused_ingest()
+    run_byte_ingest()
 
 
 def run_fused_ingest(D: int = 256, L: int = 512, M: int = 128,
@@ -108,6 +109,55 @@ def run_fused_ingest(D: int = 256, L: int = 512, M: int = 128,
          f"staged_us={staged_us:.1f};"
          f"speedup={staged_us / max(fused_us, 1e-9):.2f};"
          f"drift={drift};D={D};L={L};M={M}")
+
+
+def run_byte_ingest(D: int = 256, M: int = 128, n: int = 8, r: int = 2):
+    """Zero-copy bytes->bands vs the host-tokenize + fused-ingest path.
+
+    Both sides run their FULL ingest honestly: the host side pays
+    tokenize + token_ids + pack + fused dispatch, the byte side pays
+    pack_bytes + the ``bytes_to_bands`` chain.  ``drift`` counts
+    mismatching uint32 words across signatures AND band values (the
+    bit-parity contract for no-stem tokenization, gated to 0 by
+    ``compare_rows``).
+    """
+    section("byte ingest: device bytes->bands vs host tokenize + fused")
+    from repro.core import shingle
+    from repro.data import make_i2b2_like
+
+    notes = list(make_i2b2_like(D, seed=11))
+    rng = np.random.RandomState(11)
+    seeds = rng.randint(0, 2**32, size=(M,), dtype=np.uint64
+                        ).astype(np.uint32)
+    sj = jnp.asarray(seeds)
+
+    def host_path():
+        toks = [shingle.tokenize(t, do_stem=False) for t in notes]
+        lt_bucket = shingle.pow2_bucket(max(len(t) for t in toks))
+        packed = shingle.pack_documents(toks, lt_bucket)
+        return ops.fused_ingest(jnp.asarray(packed.tokens),
+                                jnp.asarray(packed.lengths), sj,
+                                n=n, r=r)
+
+    def byte_path():
+        lb_bucket = shingle.pow2_bucket(
+            max(len(t.encode("utf-8")) for t in notes) + 1)
+        packed = shingle.pack_bytes(notes, lb_bucket)
+        return ops.bytes_to_bands(jnp.asarray(packed.data),
+                                  jnp.asarray(packed.lengths), sj,
+                                  n=n, r=r)
+
+    sig_h, bands_h, _ = host_path()
+    sig_b, bands_b, _ = byte_path()
+    drift = int((np.asarray(sig_b) != np.asarray(sig_h)).sum()
+                + (np.asarray(bands_b) != np.asarray(bands_h)).sum())
+
+    host_us = timeit(lambda: jax.block_until_ready(host_path()[1]))
+    byte_us = timeit(lambda: jax.block_until_ready(byte_path()[1]))
+    emit("byte_ingest_speedup", byte_us,
+         f"host_us={host_us:.1f};"
+         f"speedup={host_us / max(byte_us, 1e-9):.2f};"
+         f"drift={drift};D={D};M={M}")
 
 
 if __name__ == "__main__":

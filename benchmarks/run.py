@@ -64,7 +64,11 @@ def main(argv=None) -> None:
 
         # Fused-ingest perf gate: drift must stay 0 (bit parity with
         # the staged chain) and the fused wall must not regress >2x.
+        # byte_ingest holds the same contract for the bytes->bands
+        # path vs host tokenize + fused; the ingest roofline also
+        # emits the measured host->device transfer row.
         kernels.run_fused_ingest()
+        kernels.run_byte_ingest()
         roofline.run_ingest_roofline()
         from benchmarks import serving_dedup
 

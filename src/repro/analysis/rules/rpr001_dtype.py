@@ -43,6 +43,7 @@ from repro.analysis.rules.base import (
 # Names from repro.core.hashing that are uint32 by construction.
 KNOWN_UINT32 = {
     "GOLDEN32", "NGRAM_BASE", "NGRAM_BASE2", "U32_MAX",
+    "FNV_OFFSET32", "FNV_PRIME32",
     "_FMIX_C1", "_FMIX_C2",
 }
 

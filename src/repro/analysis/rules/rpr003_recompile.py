@@ -8,8 +8,10 @@ bucketing — lives in the callers, so nothing stops the next call site
 from reintroducing the hazard.  This rule does.
 
 A call into a jitted signature-stage entry point (``compute_arrays``,
-``compute_signatures``, ``fused_ingest``) must route its shape-bearing
-arguments through the bucketing machinery, any of:
+``compute_signatures``, ``fused_ingest``, and the byte-ingest chain
+``compute_arrays_bytes`` / ``bytes_to_bands`` / ``byte_token_hashes``)
+must route its shape-bearing arguments through the bucketing machinery,
+any of:
 
 * an explicit ``pad_len=`` keyword at the call site;
 * an enclosing function that itself takes/derives ``pad_len`` or a
@@ -35,7 +37,8 @@ from repro.analysis.rules.base import (
 )
 
 JIT_ENTRY_POINTS = {"compute_arrays", "compute_signatures",
-                    "fused_ingest"}
+                    "compute_arrays_bytes", "fused_ingest",
+                    "bytes_to_bands", "byte_token_hashes"}
 _BUCKET_RE = re.compile(r"(pow2|bucket|pad_len)", re.IGNORECASE)
 
 

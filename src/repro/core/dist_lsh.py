@@ -91,6 +91,7 @@ class DistLSHConfig:
     stage2: str = "host"        # full-signature verify: "host" | "device"
     sig_row_capacity: int = 1024  # cross-shard published-row buffer (0: off)
     fused_ingest: bool = False  # one-pass Pallas shingle->minhash->fold
+    byte_ingest: bool = False   # step inputs are uint8 bytes, not tokens
 
     @property
     def num_bands(self) -> int:
@@ -270,6 +271,20 @@ def make_streamed_dedup_step(cfg: DistLSHConfig, mesh: Mesh, *,
     bg = cfg.bands_per_group
 
     def local_prepare(tokens, lengths, seeds):
+        if cfg.byte_ingest:
+            # Zero-copy shard prepare: ``tokens`` is a (D_loc, LB) uint8
+            # byte matrix (see ``shingle.pack_bytes``) and the whole
+            # tokenize -> shingle -> minhash -> fold chain runs in one
+            # device-resident pass feeding the all_to_all directly.
+            # Shapes are pow2-bucketed at the session dispatch layer
+            # (pack_bytes width), the same contract as the fused branch.
+            from repro.kernels.byte_shingle import bytes_to_bands
+
+            # repro-lint: disable=RPR003 — widths bucketed by callers
+            sig, bands, _ = bytes_to_bands(
+                tokens, lengths, seeds, n=cfg.ngram,
+                r=cfg.rows_per_band)
+            return sig, bands
         if cfg.fused_ingest:
             # One device-resident Pallas pass per shard: n-gram hashes
             # and the minhash cube never leave VMEM, and the all_to_all

@@ -29,6 +29,11 @@ NGRAM_BASE2 = np.uint32(0x0001F7B7)  # independent odd base for lane 2.
 
 U32_MAX = np.uint32(0xFFFFFFFF)
 
+# FNV-1a parameters (the host token-id hash; the byte-shingle kernel
+# reproduces it on device, so the constants live in the shared family).
+FNV_OFFSET32 = np.uint32(2166136261)
+FNV_PRIME32 = np.uint32(16777619)
+
 
 def fmix32(x: jnp.ndarray) -> jnp.ndarray:
     """Murmur3 finalizer: bijective avalanche on uint32."""

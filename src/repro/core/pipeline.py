@@ -47,9 +47,17 @@ class DedupConfig:
     exact_verification: bool = True  # exact Jaccard vs signature estimate
     use_pallas: bool = False  # route signature computation through kernels
     fused_ingest: bool = False  # one-pass Pallas shingle->minhash->fold
+    byte_ingest: bool = False  # device bytes->bands (no-stem, zero-copy)
     verify_backend: str = "auto"  # estimate mode: numpy | jnp | pallas
     verify_batch: str = "run"  # engine batch granularity: run | band
     seed: int = 0x5EED
+
+    def __post_init__(self):
+        if self.byte_ingest and self.exact_verification:
+            raise ValueError(
+                "byte_ingest never materializes host token lists, so "
+                "exact Jaccard verification is impossible; set "
+                "exact_verification=False (signature-estimate mode)")
 
     @property
     def num_bands(self) -> int:
@@ -197,6 +205,38 @@ class DedupPipeline:
         self.stage_timings["bands_s"] = 0.0  # fused into the one pass
         return sig, bands
 
+    def compute_arrays_bytes(
+        self, docs: list[str | bytes],
+        pad_len: int | None = None,
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """One chunk's (signatures, band values) straight from UTF-8 bytes.
+
+        The ``byte_ingest`` hot path: tokenization never happens on the
+        host — raw bytes are the only host->device transfer (uint8, ~4x
+        less traffic than the padded int32 token matrix) and the
+        ``bytes_to_bands`` kernel chain produces both arrays in one
+        device-resident sweep.  Bit-identical to
+        ``compute_arrays(tokenize(text, do_stem=False))``.
+
+        ``pad_len`` buckets the byte-matrix width (must exceed the
+        longest document's byte length; see ``shingle.pack_bytes``).
+        """
+        from repro.kernels import ops as kops
+
+        t0 = time.perf_counter()
+        packed = shingle.pack_bytes(docs, pad_len)
+        sig, bands, _ = kops.bytes_to_bands(
+            jnp.asarray(packed.data),
+            jnp.asarray(packed.lengths),
+            self.device_seeds(),
+            n=self.config.ngram,
+            r=self.config.rows_per_band,
+        )
+        sig, bands = np.asarray(sig), np.asarray(bands)
+        self.stage_timings["signature_s"] = time.perf_counter() - t0
+        self.stage_timings["bands_s"] = 0.0  # fused into the one pass
+        return sig, bands
+
     def ingest_arrays(
         self, token_lists: list[list[str]]
     ) -> tuple[np.ndarray, np.ndarray]:
@@ -239,11 +279,20 @@ class DedupPipeline:
 
         cfg = self.config
         timings = {}
-        t0 = time.perf_counter()
-        token_lists = self.tokenize(texts)
-        timings["tokenize_s"] = time.perf_counter() - t0
+        if cfg.byte_ingest:
+            # Zero-copy path: no host tokenize; the engine only needs
+            # per-doc placeholders (estimate mode never reads tokens).
+            token_lists = [[] for _ in texts]
+            timings["tokenize_s"] = 0.0
+            pad_len = shingle.pow2_bucket(
+                max((len(t.encode("utf-8")) for t in texts), default=0) + 1)
+            sig, bands = self.compute_arrays_bytes(texts, pad_len)
+        else:
+            t0 = time.perf_counter()
+            token_lists = self.tokenize(texts)
+            timings["tokenize_s"] = time.perf_counter() - t0
 
-        sig, bands = self.compute_arrays(token_lists)
+            sig, bands = self.compute_arrays(token_lists)
         timings["signatures_s"] = self.stage_timings["signature_s"]
         timings["bands_s"] = self.stage_timings["bands_s"]
 

@@ -33,7 +33,14 @@ from dataclasses import dataclass
 import numpy as np
 
 from repro.core import sanitize
+from repro.core.hashing import GOLDEN32, U32_MAX, fmix32_np
 from repro.core.session import SessionView
+from repro.core.shingle import pow2_bucket
+
+# Query batches at least this large probe on device (sorted-band-key
+# searchsorted) instead of walking the host band dicts; smaller batches
+# stay on the host, where the dict walk wins on latency.
+PROBE_DEVICE_MIN_BATCH = 32
 
 
 @dataclass(frozen=True)
@@ -62,8 +69,120 @@ class QueryResult:
         return not self.is_duplicate
 
 
+def _band_key32(hi: np.ndarray, lo: np.ndarray) -> np.ndarray:
+    """Mix a band's (hi, lo) 2-lane value into one 32-bit probe key.
+
+    x64 is disabled on the accelerator, so the device index stores one
+    mixed uint32 per (hi, lo) pair instead of the 64-bit concatenation.
+    A collision only ever costs a confirming host ``dict.get`` (the
+    probe is one-sided: every true key is found).
+    """
+    with np.errstate(over="ignore"):
+        x = (fmix32_np(hi.astype(np.uint32)) ^ lo.astype(np.uint32))
+        return fmix32_np((x * GOLDEN32).astype(np.uint32))
+
+
+_PROBE_JIT = None
+
+
+def _get_probe_jit():
+    global _PROBE_JIT
+    if _PROBE_JIT is None:
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def probe(keys, counts, qkeys):
+            # keys (b, K) sorted uint32 (U32_MAX padded); counts (b,)
+            # int32 real sizes; qkeys (b, Q) uint32.
+            idx = jax.vmap(jnp.searchsorted)(keys, qkeys)
+            idx_c = jnp.minimum(idx, keys.shape[1] - 1)
+            found = jnp.take_along_axis(keys, idx_c, axis=1) == qkeys
+            return found & (idx < counts[:, None])
+
+        _PROBE_JIT = probe
+    return _PROBE_JIT
+
+
+def _device_probe_index(view: SessionView):
+    """Lazily build (and cache on the view) the device band-key index.
+
+    Per band: the sorted unique mixed keys of every dict entry, padded
+    with ``U32_MAX`` to one shared pow2 width.  The view is immutable,
+    so the index is valid for its whole lifetime.  Returns ``None``
+    when the view has no band entries (nothing to probe on device).
+    """
+    cached = view._probe_cache.get("band_keys")
+    if cached is not None:
+        return cached
+    import jax.numpy as jnp
+
+    per_band = []
+    n_max = 0
+    for m in view.band_maps:
+        if m:
+            ks = np.array(list(m.keys()), dtype=np.uint32)  # (n, 2)
+            uniq = np.unique(_band_key32(ks[:, 0], ks[:, 1]))
+        else:
+            uniq = np.zeros((0,), dtype=np.uint32)
+        per_band.append(uniq)
+        n_max = max(n_max, len(uniq))
+    if n_max == 0:
+        return None
+    k_bucket = pow2_bucket(n_max, floor=128)
+    keys = np.full((len(per_band), k_bucket), U32_MAX, dtype=np.uint32)
+    counts = np.zeros((len(per_band),), dtype=np.int32)
+    for j, uniq in enumerate(per_band):
+        keys[j, : len(uniq)] = uniq
+        counts[j] = len(uniq)
+    index = (jnp.asarray(keys), jnp.asarray(counts))
+    view._probe_cache["band_keys"] = index
+    return index
+
+
+def _probe_device(view: SessionView, bands: np.ndarray,
+                  index) -> tuple[list[np.ndarray], list[int]]:
+    """Device-resident band probe, dict-walk parity by construction.
+
+    The searchsorted membership test has no false negatives (every true
+    key's mix is in the sorted index), so a device miss IS a dict miss;
+    device hits are confirmed against the host dict, so 32-bit mix
+    collisions cannot add candidates.  Bloom fall-through for misses
+    matches the walk exactly.
+    """
+    import jax.numpy as jnp
+
+    keys_dev, counts_dev = index
+    q = len(bands)
+    qkeys = _band_key32(bands[:, :, 0], bands[:, :, 1])  # (Q, b)
+    # Bucket the query dim so repeated batch sizes share jit compiles.
+    q_bucket = pow2_bucket(q, floor=PROBE_DEVICE_MIN_BATCH)
+    qk = np.zeros((q_bucket, qkeys.shape[1]), dtype=np.uint32)
+    qk[:q] = qkeys
+    hits = np.asarray(_get_probe_jit()(
+        keys_dev, counts_dev, jnp.asarray(qk.T))).T[:q]  # (Q, b)
+    cands: list[set[int]] = [set() for _ in range(q)]
+    filter_hits = [0] * q
+    for j, m in enumerate(view.band_maps):
+        col = bands[:, j, :]
+        flt = view.band_filters[j]
+        hj = hits[:, j]
+        for i in range(q):
+            key = (int(col[i, 0]), int(col[i, 1]))
+            if hj[i]:
+                olds = m.get(key)
+                if olds is not None:
+                    cands[i].update(olds)
+                    continue
+            if flt is not None and key in flt:
+                filter_hits[i] += 1
+    out = [np.array(sorted(s), dtype=np.int64) for s in cands]
+    return out, filter_hits
+
+
 def probe_candidates(
-    view: SessionView, bands: np.ndarray
+    view: SessionView, bands: np.ndarray, *,
+    device_min_batch: int = PROBE_DEVICE_MIN_BATCH,
 ) -> tuple[list[np.ndarray], list[int]]:
     """Band-probe query band values against a view's frozen maps.
 
@@ -73,12 +192,22 @@ def probe_candidates(
     read: unlike ``BandIndex.match_then_insert`` nothing is inserted
     and no LRU recency moves — which is exactly why it runs over the
     view's exported copies rather than the live index.
+
+    Batches of ``device_min_batch`` or more route through a
+    device-resident sorted-band-key ``searchsorted`` probe (the index
+    is built once per view and cached); results are identical to the
+    host dict walk — device hits are dict-confirmed, and the probe has
+    no false negatives (see ``_probe_device``).
     """
     bands = np.asarray(bands)
     if bands.ndim != 3 or bands.shape[1] != view.num_bands:
         raise ValueError(
             f"expected (Q, {view.num_bands}, 2) bands, got {bands.shape}")
     q = len(bands)
+    if q >= device_min_batch:
+        index = _device_probe_index(view)
+        if index is not None:
+            return _probe_device(view, bands, index)
     cands: list[set[int]] = [set() for _ in range(q)]
     filter_hits = [0] * q
     for j, m in enumerate(view.band_maps):

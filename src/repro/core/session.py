@@ -380,6 +380,12 @@ class SessionView:
     signatures: np.ndarray      # retained rows (estimate sessions)
     slot_of: dict | None        # doc -> signature row (eviction layout)
     exact: ExactRowsView | None = None   # exact-verification sessions
+    # Device-probe index cache (``core.query``): derived read-only from
+    # the frozen band maps, built lazily on the first large query batch
+    # and reused for the view's lifetime.  Excluded from eq/repr — it
+    # is a cache, not state.
+    _probe_cache: dict = field(default_factory=dict, repr=False,
+                               compare=False)
 
     @property
     def mode(self) -> str:
@@ -938,6 +944,19 @@ class _HostBackend:
 
     def dispatch(self, chunk, tokenized: bool = False):
         sess = self.sess
+        if sess.config.byte_ingest:
+            # Zero-copy path: raw UTF-8 bytes go to device untokenized.
+            # Pre-tokenized chunks re-join with spaces — tokens are
+            # alnum-only, so the byte tokenizer recovers them exactly.
+            docs = ([" ".join(t) for t in chunk] if tokenized
+                    else list(chunk))
+            base = sess.allocator.allocate(len(docs))
+            if not docs:
+                return (base, docs, None, None)
+            pad = shingle.pow2_bucket(
+                max(len(d.encode("utf-8")) for d in docs) + 1)
+            sig, bands = self.pipe.compute_arrays_bytes(docs, pad_len=pad)
+            return (base, docs, sig, bands)
         toks = chunk if tokenized else self.pipe.tokenize(chunk)
         base = sess.allocator.allocate(len(toks))
         if not toks:
@@ -995,8 +1014,14 @@ class _StreamingBackend:
         # The store write is host-side work with nothing to overlap, so
         # it happens at merge time — a lookahead dispatch must not leak
         # chunk t+1's rows into the band-major scan that merges chunk t.
-        toks = chunk if tokenized else [shingle.tokenize(t)
-                                        for t in chunk]
+        if self.sess.config.byte_ingest:
+            # Byte configs buffer raw texts; StreamingDedup._flush
+            # routes them through the bytes_to_bands kernel.
+            toks = ([" ".join(t) for t in chunk] if tokenized
+                    else list(chunk))
+        else:
+            toks = chunk if tokenized else [shingle.tokenize(t)
+                                            for t in chunk]
         return (self.sess.allocator.allocate(len(toks)), toks)
 
     def merge(self, pending):
@@ -1036,12 +1061,15 @@ class _ShardedBackend:
             ngram=cfg.ngram, num_hashes=cfg.num_hashes,
             rows_per_band=cfg.rows_per_band,
             edge_threshold=cfg.edge_threshold,
-            fused_ingest=cfg.fused_ingest)
+            fused_ingest=cfg.fused_ingest,
+            byte_ingest=cfg.byte_ingest)
         # The session's retained state (seeds, signature width, band
         # index shape) is derived from DedupConfig while the device
         # step runs the DistLSHConfig — they must describe the same
         # hash space or the first dispatch/merge corrupts the session.
-        for f in ("ngram", "num_hashes", "rows_per_band"):
+        # ``byte_ingest`` joins the check because it flips the step's
+        # INPUT contract (uint8 byte matrix vs uint32 token matrix).
+        for f in ("ngram", "num_hashes", "rows_per_band", "byte_ingest"):
             if getattr(cfg, f) != getattr(self.dcfg, f):
                 raise ValueError(
                     f"DedupConfig.{f}={getattr(cfg, f)} does not match "
@@ -1067,6 +1095,8 @@ class _ShardedBackend:
 
     def dispatch(self, chunk, tokenized: bool = False):
         sess = self.sess
+        if self.dcfg.byte_ingest:
+            return self._dispatch_bytes(chunk, tokenized)
         toks = chunk if tokenized else [shingle.tokenize(t)
                                         for t in chunk]
         n_real = len(toks)
@@ -1084,6 +1114,32 @@ class _ShardedBackend:
             jnp.asarray(packed.tokens), jnp.asarray(packed.lengths),
             jnp.asarray(sess.seeds), jnp.asarray(offsets))
         return (base, toks, n_real, out)
+
+    def _dispatch_bytes(self, chunk, tokenized: bool):
+        """Byte-ingest dispatch: ship raw UTF-8 bytes, not token ids.
+
+        Same step contract otherwise; the padding doc is the literal
+        text ``"pad"`` so its signature matches the token path's
+        ``["pad"]`` row bit-for-bit (it is range-filtered regardless).
+        """
+        sess = self.sess
+        docs = ([" ".join(t) for t in chunk] if tokenized
+                else list(chunk))
+        n_real = len(docs)
+        base = sess.allocator.allocate(n_real)
+        if n_real == 0:
+            return (base, docs, 0, None)
+        pad = (-n_real) % self.n_dev
+        padded = docs + ["pad"] * pad
+        blen = shingle.pow2_bucket(
+            max(len(d.encode("utf-8")) for d in padded) + 1)
+        packed = shingle.pack_bytes(padded, blen)
+        d_loc = len(padded) // self.n_dev
+        offsets = DocIdAllocator.device_offsets(base, d_loc, self.n_dev)
+        out = self._get_step()(
+            jnp.asarray(packed.data), jnp.asarray(packed.lengths),
+            jnp.asarray(sess.seeds), jnp.asarray(offsets))
+        return (base, docs, n_real, out)
 
     def merge(self, pending):
         from repro.core.dist_lsh import feed_step_groups

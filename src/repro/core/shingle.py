@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.hashing import (
+    FNV_OFFSET32,
+    FNV_PRIME32,
     NGRAM_BASE,
     fmix32,
     fmix32_np,
@@ -67,6 +69,130 @@ def ngram_set(tokens: list[str], n: int = 8) -> set[tuple[str, ...]]:
     if len(tokens) < n:
         return {tuple(tokens)} if tokens else set()
     return {tuple(tokens[i : i + n]) for i in range(len(tokens) - n + 1)}
+
+
+# ---------------------------------------------------------------------------
+# Byte-level tokenization (device ingest path; host oracles)
+# ---------------------------------------------------------------------------
+#
+# The byte path reproduces ``token_ids(tokenize(text, do_stem=False))``
+# directly from UTF-8 bytes: tokens are maximal runs of ASCII
+# alphanumerics (``_WORD_RE`` only matches ASCII), A-Z folds to a-z by
+# +32, and *every* other byte — including all bytes >= 0x80, i.e. every
+# byte of a multi-byte UTF-8 sequence — is a separator.  Because an
+# ASCII token's UTF-8 encoding is the token's bytes themselves, the
+# per-token FNV-1a over folded bytes is bit-identical to ``token_ids``;
+# multi-byte safety falls out for free (a boundary can never split a
+# token, because no token byte is ever part of a multi-byte sequence).
+
+
+@dataclass(frozen=True)
+class PackedBytes:
+    """A batch of documents as a padded UTF-8 byte matrix."""
+
+    data: np.ndarray  # (D, LB) uint8, zero-padded rows
+    lengths: np.ndarray  # (D,) int32 byte lengths
+
+    @property
+    def num_docs(self) -> int:
+        return self.data.shape[0]
+
+
+def pack_bytes(docs: list[str | bytes], max_len: int | None = None) -> PackedBytes:
+    """Pack documents into a zero-padded uint8 matrix.
+
+    The matrix width must strictly exceed every document's byte length:
+    the byte tokenizer terminates a token at the first non-alnum byte,
+    so a token running to the last byte of a document needs one trailing
+    zero column to emit.  ``max_len`` (a pow2 bucket at jitted call
+    sites) is validated against that; when omitted the width is
+    ``max length + 1``.
+    """
+    raw = [d if isinstance(d, bytes) else d.encode("utf-8") for d in docs]
+    lengths = np.array([len(b) for b in raw], dtype=np.int32)
+    need = int(lengths.max(initial=0)) + 1
+    L = int(max_len) if max_len is not None else max(need, 1)
+    if L < need:
+        raise ValueError(
+            f"pack_bytes width {L} < max doc bytes + 1 ({need}); a token "
+            "ending at the last column would be lost"
+        )
+    data = np.zeros((len(raw), L), dtype=np.uint8)
+    for i, b in enumerate(raw):
+        data[i, : len(b)] = np.frombuffer(b, dtype=np.uint8)
+    return PackedBytes(data=data, lengths=lengths)
+
+
+def _alnum_fold_np(data: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """(is_alnum, case-folded) masks for a uint8 byte array."""
+    b = data.astype(np.uint32)
+    upper = (b >= 65) & (b <= 90)
+    alnum = upper | ((b >= 97) & (b <= 122)) | ((b >= 48) & (b <= 57))
+    folded = np.where(upper, b + np.uint32(32), b).astype(np.uint32)
+    return alnum, folded
+
+
+def byte_token_ids_np(text: str | bytes, seed: int = 0x7045) -> np.ndarray:
+    """Numpy oracle: token ids straight from UTF-8 bytes.
+
+    Bit-identical to ``token_ids(tokenize(text, do_stem=False), seed)``
+    for any unicode text (see the parity argument above).
+    """
+    raw = text if isinstance(text, bytes) else text.encode("utf-8")
+    data = np.frombuffer(raw, dtype=np.uint8)
+    alnum, folded = _alnum_fold_np(data)
+    out = []
+    h = FNV_OFFSET32
+    prev = False
+    with np.errstate(over="ignore"):
+        for i in range(data.shape[0]):
+            if alnum[i]:
+                h0 = h if prev else FNV_OFFSET32
+                h = np.uint32((h0 ^ folded[i]) * FNV_PRIME32)
+            elif prev:
+                out.append(h)
+            prev = bool(alnum[i])
+        if prev:
+            out.append(h)
+    ids = np.array(out, dtype=np.uint32)
+    if len(ids):
+        ids = hash_u32_np(ids, np.uint32(seed))
+    return ids
+
+
+def byte_token_hashes_np(
+    data: np.ndarray, lengths: np.ndarray, seed: int = 0x7045
+) -> tuple[np.ndarray, np.ndarray]:
+    """Numpy oracle mirroring the byte kernel's per-position outputs.
+
+    data: (D, LB) uint8; lengths: (D,) int32.  Returns ``(tok, ends)``
+    of shape (D, LB): ``ends[d, i]`` is 1 iff a token ends at position i
+    (exclusive), and ``tok[d, i]`` is its hashed id (0 elsewhere).
+    Positions at or beyond ``lengths[d]`` are treated as separators, so
+    garbage padding never leaks into tokens.
+    """
+    data = np.ascontiguousarray(data, dtype=np.uint8)
+    D, LB = data.shape
+    lengths = lengths.astype(np.int32)
+    alnum, folded = _alnum_fold_np(data)
+    pos = np.arange(LB, dtype=np.int32)[None, :]
+    alnum = alnum & (pos < lengths[:, None])
+    tok = np.zeros((D, LB), dtype=np.uint32)
+    ends = np.zeros((D, LB), dtype=np.int32)
+    with np.errstate(over="ignore"):
+        h = np.full((D,), FNV_OFFSET32, dtype=np.uint32)
+        prev = np.zeros((D,), dtype=bool)
+        for i in range(LB):
+            cur = alnum[:, i]
+            h0 = np.where(prev, h, FNV_OFFSET32)
+            h_new = np.where(
+                cur, ((h0 ^ folded[:, i]) * FNV_PRIME32).astype(np.uint32), h
+            ).astype(np.uint32)
+            end = prev & ~cur
+            tok[:, i] = np.where(end, hash_u32_np(h, np.uint32(seed)), 0)
+            ends[:, i] = end
+            h, prev = h_new, cur
+    return tok, ends
 
 
 # ---------------------------------------------------------------------------

@@ -75,6 +75,11 @@ class StreamingDedup:
 
     def ingest(self, texts: Iterable[str], keep_signatures: bool = True):
         """Stream documents into the band store, chunk by chunk."""
+        if self.config.byte_ingest:
+            # Zero-copy phase 1: texts are buffered raw and shipped to
+            # the device as UTF-8 bytes — no host tokenize pass.
+            self.ingest_tokens(texts, keep_signatures)
+            return
         self.ingest_tokens(
             (shingle.tokenize(t) for t in texts), keep_signatures)
 
@@ -97,6 +102,29 @@ class StreamingDedup:
         # share one jit compile regardless of each chunk's longest
         # document, instead of recompiling the fused/staged stages per
         # novel (D, L) (signatures are padding-invariant).
+        if self.config.byte_ingest:
+            # Byte configs buffer raw texts (see ``ingest``): pack their
+            # UTF-8 bytes and run the whole chain on device.
+            from repro.kernels.byte_shingle import bytes_to_bands
+
+            pad_len = shingle.pow2_bucket(
+                max((len(t if isinstance(t, bytes) else
+                         t.encode("utf-8")) for t in token_lists),
+                    default=0) + 1)
+            packed_b = shingle.pack_bytes(token_lists, pad_len)
+            sig_j, bands_j, _ = bytes_to_bands(
+                jnp.asarray(packed_b.data), jnp.asarray(packed_b.lengths),
+                self._device_seeds(), n=self.config.ngram,
+                r=self.config.rows_per_band)
+            sig, bands = np.asarray(sig_j), np.asarray(bands_j)
+            for i in range(len(token_lists)):
+                doc_id = self.n_docs + i
+                self.store.insert_document(doc_id, bands[i])
+                if keep_signatures:
+                    self._sig_cache[doc_id] = sig[i]
+            self.n_docs += len(token_lists)
+            self.n_ingested += len(token_lists)
+            return
         pad_len = shingle.pow2_bucket(
             max((len(t) for t in token_lists), default=1))
         packed = shingle.pack_documents(token_lists, pad_len)

@@ -1,0 +1,215 @@
+"""Pallas TPU kernel: device-resident byte-level shingling.
+
+Completes the zero-copy ingest path (DESIGN.md §11): raw UTF-8 bytes are
+the only host->device transfer, and tokenize + token-hash + shingle +
+minhash + band-fold all run on device as one ``bytes_to_bands`` pass.
+
+Tokenization contract (bit-identical to the host no-stem path): a token
+is a maximal run of ASCII alphanumerics, A-Z folds to a-z (+32), and
+every other byte — including every byte >= 0x80 of a multi-byte UTF-8
+sequence — is a separator.  ``core.shingle._WORD_RE`` only matches
+ASCII, and an ASCII token's UTF-8 encoding is its own bytes, so the
+per-token FNV-1a over folded bytes reproduces
+``token_ids(tokenize(text, do_stem=False))`` exactly; multi-byte safety
+is structural (no token byte can sit inside a multi-byte sequence).
+
+FNV-1a is sequential per token, so the kernel scans byte columns with a
+``jax.lax.scan`` carrying (FNV state, prev-byte-was-alnum) per document
+row.  The carries persist across L tiles as revisited rank-1 output
+blocks (the ``fused_ingest`` signature-accumulator idiom: the grid's
+last axis is sequential on TPU, so the (TD,) carry block stays resident
+in VMEM across the L revisits) and are re-initialized at the first L
+tile.  Zero padding is a separator, so a token ending at the last byte
+of a document emits at the following zero column — callers must keep
+matrix width strictly greater than every byte length (``pack_bytes``
+enforces this; ``bytes_to_bands`` also pads one extra column).
+
+Grid (D/TD, LB/TLB), L innermost.  VMEM per step is one (TD, TLB) uint8
+byte tile + the uint32 token/end tiles + two (TD,) carries — well under
+budget; nothing per-token ever reaches HBM except the compacted token
+matrix handed to ``fused_ingest``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.hashing import FNV_OFFSET32, FNV_PRIME32, GOLDEN32
+from repro.kernels.fused_ingest import fused_ingest
+
+# Default seed of core.shingle.token_ids (the hash-vocabulary seed).
+TOKEN_SEED = 0x7045
+
+# Default tiles: (TD, TLB) uint8 + uint32 outputs ~ 18 KiB VMEM.
+TD, TLB = 8, 256
+
+
+def _fmix(x):
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x85EBCA6B)
+    x = x ^ (x >> 13)
+    x = x * jnp.uint32(0xC2B2AE35)
+    x = x ^ (x >> 16)
+    return x
+
+
+def _byte_kernel(byte_ref, len_ref, tok_ref, end_ref, h_ref, p_ref, *,
+                 td: int, tlb: int, seed: int):
+    l_idx = pl.program_id(1)
+
+    @pl.when(l_idx == 0)
+    def _init():
+        h_ref[...] = jnp.full((td,), jnp.uint32(FNV_OFFSET32),
+                              dtype=jnp.uint32)
+        p_ref[...] = jnp.zeros((td,), dtype=jnp.uint32)
+
+    cols = byte_ref[...].astype(jnp.uint32).T      # (TLB, TD)
+    lens = len_ref[...].astype(jnp.int32)          # (TD,)
+    # Positions at or beyond a document's byte length are separators, so
+    # garbage padding never leaks into tokens.
+    pos = l_idx * tlb + jax.lax.broadcasted_iota(jnp.int32, (td, tlb), 1)
+    in_doc = (pos < lens[:, None]).T               # (TLB, TD)
+
+    def step(carry, xs):
+        h, prev = carry
+        b, live = xs
+        upper = (b >= jnp.uint32(65)) & (b <= jnp.uint32(90))
+        alnum = (upper
+                 | ((b >= jnp.uint32(97)) & (b <= jnp.uint32(122)))
+                 | ((b >= jnp.uint32(48)) & (b <= jnp.uint32(57)))) & live
+        folded = jnp.where(upper, b + jnp.uint32(32), b)
+        # A run restarts from the FNV offset basis at its first byte.
+        h0 = jnp.where(prev > jnp.uint32(0), h, jnp.uint32(FNV_OFFSET32))
+        h_new = jnp.where(alnum, (h0 ^ folded) * jnp.uint32(FNV_PRIME32), h)
+        end = (prev > jnp.uint32(0)) & jnp.logical_not(alnum)
+        tok = jnp.where(end, _fmix(h * GOLDEN32 + jnp.uint32(seed)),
+                        jnp.uint32(0))
+        return (h_new, alnum.astype(jnp.uint32)), (tok, end.astype(jnp.int32))
+
+    (h_fin, p_fin), (toks, ends) = jax.lax.scan(
+        step, (h_ref[...], p_ref[...]), (cols, in_doc))
+    tok_ref[...] = toks.T
+    end_ref[...] = ends.T
+    h_ref[...] = h_fin
+    p_ref[...] = p_fin
+
+
+@functools.partial(
+    jax.jit, static_argnames=("td", "tlb", "id_seed", "interpret"))
+def byte_token_hashes(
+    data: jnp.ndarray,
+    lengths: jnp.ndarray,
+    *,
+    td: int = TD,
+    tlb: int = TLB,
+    id_seed: int = TOKEN_SEED,
+    interpret: bool | None = None,
+):
+    """(D, LB) uint8 bytes + (D,) byte lengths ->
+    (token ids (D, LB) uint32, token ends (D, LB) int32).
+
+    ``ends[d, i]`` is 1 iff a token ends at byte position i (exclusive)
+    and ``tok[d, i]`` is its hashed id.  Matches
+    ``core.shingle.byte_token_hashes_np`` bit-for-bit.  The matrix width
+    must exceed every byte length (a token touching the last column
+    would have nowhere to emit) — ``pack_bytes`` guarantees this.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    data = data.astype(jnp.uint8)
+    lengths = lengths.astype(jnp.int32)
+    D, LB = data.shape
+    if D == 0:
+        return (jnp.zeros((0, LB), jnp.uint32),
+                jnp.zeros((0, LB), jnp.int32))
+    td_ = min(td, max(1, D))
+    tlb_ = min(tlb, max(1, LB))
+    Dp = -(-D // td_) * td_
+    Lp = -(-LB // tlb_) * tlb_
+    buf = jnp.pad(data, ((0, Dp - D), (0, Lp - LB)))
+    ln = jnp.pad(lengths, (0, Dp - D))
+
+    tok, ends, _, _ = pl.pallas_call(
+        functools.partial(_byte_kernel, td=td_, tlb=tlb_, seed=id_seed),
+        grid=(Dp // td_, Lp // tlb_),
+        in_specs=[
+            pl.BlockSpec((td_, tlb_), lambda d, l: (d, l)),
+            pl.BlockSpec((td_,), lambda d, l: (d,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((td_, tlb_), lambda d, l: (d, l)),
+            pl.BlockSpec((td_, tlb_), lambda d, l: (d, l)),
+            # FNV-state / prev-alnum carries: revisited rank-1 blocks,
+            # VMEM-resident across the sequential L axis.
+            pl.BlockSpec((td_,), lambda d, l: (d,)),
+            pl.BlockSpec((td_,), lambda d, l: (d,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Dp, Lp), jnp.uint32),
+            jax.ShapeDtypeStruct((Dp, Lp), jnp.int32),
+            jax.ShapeDtypeStruct((Dp,), jnp.uint32),
+            jax.ShapeDtypeStruct((Dp,), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(buf, ln)
+    return tok[:D, :LB], ends[:D, :LB]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n", "r", "td", "tlb", "id_seed", "interpret"))
+def bytes_to_bands(
+    data: jnp.ndarray,
+    lengths: jnp.ndarray,
+    seeds: jnp.ndarray,
+    *,
+    n: int = 8,
+    r: int = 2,
+    td: int = TD,
+    tlb: int = TLB,
+    id_seed: int = TOKEN_SEED,
+    interpret: bool | None = None,
+):
+    """(D, LB) uint8 bytes + (D,) byte lengths + (M,) seeds ->
+    ((D, M) signatures, (D, M//r, 2) band values, (D,) token counts).
+
+    The full zero-copy ingest: byte shingle kernel -> on-device token
+    compaction (cumsum/scatter; dropped positions go out of bounds) ->
+    ``fused_ingest``.  Bit-identical to host tokenize(do_stem=False) +
+    ``token_ids`` + ``pack_documents`` + ``fused_ingest``.  Callers feed
+    pow2-bucketed widths (``pack_bytes`` + ``pow2_bucket``) so the
+    compile set stays bounded — RPR003 audits call sites.
+    """
+    data = data.astype(jnp.uint8)
+    lengths = lengths.astype(jnp.int32)
+    D, LB = data.shape
+    M = seeds.shape[0]
+    assert M % r == 0, f"M={M} not divisible by r={r}"
+    if D == 0:
+        return (jnp.zeros((0, M), jnp.uint32),
+                jnp.zeros((0, M // r, 2), jnp.uint32),
+                jnp.zeros((0,), jnp.int32))
+    # One extra zero column so a token ending at the last byte of a
+    # full-width row still emits (zero padding is a separator).
+    buf = jnp.pad(data, ((0, 0), (0, 1)))
+    tok, ends = byte_token_hashes(
+        buf, lengths, td=td, tlb=tlb, id_seed=id_seed, interpret=interpret)
+
+    # Compact sparse per-position emissions into a dense token matrix.
+    # Capacity: token ends are >= 2 bytes apart, so ceil((LB+1)/2) is a
+    # hard cap; the width is derived from the bucketed LB, keeping the
+    # downstream fused_ingest compile set bounded too.
+    lt_bucket = (LB + 1) // 2 + 1
+    tidx = jnp.cumsum(ends, axis=1) - 1
+    dst = jnp.where(ends > 0, tidx, lt_bucket)  # non-ends dropped (OOB)
+    row = jnp.arange(D, dtype=jnp.int32)[:, None]
+    tokens = jnp.zeros((D, lt_bucket), jnp.uint32)
+    tokens = tokens.at[row, dst].set(tok, mode="drop")
+    tok_lengths = jnp.sum(ends, axis=1).astype(jnp.int32)
+
+    sig, bands, _ = fused_ingest(
+        tokens, tok_lengths, seeds, n=n, r=r, interpret=interpret)
+    return sig, bands, tok_lengths

@@ -10,6 +10,7 @@ from repro.kernels.minhash import minhash_signatures
 from repro.kernels.ngram import ngram_hashes
 from repro.kernels.bandfold import band_values
 from repro.kernels.fused_ingest import fused_ingest
+from repro.kernels.byte_shingle import byte_token_hashes, bytes_to_bands
 from repro.kernels.sigjaccard import (
     indexed_pair_estimate,
     masked_indexed_pair_counts,
@@ -24,6 +25,8 @@ __all__ = [
     "ngram_hashes",
     "band_values",
     "fused_ingest",
+    "byte_token_hashes",
+    "bytes_to_bands",
     "pair_estimate",
     "indexed_pair_estimate",
     "masked_indexed_pair_counts",

@@ -86,6 +86,12 @@ def main(argv=None):
                     help="one-pass device ingest: shingle -> minhash -> "
                          "band fold in a single fused Pallas kernel "
                          "(bit-identical to the staged path)")
+    ap.add_argument("--byte-ingest", action="store_true",
+                    help="zero-copy device ingest: raw UTF-8 bytes are "
+                         "the only host->device transfer; tokenize + "
+                         "shingle + minhash + band fold all run on "
+                         "device (no-stem tokenization; implies "
+                         "--estimate, since no host token lists exist)")
     ap.add_argument("--backend", default="auto",
                     choices=("auto", "numpy", "jnp", "pallas"),
                     help="estimate-mode verification backend")
@@ -164,7 +170,8 @@ def main(argv=None):
         tree_threshold=args.tree_threshold,
         use_pallas=args.use_pallas,
         fused_ingest=args.fused_ingest,
-        exact_verification=not args.estimate,
+        byte_ingest=args.byte_ingest,
+        exact_verification=not (args.estimate or args.byte_ingest),
         verify_backend=args.backend,
         verify_batch=args.batch)
 
@@ -176,7 +183,8 @@ def main(argv=None):
                              edge_capacity=8192,
                              band_groups=args.band_groups,
                              stage2=args.stage2,
-                             fused_ingest=args.fused_ingest)
+                             fused_ingest=args.fused_ingest,
+                             byte_ingest=args.byte_ingest)
         from dataclasses import replace
 
         # Sharded verification is estimate-shaped by construction; the
@@ -207,25 +215,36 @@ def main(argv=None):
         from repro.core.shingle import tokenize
         from repro.core.verify import ExactJaccardVerifier
 
-        # Tokenize once; the chunks are ingested pre-tokenized so the
-        # exact verifier (built over the same token lists — the
-        # streaming backend's native verifier is the signature
-        # estimate, so exact_verification is honoured explicitly) does
-        # not pay a second tokenize pass.
-        toks = [tokenize(t) for t in notes]
         verifier = None
-        if cfg.exact_verification:
-            verifier = ExactJaccardVerifier.from_token_lists(
-                toks, cfg.ngram)
+        if cfg.byte_ingest:
+            # Byte configs stream raw texts — tokenization happens on
+            # device, so there is nothing to pre-tokenize (and no token
+            # lists for an exact verifier; config validation enforces
+            # estimate mode).
+            stream_chunks = (notes[a:b]
+                             for a, b in zip(bounds, bounds[1:]))
+            tokenized = False
+        else:
+            # Tokenize once; the chunks are ingested pre-tokenized so
+            # the exact verifier (built over the same token lists — the
+            # streaming backend's native verifier is the signature
+            # estimate, so exact_verification is honoured explicitly)
+            # does not pay a second tokenize pass.
+            toks = [tokenize(t) for t in notes]
+            if cfg.exact_verification:
+                verifier = ExactJaccardVerifier.from_token_lists(
+                    toks, cfg.ngram)
+            stream_chunks = (toks[a:b]
+                             for a, b in zip(bounds, bounds[1:]))
+            tokenized = True
         sess = DedupSession(cfg, backend="streaming",
                             chunk_docs=args.chunk, verifier=verifier,
                             retention=retention)
         t0 = time.perf_counter()
         # Pre-tokenized chunks stream with the tokenized flag threaded
         # through, so nothing downstream re-tokenizes or re-stores them.
-        for snap in sess.ingest_stream(
-                (toks[a:b] for a, b in zip(bounds, bounds[1:])),
-                tokenized=True):
+        for snap in sess.ingest_stream(stream_chunks,
+                                       tokenized=tokenized):
             pass
         dt = time.perf_counter() - t0
         report_session(f"streaming[{args.steps} step(s)]", snap, dt)

@@ -118,8 +118,46 @@ class DedupQueryService:
 
     def query(self, texts: list[str]) -> list[QueryResult]:
         """Answer one batch of query documents synchronously."""
+        if self.session.config.byte_ingest:
+            # Byte sessions tokenize on device (no-stem); the host
+            # tokenizer below would stem and miss the ingested rows.
+            return self.query_bytes(texts)
         return self.query_tokens([self.pipe.tokenize([t])[0]
                                   for t in texts])
+
+    def query_bytes(self, texts: list[str | bytes]) -> list[QueryResult]:
+        """``query`` straight from UTF-8 bytes — the zero-copy read path.
+
+        Signatures/bands come out of the device-resident
+        ``bytes_to_bands`` chain (no host tokenize), bit-identical to
+        querying ``tokenize(text, do_stem=False)`` tokens, so results
+        match ``byte_ingest`` sessions exactly.  Exact-mode views have
+        no byte route (exact Jaccard needs host token lists).
+        """
+        if not texts:
+            return []
+        view = self.view()
+        if view.mode == "exact":
+            raise ValueError(
+                "query_bytes serves estimate-mode views only; exact "
+                "Jaccard verification needs host token lists — use "
+                "query()/query_tokens() against this session")
+        n = len(texts)
+        raw = [t if isinstance(t, bytes) else t.encode("utf-8")
+               for t in texts]
+        # Same pow2 bucketing as _bucketed_arrays, on byte widths (the
+        # +1 keeps the final-token emission column; see pack_bytes).
+        lb = shingle.pow2_bucket(max(len(b) for b in raw) + 1)
+        db = shingle.pow2_bucket(n, floor=8)
+        padded = raw + [b"pad"] * (db - n)
+        sig, bands = self.pipe.compute_arrays_bytes(padded, pad_len=lb)
+        sig, bands = sig[:n], bands[:n]
+        results = query_view(view, bands, sig=sig,
+                             verifier=self._verifier_for(view))
+        self.stats.queries += len(results)  # repro-lint: disable=RPR002
+        self.stats.duplicates_found += sum(  # repro-lint: disable=RPR002
+            r.is_duplicate for r in results)
+        return results
 
     def query_tokens(
         self, token_lists: list[list[str]]
@@ -175,9 +213,15 @@ class DedupQueryService:
     def submit(self, text: str) -> int:
         """Enqueue one query document; returns its request id."""
         self._rid += 1
+        # Byte sessions match the device tokenizer (no-stem); the
+        # token-path signatures over those tokens are bit-identical to
+        # the bytes_to_bands chain, so microbatched results agree with
+        # query_bytes exactly.
+        toks = (shingle.tokenize(text, do_stem=False)
+                if self.session.config.byte_ingest
+                else self.pipe.tokenize([text])[0])
         self.queue.append(QueryRequest(
-            self._rid, self.pipe.tokenize([text])[0],
-            enqueued_at=time.perf_counter()))
+            self._rid, toks, enqueued_at=time.perf_counter()))
         return self._rid
 
     def step(self) -> int:

@@ -1,0 +1,42 @@
+"""Intentionally-bad fixture: RPR005 on the byte-shingle carry tiling.
+
+Every mistake here is one the real ``kernels/byte_shingle.py`` idiom
+avoids: raw module-constant tile dims, a carry BlockSpec whose index
+map ignores the L grid axis, a rank-1 carry block paired with a rank-2
+out_shape, and tiles big enough to blow the VMEM ceiling.
+"""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TD, TLB = 64, 2048
+
+
+def _byte_kernel(byte_ref, len_ref, tok_ref, h_ref):
+    tok_ref[...] = byte_ref[...].astype(jnp.uint32)
+    h_ref[...] = len_ref[...].astype(jnp.uint32)
+
+
+def launch(data, lengths):
+    D, LB = data.shape
+    return pl.pallas_call(
+        _byte_kernel,
+        grid=(D // TD, LB // TLB),
+        in_specs=[
+            # TD/TLB are raw module constants: nothing clamps them to
+            # the operand dims, and the (64, 2048) tiles are ~512 KiB
+            # EACH — past the 1 MiB ceiling with the outputs counted.
+            pl.BlockSpec((TD, TLB), lambda d, l: (d, l)),
+            # carry index map takes 1 arg for a 2-axis grid
+            pl.BlockSpec((TD,), lambda d: (d,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((TD, TLB), lambda d, l: (d, l)),
+            # rank-1 carry block against a rank-2 out_shape
+            pl.BlockSpec((TD,), lambda d, l: (d,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((D, LB), jnp.uint32),
+            jax.ShapeDtypeStruct((D, 2), jnp.uint32),
+        ],
+    )(data, lengths)

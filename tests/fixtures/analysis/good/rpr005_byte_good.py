@@ -1,0 +1,44 @@
+"""Clean fixture: the byte-shingle carry-block tiling (RPR005).
+
+Mirrors ``kernels/byte_shingle.py`` (DESIGN.md §11): grid-varying tile
+dims are min-clamped locals, the FNV-state carry is a revisited rank-1
+output block (same block for every L step, re-initialized at the first
+L tile) whose out_shape rank matches, and the resident tiles stay far
+under the VMEM ceiling.
+"""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _byte_kernel(byte_ref, len_ref, tok_ref, h_ref):
+    l_idx = pl.program_id(1)
+
+    @pl.when(l_idx == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    tok_ref[...] = byte_ref[...].astype(jnp.uint32)
+    h_ref[...] = h_ref[...] + len_ref[...].astype(jnp.uint32)
+
+
+def launch(data, lengths, td: int = 8, tlb: int = 256):
+    D, LB = data.shape
+    td_ = min(td, max(1, D))
+    tlb_ = min(tlb, max(1, LB))
+    return pl.pallas_call(
+        _byte_kernel,
+        grid=(-(-D // td_), -(-LB // tlb_)),
+        in_specs=[
+            pl.BlockSpec((td_, tlb_), lambda d, l: (d, l)),
+            pl.BlockSpec((td_,), lambda d, l: (d,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((td_, tlb_), lambda d, l: (d, l)),
+            pl.BlockSpec((td_,), lambda d, l: (d,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((D, LB), jnp.uint32),
+            jax.ShapeDtypeStruct((D,), jnp.uint32),
+        ],
+    )(data, lengths)

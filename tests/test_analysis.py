@@ -52,6 +52,11 @@ BAD_CASES = [
     ("rpr005_bad.py", "src/repro/kernels/fixture_mod.py", "RPR005",
      {"index-map-arity", "unclamped-dim:TL", "vmem-budget",
       "out-rank-mismatch"}),
+    # The byte-shingle carry-tiling variant: same violation classes on
+    # the revisited rank-1 carry-block idiom of kernels/byte_shingle.py.
+    ("rpr005_byte_bad.py", "src/repro/kernels/fixture_mod.py", "RPR005",
+     {"index-map-arity", "unclamped-dim:TLB", "vmem-budget",
+      "out-rank-mismatch"}),
 ]
 
 
@@ -72,6 +77,7 @@ GOOD_CASES = [
     ("rpr003_good.py", "src/repro/serving/fixture_mod.py"),
     ("rpr004_good.py", "src/repro/core/fixture_mod.py"),
     ("rpr005_good.py", "src/repro/kernels/fixture_mod.py"),
+    ("rpr005_byte_good.py", "src/repro/kernels/fixture_mod.py"),
 ]
 
 

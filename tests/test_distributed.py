@@ -443,6 +443,68 @@ def test_session_fused_ingest_matches_staged_sharded():
 
 
 @pytest.mark.slow
+def test_session_byte_ingest_matches_token_sharded():
+    """Device bytes->bands == host no-stem tokenize, sharded N-step.
+
+    A ``byte_ingest`` sharded session consumes raw UTF-8 texts (the
+    zero-copy path: uint8 bytes are the only host->device transfer and
+    tokenize/shingle/minhash/band-fold run in ``local_prepare`` on
+    device); a fused token session consumes the matching
+    ``tokenize(do_stem=False)`` lists.  Bit-identical signatures and
+    band values mean the whole downstream pipeline must agree: labels
+    identical, per-edge sims bit-identical, and the device-stage2
+    cell's host re-scores pinned at zero (overflow-only), across
+    N-step ingest.  Same cell set as the fused-vs-staged pin.
+    """
+    run_with_devices("""
+        import numpy as np
+        from repro.core import DedupConfig, DedupSession
+        from repro.core.dist_lsh import DistLSHConfig
+        from repro.core import shingle
+        from repro.data import make_i2b2_like, inject_near_duplicates
+        notes = make_i2b2_like(56, seed=0)
+        notes, _ = inject_near_duplicates(notes, 8, frac_low=0.0,
+                                          frac_high=0.005, seed=1)
+        base = dict(edge_capacity=4096, edge_threshold=0.88,
+                    bucket_slack=16.0)
+        for stage2, n_steps, groups in [("host", 1, 5), ("host", 3, 5),
+                                        ("device", 2, 1)]:
+            idx_chunks = np.array_split(np.arange(len(notes)), n_steps)
+            snaps = {}
+            for byte in (False, True):
+                dcfg = DistLSHConfig(**base, stage2=stage2,
+                                     band_groups=groups,
+                                     fused_ingest=not byte,
+                                     byte_ingest=byte)
+                cfg = DedupConfig(edge_threshold=0.88,
+                                  exact_verification=False,
+                                  byte_ingest=byte)
+                sess = DedupSession(cfg, backend="sharded",
+                                    dist_config=dcfg)
+                if byte:
+                    chunks = [[notes[i] for i in idx]
+                              for idx in idx_chunks]
+                    stream = sess.ingest_stream(chunks)
+                else:
+                    chunks = [[shingle.tokenize(notes[i], do_stem=False)
+                               for i in idx] for idx in idx_chunks]
+                    stream = sess.ingest_stream(chunks, tokenized=True)
+                for snap in stream:
+                    pass
+                assert snap.overflow == 0 and snap.row_overflow == 0
+                snaps[byte] = snap
+            a, b = snaps[False], snaps[True]
+            np.testing.assert_array_equal(a.labels, b.labels)
+            pa = {(x, y): s for x, y, s in a.pairs}
+            pb = {(x, y): s for x, y, s in b.pairs}
+            assert pa and pa == pb, (stage2, n_steps)
+            if stage2 == "device":
+                assert b.host_rescored == 0, b.host_rescored
+        print("byte sharded parity ok")
+    """, n_devices=8)
+
+
+@pytest.mark.slow
 def test_session_eviction_multidevice_keeps_parity_and_device_scoring():
     """Bounded retention on the 8-device sharded backend.
 
