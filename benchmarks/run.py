@@ -60,6 +60,9 @@ def main(argv=None) -> None:
 
         designs.run_sharded(n_notes=96, n_dups=32)
         designs.run_band_group_overlap(n_notes=96, n_dups=32)
+        # PR 10 disk tier: Bloom-first probe throughput + FP rate vs
+        # the in-memory dict walk (drift must stay 0).
+        designs.run_band_probe(n_notes=96, n_queries=48)
         from benchmarks import kernels, roofline
 
         # Fused-ingest perf gate: drift must stay 0 (bit parity with
@@ -99,6 +102,7 @@ def main(argv=None) -> None:
         from benchmarks import designs
         designs.run()
         designs.run_memory()
+        designs.run_band_probe()
         designs.run_sharded()
     if want("clustering"):
         from benchmarks import clustering

@@ -1,4 +1,4 @@
-"""Out-of-core band-matrix storage — the paper's two database designs (§5).
+"""Pluggable out-of-core band-matrix storage (paper §5, LSHBloom-scale).
 
 The paper uses Apache Cassandra; this container has no Cassandra, so the
 designs are realized over sqlite3 (stdlib) with the exact same schemas and
@@ -9,18 +9,150 @@ measures, and that transfers.
 Design 1: one row per band-matrix cell      (band_id, doc_id, value)
 Design 2: one row per (band, doc-part) slice (band_id, part_id, values[])
 
+PR 10 abstracts the store behind ``BandStoreBackend`` so sessions can
+pick a tier (``DedupConfig.store``):
+
+* ``"memory"`` — the historical layout: ``Design2Store`` blobs for the
+  streaming phase-1 store, an in-memory ``session.BandIndex`` dict for
+  the cross-step index.  Fastest, bounded by one host's RAM.
+* ``"sqlite"`` — ``SqliteBandStore``, a key-level disk tier with
+  **Bloom-first lookups** (DESIGN.md §12): PR 5's ``BandBloomFilter``
+  promoted from eviction fallback to the *primary* index — one filter
+  per band holds every key ever inserted, so a band probe touches disk
+  only on filter hits (no false negatives: a miss is answered from
+  memory in O(hashes)).  Signature rows live disk-resident too
+  (``DiskSignatureVerifier``), gathered through a small LRU row cache.
+
+Both tiers produce identical clusters and bit-identical per-edge sims
+(``tests/test_bandstore_backends.py``); the disk tier trades probe
+latency for an index that no longer has to fit in RAM.
+
 On the TPU pod these map to band-major resharding vs doc-major band_parts
 (DESIGN.md §2); this module is the literal single-machine reproduction.
 """
 from __future__ import annotations
 
 import sqlite3
+from collections import OrderedDict
+from typing import Iterator
 
 import numpy as np
 
+from repro.core.retention import BandBloomFilter
+from repro.core.verify import BatchVerifier
 
-class Design1Store:
+STORE_KINDS = ("memory", "sqlite")
+
+
+class BandStoreBackend:
+    """Interface every band-store tier implements (DESIGN.md §12).
+
+    Write path: ``put_band_rows`` / ``insert_document`` + ``commit``.
+    Scan path: ``read_band`` (the paper's "select * where band_id = j")
+    and ``iter_band_runs`` (sorted equal-value runs, the staged engine's
+    candidate structure).  Probe path: ``probe_keys`` — a PURE read
+    (never mutates store state; RPR002 holds it to that) mapping query
+    band values to retained doc ids.  Retention: ``compact`` rewrites
+    evicted docs' band rows onto their cluster roots so the store stops
+    growing with evicted history (the ROADMAP "retention completeness"
+    fix; clustering-neutral because the engine path-compresses every
+    candidate to union-find roots before verification).
+    """
+
+    kind = "abstract"
+    conn: sqlite3.Connection
+
+    # -- write path --------------------------------------------------------
+
+    def insert_document(self, doc_id: int, band_sig: np.ndarray) -> None:
+        raise NotImplementedError
+
+    def put_band_rows(self, doc_ids, bands: np.ndarray) -> None:
+        """Insert a chunk: ``doc_ids`` (D,) int, ``bands`` (D, b, 2)."""
+        bands = np.asarray(bands)
+        for i, doc in enumerate(doc_ids):
+            self.insert_document(int(doc), bands[i])
+
+    def commit(self) -> None:
+        raise NotImplementedError
+
+    # -- scan path ---------------------------------------------------------
+
+    def read_band(self, band_id: int):
+        raise NotImplementedError
+
+    def iter_band_runs(self, num_bands: int) -> Iterator:
+        """Per-band sorted equal-value runs (``candidates.BandRuns``)."""
+        from repro.core.candidates import make_band_runs
+
+        for j in range(int(num_bands)):
+            docs, vals = self.read_band(j)
+            yield make_band_runs(j, vals, docs)
+
+    # -- probe path (pure) -------------------------------------------------
+
+    def probe_keys(self, bands: np.ndarray):
+        """(Q, b, 2) query bands -> (per-query sorted unique int64 doc-id
+        arrays, per-query compacted-key filter-only hit counts).
+
+        Pure read: implementations must not mutate any store state (no
+        LRU refresh, no counter bumps — returned values carry all the
+        accounting), so a published ``SessionView`` can delegate its
+        probe here without breaking the RPR002 purity contract.
+
+        The generic implementation walks ``read_band`` with a host dict
+        per band — the in-memory reference the Bloom-first tier is
+        benchmarked against (``benchmarks/designs.py``).
+        """
+        bands = np.asarray(bands)
+        q = len(bands)
+        cands: list[set[int]] = [set() for _ in range(q)]
+        for j in range(bands.shape[1]):
+            docs, vals = self.read_band(j)
+            lookup: dict[tuple[int, int], list[int]] = {}
+            for d, (hi, lo) in zip(docs.tolist(), vals.tolist()):
+                lookup.setdefault((int(hi), int(lo)), []).append(int(d))
+            col = bands[:, j, :]
+            for i in range(q):
+                olds = lookup.get((int(col[i, 0]), int(col[i, 1])))
+                if olds is not None:
+                    cands[i].update(olds)
+        return ([np.array(sorted(s), dtype=np.int64) for s in cands],
+                [0] * q)
+
+    # -- retention ---------------------------------------------------------
+
+    def compact(self, doc_ids, root_of) -> None:
+        raise NotImplementedError
+
+    def n_entries(self) -> int:
+        """Total (band, value, doc) entries currently stored."""
+        raise NotImplementedError
+
+    # -- accounting --------------------------------------------------------
+
+    def file_size_bytes(self) -> int:
+        """Current database size (page_count * page_size; works for
+        ``:memory:`` connections too — the soak disk-plateau gate)."""
+        (pages,) = self.conn.execute("PRAGMA page_count").fetchone()
+        (size,) = self.conn.execute("PRAGMA page_size").fetchone()
+        return int(pages) * int(size)
+
+
+def make_store(kind: str, path: str = ":memory:", *,
+               part_size: int = 50, num_bands: int = 50):
+    """Factory behind ``DedupConfig.store`` (``"memory" | "sqlite"``)."""
+    if kind == "memory":
+        return Design2Store(path, part_size=part_size)
+    if kind == "sqlite":
+        return SqliteBandStore(path, num_bands=num_bands)
+    raise ValueError(f"unknown store kind {kind!r}; one of {STORE_KINDS}")
+
+
+class Design1Store(BandStoreBackend):
     """One database row per band-matrix cell."""
+
+    kind = "design1"
 
     def __init__(self, path: str = ":memory:"):
         self.conn = sqlite3.connect(path)
@@ -51,6 +183,10 @@ class Design1Store:
             return (np.zeros(0, np.int64), np.zeros((0, 2), np.uint32))
         arr = np.array(rows, dtype=np.int64)
         return arr[:, 0], arr[:, 1:].astype(np.uint32)
+
+    def n_entries(self) -> int:
+        (n,) = self.conn.execute("SELECT COUNT(*) FROM band1").fetchone()
+        return int(n)
 
     def commit(self):
         self.conn.commit()
@@ -96,8 +232,10 @@ def _decode_part(blob: bytes, doc0: int):
     return np.arange(doc0, doc0 + len(vals), dtype=np.int64), vals
 
 
-class Design2Store:
+class Design2Store(BandStoreBackend):
     """One database row per (band, band_part) slice of d documents."""
+
+    kind = "memory"
 
     def __init__(self, path: str = ":memory:", part_size: int = 50):
         self.conn = sqlite3.connect(path)
@@ -148,14 +286,611 @@ class Design2Store:
             return (np.zeros(0, np.int64), np.zeros((0, 2), np.uint32))
         return np.concatenate(docs), np.concatenate(vals)
 
+    def _band_ids(self) -> list[int]:
+        cur = self.conn.execute(
+            "SELECT DISTINCT band_id FROM band2 ORDER BY band_id")
+        return [int(j) for (j,) in cur.fetchall()]
+
+    def compact(self, doc_ids, root_of) -> None:
+        """Rewrite evicted docs' band rows onto their cluster roots.
+
+        Per band: decode every part, map each evicted doc id to
+        ``root_of(doc)`` IN PLACE (positions of surviving entries are
+        preserved, so the stable lexsort in the scan path enumerates
+        runs in the same order an un-evicted store would), then drop
+        exact (value, doc) duplicates keeping the first occurrence —
+        the engine compresses candidates to roots before verification,
+        so the rewrite changes no clustering outcome and no ledger
+        entry, it only stops the store growing with evicted history.
+        """
+        self.flush_part()
+        ev = {int(d): int(root_of(int(d))) for d in doc_ids}
+        if not ev:
+            return
+        for j in self._band_ids():
+            docs, vals = self.read_band(j)
+            if len(docs) == 0 or not np.isin(docs, list(ev)).any():
+                continue
+            mapped = np.array([ev.get(int(d), int(d)) for d in docs],
+                              dtype=np.int64)
+            seen: set[tuple[int, int, int]] = set()
+            keep = np.ones(len(mapped), dtype=bool)
+            for i in range(len(mapped)):
+                key = (int(vals[i, 0]), int(vals[i, 1]), int(mapped[i]))
+                if key in seen:
+                    keep[i] = False
+                else:
+                    seen.add(key)
+            new_docs, new_vals = mapped[keep], vals[keep]
+            self.conn.execute("DELETE FROM band2 WHERE band_id=?", (j,))
+            rows = []
+            for p, s in enumerate(range(0, len(new_docs),
+                                        self.part_size)):
+                ids = new_docs[s : s + self.part_size]
+                blob = _encode_part_v2(ids, new_vals[s : s + self.part_size])
+                rows.append((j, p, int(ids[0]), blob))
+            if rows:
+                self.conn.executemany(
+                    "INSERT INTO band2 VALUES (?,?,?,?)", rows)
+        self.conn.commit()
+
+    def n_entries(self) -> int:
+        self.flush_part()
+        return sum(len(self.read_band(j)[0]) for j in self._band_ids())
+
     def commit(self):
         self.flush_part()
         self.conn.commit()
 
 
+class SqliteBandStore(BandStoreBackend):
+    """Key-level disk tier with Bloom-first lookups (DESIGN.md §12).
+
+    Layout: one row per retained band KEY —
+
+      ``bandkeys(band_id, hi, lo, docs BLOB, seq)``  PK (band_id, hi, lo)
+
+    where ``docs`` is the key's bucket as an insertion-ordered int64
+    array and ``seq`` is a monotone last-touch counter (the LRU clock a
+    ``band_key_budget`` compacts by).  ``docentries(doc_id, band_id,
+    hi, lo)`` is the per-doc reverse map eviction rewrites through, and
+    ``sigs(doc_id, row)`` holds disk-resident signature rows for
+    ``DiskSignatureVerifier``.
+
+    Two Bloom filter sets per band, both ``retention.BandBloomFilter``:
+
+    * the PRIMARY filter holds every key ever inserted — probes and
+      inserts consult it first and touch disk only on filter hits (no
+      false negatives, so a filter miss is a definitive store miss
+      answered in O(hashes) host work; a false positive costs one empty
+      SELECT);
+    * the COMPACTION filter holds only budget-evicted keys, with
+      exactly ``session.BandIndex``'s semantics: a later miss that hits
+      it counts as ``filter_only_hits`` (the LSHBloom recall trade).
+
+    The class implements BOTH roles a session needs: the
+    ``BandStoreBackend`` scan/probe/compact interface (streaming
+    phase-2, read-path probes) and the ``session.BandIndex`` API
+    (``match_then_insert`` / ``evict`` / ``export_*`` / ``stats``) so a
+    ``DedupSession`` can retain its cross-step index on disk unchanged.
+    Cluster labels and per-edge sims are bit-identical to the memory
+    tier (pinned in ``tests/test_bandstore_backends.py``).
+    """
+
+    kind = "sqlite"
+
+    def __init__(self, path: str = ":memory:", num_bands: int = 50, *,
+                 key_budget: int | None = None,
+                 bloom_bits: int = 1 << 17, bloom_hashes: int = 4,
+                 primary_bloom_bits: int = 1 << 20,
+                 track_entries: bool = False):
+        self.conn = sqlite3.connect(path)
+        self.conn.execute(
+            "CREATE TABLE IF NOT EXISTS bandkeys ("
+            " band_id INTEGER, hi INTEGER, lo INTEGER,"
+            " docs BLOB, seq INTEGER,"
+            " PRIMARY KEY (band_id, hi, lo))")
+        self.conn.execute(
+            "CREATE TABLE IF NOT EXISTS docentries ("
+            " doc_id INTEGER, band_id INTEGER,"
+            " hi INTEGER, lo INTEGER)")
+        self.conn.execute(
+            "CREATE INDEX IF NOT EXISTS docentries_doc"
+            " ON docentries (doc_id)")
+        self.conn.execute(
+            "CREATE TABLE IF NOT EXISTS sigs ("
+            " doc_id INTEGER PRIMARY KEY, row BLOB)")
+        self._num_bands = int(num_bands)
+        self._key_budget = key_budget
+        self._bloom_bits = int(bloom_bits)
+        self._bloom_hashes = int(bloom_hashes)
+        self._track_entries = bool(track_entries)
+        self._primary = [BandBloomFilter(primary_bloom_bits, bloom_hashes)
+                         for _ in range(self._num_bands)]
+        self._filters: list[BandBloomFilter | None] = \
+            [None] * self._num_bands
+        self._key_counts = [0] * self._num_bands
+        self._seq = 0
+        self.filter_only_hits = 0
+        self.compacted_keys = 0
+        self.n_writes = 0
+        self.write_bytes = 0
+        # Reopening an existing file: rebuild the primary filters, key
+        # counts, and LRU clock from the persisted rows.  (Compaction
+        # filters are NOT reconstructible — their keys are gone by
+        # definition; a reopened store starts them empty.)
+        cur = self.conn.execute(
+            "SELECT band_id, hi, lo, seq FROM bandkeys")
+        for j, hi, lo, seq in cur.fetchall():
+            self._primary[int(j)].add((int(hi), int(lo)))
+            self._key_counts[int(j)] += 1
+            self._seq = max(self._seq, int(seq) + 1)
+
+    # -- small helpers -----------------------------------------------------
+
+    @property
+    def num_bands(self) -> int:
+        return self._num_bands
+
+    def _filter(self, j: int) -> BandBloomFilter:
+        if self._filters[j] is None:
+            self._filters[j] = BandBloomFilter(
+                self._bloom_bits, self._bloom_hashes)
+        return self._filters[j]
+
+    def _next_seq(self) -> int:
+        self._seq += 1
+        return self._seq
+
+    @staticmethod
+    def _pack_docs(docs: list[int]) -> bytes:
+        return np.asarray(docs, dtype=np.int64).tobytes()
+
+    @staticmethod
+    def _unpack_docs(blob: bytes) -> list[int]:
+        return np.frombuffer(blob, dtype=np.int64).tolist()
+
+    def _select_keys(self, j: int, keys: list[tuple[int, int]]) -> dict:
+        """Fetch existing buckets for ``keys`` (already filter-hit) in
+        one statement; returns {key: [doc ids]}."""
+        if not keys:
+            return {}
+        out: dict[tuple[int, int], list[int]] = {}
+        # Chunk the IN list to stay under sqlite's host-parameter cap.
+        for s in range(0, len(keys), 400):
+            part = keys[s : s + 400]
+            sql = ("SELECT hi, lo, docs FROM bandkeys WHERE band_id=? "
+                   "AND (hi, lo) IN (VALUES "
+                   + ",".join(["(?,?)"] * len(part)) + ")")
+            args = [int(j)]
+            for hi, lo in part:
+                args.extend((int(hi), int(lo)))
+            for hi, lo, blob in self.conn.execute(sql, args):
+                out[(int(hi), int(lo))] = self._unpack_docs(blob)
+        return out
+
+    # -- BandIndex API: cross-step candidate generation ---------------------
+
+    def match_then_insert(self, bands: np.ndarray,
+                          doc_id_base: int) -> np.ndarray:
+        """(C, b, 2) chunk bands -> (E, 2) int64 cross-step edges.
+
+        Semantics mirror ``session.BandIndex.match_then_insert`` line
+        for line (same edge emission order, same LRU recency refresh on
+        hits, same budget compaction into the per-band filter) — the
+        memory-vs-sqlite parity pin depends on it.  The disk twist is
+        Bloom-first: a key absent from the band's primary filter is a
+        definitive new key, so only filter hits pay a SELECT.
+        """
+        bands = np.asarray(bands)
+        if bands.ndim != 3 or bands.shape[1] != self._num_bands:
+            raise ValueError(
+                f"expected (C, {self._num_bands}, 2) bands, "
+                f"got {bands.shape}")
+        edges: list[tuple[int, int]] = []
+        for j in range(self._num_bands):
+            col = bands[:, j, :]
+            chunk_keys = [(int(col[i, 0]), int(col[i, 1]))
+                          for i in range(len(col))]
+            primary = self._primary[j]
+            maybe = sorted({k for k in chunk_keys if k in primary})
+            buckets = self._select_keys(j, maybe)
+            preexisting = set(buckets)
+            seq_of: dict[tuple[int, int], int] = {}
+            entries: list[tuple[int, int, int, int]] = []
+            flt = self._filters[j]
+            for i, key in enumerate(chunk_keys):
+                new_id = doc_id_base + i
+                olds = buckets.get(key)
+                if olds is not None:
+                    edges.extend((old, new_id) for old in olds
+                                 if old < doc_id_base)
+                    olds.append(new_id)
+                else:
+                    if flt is not None and key in flt:
+                        # Seen before, partner compacted away: the pair
+                        # can no longer be exactly re-verified.
+                        self.filter_only_hits += 1
+                    buckets[key] = [new_id]
+                # Refresh recency on every touch (hit or insert): the
+                # budget sweep deletes min-seq keys, so a hot key must
+                # keep moving to the top of the clock exactly like the
+                # dict move-to-end in BandIndex.
+                seq_of[key] = self._next_seq()
+                if self._track_entries:
+                    entries.append((new_id, j, key[0], key[1]))
+            updates, inserts = [], []
+            for key, docs in buckets.items():
+                blob = self._pack_docs(docs)
+                self.write_bytes += len(blob)
+                if key in preexisting:
+                    updates.append((blob, seq_of[key], j,
+                                    key[0], key[1]))
+                else:
+                    inserts.append((j, key[0], key[1], blob,
+                                    seq_of[key]))
+                    primary.add(key)
+                    self._key_counts[j] += 1
+            if updates:
+                self.conn.executemany(
+                    "UPDATE bandkeys SET docs=?, seq=? "
+                    "WHERE band_id=? AND hi=? AND lo=?", updates)
+            if inserts:
+                self.conn.executemany(
+                    "INSERT INTO bandkeys VALUES (?,?,?,?,?)", inserts)
+            self.n_writes += len(updates) + len(inserts)
+            if entries:
+                self.conn.executemany(
+                    "INSERT INTO docentries VALUES (?,?,?,?)", entries)
+            if self._key_budget is not None and \
+                    self._key_counts[j] > self._key_budget:
+                excess = self._key_counts[j] - self._key_budget
+                victims = self.conn.execute(
+                    "SELECT hi, lo FROM bandkeys WHERE band_id=? "
+                    "ORDER BY seq LIMIT ?", (j, excess)).fetchall()
+                self.conn.executemany(
+                    "DELETE FROM bandkeys WHERE band_id=? AND hi=? "
+                    "AND lo=?", [(j, hi, lo) for hi, lo in victims])
+                for hi, lo in victims:
+                    self._filter(j).add((int(hi), int(lo)))
+                    self.compacted_keys += 1
+                self._key_counts[j] -= len(victims)
+        if not edges:
+            return np.zeros((0, 2), dtype=np.int64)
+        return np.array(edges, dtype=np.int64)
+
+    def evict(self, doc_ids, root_of) -> None:
+        """Rewrite evicted docs' bucket entries onto their cluster root
+        (``session.BandIndex.evict`` semantics, disk-resident)."""
+        if not self._track_entries:
+            raise ValueError(
+                "SqliteBandStore was built without track_entries; "
+                "eviction needs the per-doc reverse map")
+        for d in doc_ids:
+            d = int(d)
+            rows = self.conn.execute(
+                "SELECT band_id, hi, lo FROM docentries WHERE doc_id=? "
+                "ORDER BY rowid", (d,)).fetchall()
+            if not rows:
+                continue
+            self.conn.execute(
+                "DELETE FROM docentries WHERE doc_id=?", (d,))
+            for j, hi, lo in rows:
+                got = self.conn.execute(
+                    "SELECT docs FROM bandkeys WHERE band_id=? AND "
+                    "hi=? AND lo=?", (j, hi, lo)).fetchone()
+                if got is None:
+                    continue               # key already compacted
+                docs = self._unpack_docs(got[0])
+                if d not in docs:
+                    continue               # key was compacted + re-seen
+                docs.remove(d)
+                r = int(root_of(d))
+                if r not in docs:
+                    docs.append(r)
+                    self.conn.execute(
+                        "INSERT INTO docentries VALUES (?,?,?,?)",
+                        (r, j, hi, lo))
+                self.conn.execute(
+                    "UPDATE bandkeys SET docs=? WHERE band_id=? AND "
+                    "hi=? AND lo=?",
+                    (self._pack_docs(docs), j, hi, lo))
+
+    def export_maps(self) -> tuple:
+        """Frozen per-band bucket maps ({key: (doc ids,)} dicts) — the
+        in-memory view shape, materialized from disk.  Store-backed
+        sessions normally publish a live ``probe_keys`` handle instead
+        (``SessionView.band_store``); this export exists for parity
+        tests and introspection."""
+        maps: list[dict] = [dict() for _ in range(self._num_bands)]
+        cur = self.conn.execute(
+            "SELECT band_id, hi, lo, docs FROM bandkeys")
+        for j, hi, lo, blob in cur.fetchall():
+            maps[int(j)][(int(hi), int(lo))] = tuple(
+                self._unpack_docs(blob))
+        return tuple(maps)
+
+    def export_filters(self) -> tuple:
+        """Frozen per-band compaction Bloom filters (copies)."""
+        return tuple(f.copy() if f is not None else None
+                     for f in self._filters)
+
+    def stats(self) -> dict:
+        """Memory/recall/disk accounting (superset of BandIndex.stats)."""
+        (tracked,) = self.conn.execute(
+            "SELECT COUNT(DISTINCT doc_id) FROM docentries").fetchone()
+        return {
+            "n_keys": sum(self._key_counts),
+            "n_entries": self.n_entries(),
+            "n_docs_tracked": int(tracked),
+            "compacted_keys": self.compacted_keys,
+            "filter_only_hits": self.filter_only_hits,
+            "bloom_bytes": sum(f.memory_bytes for f in self._filters
+                               if f is not None),
+            "primary_bloom_bytes": sum(f.memory_bytes
+                                       for f in self._primary),
+            "file_bytes": self.file_size_bytes(),
+        }
+
+    # -- BandStoreBackend API ----------------------------------------------
+
+    def insert_document(self, doc_id: int, band_sig: np.ndarray) -> None:
+        """Streaming phase-1 write: one doc's (b, 2) band column."""
+        band_sig = np.asarray(band_sig)
+        doc_id = int(doc_id)
+        for j in range(len(band_sig)):
+            key = (int(band_sig[j, 0]), int(band_sig[j, 1]))
+            docs = None
+            if key in self._primary[j]:
+                got = self.conn.execute(
+                    "SELECT docs FROM bandkeys WHERE band_id=? AND "
+                    "hi=? AND lo=?", (j, key[0], key[1])).fetchone()
+                if got is not None:
+                    docs = self._unpack_docs(got[0])
+            if docs is not None:
+                docs.append(doc_id)
+                blob = self._pack_docs(docs)
+                self.conn.execute(
+                    "UPDATE bandkeys SET docs=?, seq=? WHERE band_id=? "
+                    "AND hi=? AND lo=?",
+                    (blob, self._next_seq(), j, key[0], key[1]))
+            else:
+                blob = self._pack_docs([doc_id])
+                self.conn.execute(
+                    "INSERT INTO bandkeys VALUES (?,?,?,?,?)",
+                    (j, key[0], key[1], blob, self._next_seq()))
+                self._primary[j].add(key)
+                self._key_counts[j] += 1
+            self.n_writes += 1
+            self.write_bytes += len(blob)
+
+    def read_band(self, band_id: int):
+        """All (doc, value) entries of one band, key-major.
+
+        Keys come back value-sorted and each bucket insertion-ordered;
+        the scan path lexsorts by value anyway (stably), so equal-value
+        runs enumerate docs in the same order a ``Design2Store`` scan
+        would — the cross-tier ledger-parity pin depends on that.
+        """
+        cur = self.conn.execute(
+            "SELECT hi, lo, docs FROM bandkeys WHERE band_id=? "
+            "ORDER BY hi, lo", (int(band_id),))
+        docs, vals = [], []
+        for hi, lo, blob in cur.fetchall():
+            ids = np.frombuffer(blob, dtype=np.int64)
+            docs.append(ids)
+            v = np.empty((len(ids), 2), dtype=np.uint32)
+            v[:, 0], v[:, 1] = np.uint32(hi), np.uint32(lo)
+            vals.append(v)
+        if not docs:
+            return (np.zeros(0, np.int64), np.zeros((0, 2), np.uint32))
+        return np.concatenate(docs), np.concatenate(vals)
+
+    def probe_keys(self, bands: np.ndarray):
+        """Bloom-first pure probe (see ``BandStoreBackend.probe_keys``).
+
+        Per query key: primary-filter miss -> definitive store miss (no
+        disk touched); filter hit -> one batched SELECT confirms (a
+        false positive just comes back empty).  Store misses that hit
+        the band's COMPACTION filter count as filter-only hits, exactly
+        like the in-memory view walk.  Never mutates store state —
+        recency is NOT refreshed (probes are reads, not ingests).
+        """
+        bands = np.asarray(bands)
+        if bands.ndim != 3 or bands.shape[1] != self._num_bands:
+            raise ValueError(
+                f"expected (Q, {self._num_bands}, 2) bands, "
+                f"got {bands.shape}")
+        q = len(bands)
+        cands: list[set[int]] = [set() for _ in range(q)]
+        filter_hits = [0] * q
+        for j in range(self._num_bands):
+            col = bands[:, j, :]
+            keys = [(int(col[i, 0]), int(col[i, 1])) for i in range(q)]
+            primary = self._primary[j]
+            maybe = sorted({k for k in keys if k in primary})
+            buckets = self._select_keys(j, maybe)
+            flt = self._filters[j]
+            for i, key in enumerate(keys):
+                olds = buckets.get(key)
+                if olds is not None:
+                    cands[i].update(olds)
+                elif flt is not None and key in flt:
+                    filter_hits[i] += 1
+        return ([np.array(sorted(s), dtype=np.int64) for s in cands],
+                filter_hits)
+
+    def probe_stats(self, bands: np.ndarray) -> dict:
+        """Pure probe-path accounting for one query batch: how often the
+        primary filter said "maybe", how many of those the disk
+        confirmed, and the filter false-positive rate (the Bloom-first
+        bench row).  Mutates nothing."""
+        bands = np.asarray(bands)
+        q = len(bands)
+        probes = q * self._num_bands
+        bloom_maybe = 0
+        disk_hits = 0
+        for j in range(self._num_bands):
+            col = bands[:, j, :]
+            keys = [(int(col[i, 0]), int(col[i, 1])) for i in range(q)]
+            primary = self._primary[j]
+            maybe = [k for k in keys if k in primary]
+            bloom_maybe += len(maybe)
+            buckets = self._select_keys(j, sorted(set(maybe)))
+            disk_hits += sum(1 for k in maybe if k in buckets)
+        return {
+            "probes": probes,
+            "bloom_maybe": bloom_maybe,
+            "disk_hits": disk_hits,
+            "bloom_fps": bloom_maybe - disk_hits,
+            "fp_rate": ((bloom_maybe - disk_hits) / probes
+                        if probes else 0.0),
+        }
+
+    def compact(self, doc_ids, root_of) -> None:
+        """Drop evicted docs' band rows on rewrite (streaming-store
+        retention; same in-place + keep-first-dedup contract as
+        ``Design2Store.compact``)."""
+        ev = {int(d): int(root_of(int(d))) for d in doc_ids}
+        if not ev:
+            return
+        updates = []
+        cur = self.conn.execute(
+            "SELECT band_id, hi, lo, docs FROM bandkeys")
+        for j, hi, lo, blob in cur.fetchall():
+            docs = self._unpack_docs(blob)
+            if not any(d in ev for d in docs):
+                continue
+            mapped, seen = [], set()
+            for d in docs:
+                m = ev.get(d, d)
+                if m not in seen:
+                    seen.add(m)
+                    mapped.append(m)
+            updates.append((self._pack_docs(mapped), j, hi, lo))
+        if updates:
+            self.conn.executemany(
+                "UPDATE bandkeys SET docs=? WHERE band_id=? AND hi=? "
+                "AND lo=?", updates)
+        if self._track_entries and ev:
+            self.conn.executemany(
+                "DELETE FROM docentries WHERE doc_id=?",
+                [(d,) for d in ev])
+        self.conn.commit()
+
+    def n_entries(self) -> int:
+        total = 0
+        for (blob,) in self.conn.execute("SELECT docs FROM bandkeys"):
+            total += len(blob) // 8
+        return total
+
+    def commit(self) -> None:
+        self.conn.commit()
+
+    # -- disk-resident signature rows ---------------------------------------
+
+    def put_signatures(self, doc_ids, rows: np.ndarray) -> None:
+        """Store (D, M) uint32 signature rows for ``doc_ids``."""
+        rows = np.ascontiguousarray(rows, dtype=np.uint32)
+        self.conn.executemany(
+            "INSERT OR REPLACE INTO sigs VALUES (?,?)",
+            [(int(d), rows[i].tobytes())
+             for i, d in enumerate(doc_ids)])
+
+    def get_signature(self, doc_id: int) -> np.ndarray | None:
+        got = self.conn.execute(
+            "SELECT row FROM sigs WHERE doc_id=?",
+            (int(doc_id),)).fetchone()
+        if got is None:
+            return None
+        return np.frombuffer(got[0], dtype=np.uint32)
+
+    def n_signatures(self) -> int:
+        (n,) = self.conn.execute("SELECT COUNT(*) FROM sigs").fetchone()
+        return int(n)
+
+    def release_signatures(self, doc_ids) -> None:
+        self.conn.executemany(
+            "DELETE FROM sigs WHERE doc_id=?",
+            [(int(d),) for d in doc_ids])
+
+
+class DiskSignatureVerifier(BatchVerifier):
+    """Signature-agreement verifier over disk-resident rows.
+
+    The sqlite tier's replacement for holding the full (n_docs, M)
+    signature matrix in RAM: rows live in ``SqliteBandStore.sigs`` and
+    are gathered through a bounded LRU row cache.  The estimate itself
+    is the same expression ``SignatureVerifier`` evaluates —
+    ``(a == b).mean(axis=-1, dtype=np.float32)`` over the gathered
+    uint32 rows — so sims are bit-identical to the in-memory tier.
+
+    ``release_rows`` deletes rows from DISK as well as the cache (the
+    retention hook: bounded sessions get bounded disk, not just bounded
+    RAM); a verify against a released doc raises ``KeyError`` exactly
+    like ``SignatureVerifier._slot_index``.
+    """
+
+    def __init__(self, store: SqliteBandStore, num_hashes: int,
+                 cache_rows: int = 4096):
+        super().__init__()
+        self.store = store
+        self.num_hashes = int(num_hashes)
+        self.cache_rows = int(cache_rows)
+        self._cache: OrderedDict[int, np.ndarray] = OrderedDict()
+        self.cache_hits = 0
+        self.cache_misses = 0
+
+    @property
+    def n_live_rows(self) -> int:
+        return self.store.n_signatures()
+
+    def _row(self, doc: int) -> np.ndarray:
+        doc = int(doc)
+        row = self._cache.get(doc)
+        if row is not None:
+            self._cache.move_to_end(doc)
+            self.cache_hits += 1
+            return row
+        row = self.store.get_signature(doc)
+        if row is None:
+            raise KeyError(
+                f"doc {doc} has no retained signature row (evicted by "
+                "the retention policy, or never ingested)")
+        self.cache_misses += 1
+        self._cache[doc] = row
+        while len(self._cache) > self.cache_rows:
+            self._cache.popitem(last=False)
+        return row
+
+    def rows_for(self, doc_ids) -> np.ndarray:
+        ids = np.asarray(doc_ids, dtype=np.int64).ravel()
+        out = np.empty((len(ids), self.num_hashes), dtype=np.uint32)
+        for i, d in enumerate(ids):
+            out[i] = self._row(int(d))
+        return out
+
+    def extend_signatures(self, doc_ids, sig: np.ndarray) -> None:
+        """Append a chunk's rows (write-through; keeps ``sigs`` the one
+        authoritative copy)."""
+        self.store.put_signatures(doc_ids, sig)
+
+    def release_rows(self, doc_ids) -> None:
+        """Retention hook: drop evicted docs' rows from disk + cache."""
+        self.store.release_signatures(doc_ids)
+        for d in doc_ids:
+            self._cache.pop(int(d), None)
+
+    def _verify_batch(self, pairs: np.ndarray) -> np.ndarray:
+        pairs = np.asarray(pairs)
+        a = self.rows_for(pairs[:, 0])
+        b = self.rows_for(pairs[:, 1])
+        return (a == b).mean(axis=-1, dtype=np.float32)
+
+
 def candidate_pairs_from_store(store, num_bands: int,
                                max_pairs_per_band=None):
-    """Band-major candidate generation over either store design.
+    """Band-major candidate generation over any band store backend.
 
     Delegates to the shared staged-engine candidate layer
     (``candidates.StoreBandSource``); ``num_docs`` is not needed for

@@ -20,6 +20,7 @@ Execution styles, all thin drivers over the staged engine
 """
 from __future__ import annotations
 
+import os
 import time
 from dataclasses import dataclass, field
 
@@ -51,6 +52,13 @@ class DedupConfig:
     verify_backend: str = "auto"  # estimate mode: numpy | jnp | pallas
     verify_batch: str = "run"  # engine batch granularity: run | band
     seed: int = 0x5EED
+    # Band-store tier (core.bandstore, DESIGN.md §12): "memory" keeps
+    # the historical in-RAM layout; "sqlite" puts band rows + signature
+    # rows on disk behind Bloom-first lookups.  Identical clusters and
+    # bit-identical per-edge sims either way (pinned in tests); the env
+    # default lets the CI store matrix flip the whole suite per cell.
+    store: str = field(default_factory=lambda: os.environ.get(
+        "REPRO_STORE_BACKEND", "memory"))
 
     def __post_init__(self):
         if self.byte_ingest and self.exact_verification:
@@ -58,6 +66,10 @@ class DedupConfig:
                 "byte_ingest never materializes host token lists, so "
                 "exact Jaccard verification is impossible; set "
                 "exact_verification=False (signature-estimate mode)")
+        if self.store not in ("memory", "sqlite"):
+            raise ValueError(
+                f"unknown store backend {self.store!r}; "
+                "one of ('memory', 'sqlite')")
 
     @property
     def num_bands(self) -> int:

@@ -204,6 +204,14 @@ def probe_candidates(
         raise ValueError(
             f"expected (Q, {view.num_bands}, 2) bands, got {bands.shape}")
     q = len(bands)
+    if view.band_store is not None:
+        # Disk-tier view (DESIGN.md §12): delegate to the store's pure
+        # Bloom-first probe — a primary-filter miss never touches disk,
+        # a hit pays one batched SELECT.  Candidates are clipped to the
+        # view's publication coverage so docs ingested after this view
+        # was published stay invisible to it.
+        cands, filter_hits = view.band_store.probe_keys(bands)
+        return [c[c < view.n_docs] for c in cands], filter_hits
     if q >= device_min_batch:
         index = _device_probe_index(view)
         if index is not None:

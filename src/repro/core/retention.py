@@ -211,5 +211,9 @@ class RetentionManager:
         self._pending = [d for d in self._pending if d >= cutoff]
         session._release_rows(evict)
         session.band_index.evict(evict, uf.find)
+        # Streaming sessions also rewrite the evicted docs' band-STORE
+        # rows onto their roots (no-op for the other backends) — the
+        # phase-1 store stops growing with evicted history.
+        session._compact_band_store(evict, uf.find)
         self.n_evicted += len(evict)
         return len(evict)

@@ -52,6 +52,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core import lsh, minhash, shingle
+from repro.core.bandstore import SqliteBandStore
 from repro.core.candidates import BandMatrixSource, ShardedEdgeSource
 from repro.core.engine import (
     ClusterAccumulator,
@@ -380,6 +381,16 @@ class SessionView:
     signatures: np.ndarray      # retained rows (estimate sessions)
     slot_of: dict | None        # doc -> signature row (eviction layout)
     exact: ExactRowsView | None = None   # exact-verification sessions
+    # Disk-tier sessions (DedupConfig.store="sqlite", DESIGN.md §12):
+    # the live SqliteBandStore the read path delegates probes to (its
+    # ``probe_keys`` is a pure Bloom-first read) instead of exporting
+    # the whole on-disk index into host dicts per publication.
+    # ``band_maps``/``band_filters`` are empty then.  The trade: probe
+    # results reflect the store at QUERY time, so a stale view held
+    # across later ingests can see newer entries (bounded to its own
+    # ``n_docs`` coverage by the probe's id filter) — the memory tier
+    # keeps strict frozen-at-publication semantics.
+    band_store: SqliteBandStore | None = None
     # Device-probe index cache (``core.query``): derived read-only from
     # the frozen band maps, built lazily on the first large query batch
     # and reused for the view's lifetime.  Excluded from eq/repr — it
@@ -480,15 +491,26 @@ class DedupSession:
             # Incremental root-representative tracking: each union logs
             # its deposed root so eviction sweeps never scan all docs.
             self.acc.uf.track_deposed = True
-        self.band_index = BandIndex(
-            self.config.num_bands,
+        # Cross-step band index tier (DESIGN.md §12): "memory" keeps the
+        # host dict index; "sqlite" retains it disk-resident behind
+        # Bloom-first lookups (same match/insert/evict semantics — the
+        # cross-tier parity pins depend on it).  The streaming backend's
+        # retained state is its band STORE, so its (unused) index stays
+        # in memory regardless.
+        index_cls = (SqliteBandStore
+                     if self.config.store == "sqlite"
+                     and backend != "streaming" else BandIndex)
+        index_kw = {"path": store_path} if index_cls is SqliteBandStore \
+            else {}
+        self.band_index = index_cls(
+            num_bands=self.config.num_bands,
             key_budget=(retention.band_key_budget
                         if retention is not None else None),
             bloom_bits=(retention.bloom_bits if retention is not None
                         else 1 << 17),
             bloom_hashes=(retention.bloom_hashes
                           if retention is not None else 4),
-            track_entries=retention is not None)
+            track_entries=retention is not None, **index_kw)
         self.seeds = minhash.default_seeds(self.config.num_hashes)
         self.overflow = 0
         self.retried = 0
@@ -658,6 +680,16 @@ class DedupSession:
                 "SessionView needs retained signature or token rows; "
                 "external callback verifiers keep neither — pass a "
                 "SignatureVerifier/ExactJaccardVerifier instead")
+        if isinstance(self.band_index, SqliteBandStore):
+            # Disk tier: don't haul the whole on-disk index into host
+            # dicts per publication — the view probes the store's pure
+            # Bloom-first read path instead (see SessionView.band_store).
+            band_maps, band_filters = (), ()
+            band_store = self.band_index
+        else:
+            band_maps = self.band_index.export_maps()
+            band_filters = self.band_index.export_filters()
+            band_store = None
         view = SessionView(
             version=self._view_version + 1,
             n_docs=self.n_docs,
@@ -665,11 +697,12 @@ class DedupSession:
             num_bands=cfg.num_bands,
             rows_per_band=cfg.rows_per_band,
             labels=labels,
-            band_maps=self.band_index.export_maps(),
-            band_filters=self.band_index.export_filters(),
+            band_maps=band_maps,
+            band_filters=band_filters,
             signatures=sig,
             slot_of=slot_of,
             exact=exact,
+            band_store=band_store,
         )
         # The one sanctioned read-path mutation: this cache swap IS the
         # atomic single-writer publication protocol (DESIGN.md §9) —
@@ -776,6 +809,19 @@ class DedupSession:
         v = self._verifier
         if v is not None and hasattr(v, "release_rows"):
             v.release_rows(doc_ids)
+
+    def _compact_band_store(self, doc_ids, root_of) -> None:
+        """Rewrite evicted docs' band-STORE rows onto their cluster
+        roots (retention hook; streaming backend only — the other
+        backends' retained band state is the ``band_index``, which the
+        sweep's ``evict`` call already rewrote).  Keeps the phase-1
+        store bounded instead of growing with evicted history (the
+        ROADMAP "retention completeness" fix); clustering-neutral, see
+        ``bandstore.Design2Store.compact``.
+        """
+        compact = getattr(self._impl, "compact_store", None)
+        if compact is not None:
+            compact(doc_ids, root_of)
 
     def _representatives(self) -> list[int]:
         """Sorted current union-find roots (the retained-rep view).
@@ -1030,21 +1076,37 @@ class _StreamingBackend:
         assert base == self.sd.n_docs, (base, self.sd.n_docs)
         if toks:
             self.sd.ingest_tokens(toks)
-            sig = np.stack([self.sd._sig_cache[base + i]
-                            for i in range(len(toks))])
-            sess._retain(toks, sig)
-            if self._owned:
-                # The rows now live in the session verifier; keeping
-                # them in the phase-1 cache too would store every
-                # signature twice.  (Adopted StreamingDedups keep their
-                # cache — ``default_verifier`` may rebuild from it.)
-                for i in range(len(toks)):
-                    self.sd._sig_cache.pop(base + i, None)
+            if hasattr(self.sd.store, "put_signatures"):
+                # Disk tier (DedupConfig.store="sqlite"): the flush
+                # already wrote the chunk's signature rows into the
+                # store — the session verifies straight off disk
+                # through the store's LRU-cached row gather, so there
+                # is no host matrix to grow and nothing cached to pop.
+                if sess._verifier is None and \
+                        not sess._external_verifier:
+                    sess._verifier = self.sd.default_verifier()
+            else:
+                sig = np.stack([self.sd._sig_cache[base + i]
+                                for i in range(len(toks))])
+                sess._retain(toks, sig)
+                if self._owned:
+                    # The rows now live in the session verifier;
+                    # keeping them in the phase-1 cache too would store
+                    # every signature twice.  (Adopted StreamingDedups
+                    # keep their cache — ``default_verifier`` may
+                    # rebuild from it.)
+                    for i in range(len(toks)):
+                        self.sd._sig_cache.pop(base + i, None)
         sess.n_merged = max(sess.n_merged, base + len(toks))
         sess.acc.grow(sess.n_docs)
         sess.acc.feed(self.sd.candidate_source(),
                       verifier=sess._verifier)
         sess.steps_ingested += 1
+
+    def compact_store(self, doc_ids, root_of):
+        """Retention hook: drop evicted docs' band-store rows on
+        rewrite (``DedupSession._compact_band_store``)."""
+        self.sd.store.compact(doc_ids, root_of)
 
 
 class _ShardedBackend:

@@ -30,7 +30,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core import lsh, minhash, shingle
-from repro.core.bandstore import Design2Store
+from repro.core.bandstore import DiskSignatureVerifier, make_store
 from repro.core.candidates import StoreBandSource
 from repro.core.engine import merge_cluster_rounds as _merge_rounds
 from repro.core.pipeline import DedupConfig
@@ -54,8 +54,13 @@ class StreamingDedup:
     doc_id_base: int = 0
 
     def __post_init__(self):
-        self.store = Design2Store(self.store_path,
-                                  part_size=self.chunk_docs)
+        # The store tier comes from the config (DESIGN.md §12):
+        # "memory" is the historical Design-2 blob store, "sqlite" the
+        # key-level disk tier with Bloom-first lookups and
+        # disk-resident signature rows.
+        self.store = make_store(self.config.store, self.store_path,
+                                part_size=self.chunk_docs,
+                                num_bands=self.config.num_bands)
         self.seeds = minhash.default_seeds(self.config.num_hashes)
         self.n_docs = int(self.doc_id_base)
         self.n_ingested = 0
@@ -116,14 +121,8 @@ class StreamingDedup:
                 jnp.asarray(packed_b.data), jnp.asarray(packed_b.lengths),
                 self._device_seeds(), n=self.config.ngram,
                 r=self.config.rows_per_band)
-            sig, bands = np.asarray(sig_j), np.asarray(bands_j)
-            for i in range(len(token_lists)):
-                doc_id = self.n_docs + i
-                self.store.insert_document(doc_id, bands[i])
-                if keep_signatures:
-                    self._sig_cache[doc_id] = sig[i]
-            self.n_docs += len(token_lists)
-            self.n_ingested += len(token_lists)
+            self._store_chunk(np.asarray(sig_j), np.asarray(bands_j),
+                              len(token_lists), keep_signatures)
             return
         pad_len = shingle.pow2_bucket(
             max((len(t) for t in token_lists), default=1))
@@ -147,13 +146,25 @@ class StreamingDedup:
                                                 self._device_seeds()))
             bands = np.asarray(lsh.band_values(
                 jnp.asarray(sig), self.config.rows_per_band))
-        for i in range(len(token_lists)):
-            doc_id = self.n_docs + i
-            self.store.insert_document(doc_id, bands[i])
-            if keep_signatures:
-                self._sig_cache[doc_id] = sig[i]
-        self.n_docs += len(token_lists)
-        self.n_ingested += len(token_lists)
+        self._store_chunk(sig, bands, len(token_lists), keep_signatures)
+
+    def _store_chunk(self, sig, bands, n, keep_signatures):
+        """Write one flushed chunk's band rows (+ signature rows) to the
+        store.  Signature routing is the tier split: stores with
+        disk-resident signature rows take them directly (the
+        ``DiskSignatureVerifier`` path); the memory tier keeps the
+        host-side phase-1 cache."""
+        for i in range(n):
+            self.store.insert_document(self.n_docs + i, bands[i])
+        if keep_signatures:
+            if hasattr(self.store, "put_signatures"):
+                self.store.put_signatures(
+                    np.arange(self.n_docs, self.n_docs + n), sig[:n])
+            else:
+                for i in range(n):
+                    self._sig_cache[self.n_docs + i] = sig[i]
+        self.n_docs += n
+        self.n_ingested += n
 
     # -- phase 2 -----------------------------------------------------------
 
@@ -163,13 +174,26 @@ class StreamingDedup:
                                self.n_docs)
 
     def default_verifier(self) -> BatchVerifier:
-        """Signature-agreement verifier over the phase-1 cache.
+        """Signature-agreement verifier over the phase-1 rows.
 
-        The signature matrix is indexed by global doc id (rows below
+        Disk-tier stores hold their signature rows on disk, so the
+        verifier gathers rows through the store's LRU row cache
+        (``bandstore.DiskSignatureVerifier`` — same estimate expression,
+        bit-identical sims).  The memory tier builds the full matrix
+        from the host cache, indexed by global doc id (rows below
         ``doc_id_base`` or inside a resumed-ingest gap stay zero — those
         ids have no band-store rows, so they can never reach the
         verifier as candidates).
         """
+        if hasattr(self.store, "put_signatures"):
+            if self.store.n_signatures() < self.n_ingested:
+                raise ValueError(
+                    f"store holds {self.store.n_signatures()} of "
+                    f"{self.n_ingested} ingested docs' signature rows — "
+                    "ingest with keep_signatures=True or pass an "
+                    "explicit similarity_fn / verifier to cluster()")
+            return DiskSignatureVerifier(self.store,
+                                         self.config.num_hashes)
         if len(self._sig_cache) < self.n_ingested:
             raise ValueError(
                 f"signature cache holds {len(self._sig_cache)} of "

@@ -103,6 +103,16 @@ def main(argv=None):
                     help="two-phase out-of-core mode over a band store")
     ap.add_argument("--chunk", type=int, default=128,
                     help="streaming ingest chunk size")
+    ap.add_argument("--store", default=None,
+                    choices=("memory", "sqlite"),
+                    help="band-store tier: memory (in-RAM index / "
+                         "Design-2 blob store) or sqlite (disk-resident "
+                         "band + signature rows behind Bloom-first "
+                         "lookups; identical clusters either way). "
+                         "Default: $REPRO_STORE_BACKEND or memory")
+    ap.add_argument("--store-path", default=":memory:",
+                    help="sqlite database path for the store tier "
+                         "(default :memory:)")
     ap.add_argument("--sharded", action="store_true",
                     help="run the shard_map dedup step")
     ap.add_argument("--devices", type=int, default=0,
@@ -173,7 +183,9 @@ def main(argv=None):
         byte_ingest=args.byte_ingest,
         exact_verification=not (args.estimate or args.byte_ingest),
         verify_backend=args.backend,
-        verify_batch=args.batch)
+        verify_batch=args.batch,
+        # None falls back to the field default ($REPRO_STORE_BACKEND).
+        **({"store": args.store} if args.store else {}))
 
     if args.sharded:
         from repro.core import DistLSHConfig
@@ -193,6 +205,7 @@ def main(argv=None):
         # device).
         sess = DedupSession(replace(cfg, exact_verification=False),
                             backend="sharded", dist_config=dcfg,
+                            store_path=args.store_path,
                             retention=retention)
         t0 = time.perf_counter()
         for snap in sess.ingest_stream(chunks):
@@ -239,6 +252,7 @@ def main(argv=None):
             tokenized = True
         sess = DedupSession(cfg, backend="streaming",
                             chunk_docs=args.chunk, verifier=verifier,
+                            store_path=args.store_path,
                             retention=retention)
         t0 = time.perf_counter()
         # Pre-tokenized chunks stream with the tokenized flag threaded
@@ -252,7 +266,8 @@ def main(argv=None):
             run_query_demo(sess, notes, args.query)
         return
 
-    sess = DedupSession(cfg, backend="host", retention=retention)
+    sess = DedupSession(cfg, backend="host",
+                        store_path=args.store_path, retention=retention)
     t0 = time.perf_counter()
     for chunk in chunks:
         snap = sess.ingest(chunk)

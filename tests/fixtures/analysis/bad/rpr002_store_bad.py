@@ -1,0 +1,19 @@
+"""Intentionally-bad fixture: RPR002 purity violations on the
+band-store probe read path (``probe_keys`` / ``probe_stats`` are
+``probe_*`` names, so the rule holds them to the same mutation-free
+contract a view probe gets)."""
+
+
+class Store:
+    def probe_keys(self, bands):
+        self.hits = len(bands)            # assigns to self.*
+        self.index.compact([1], int)      # mutating collaborator method
+        out = []
+        for j, key in enumerate(bands):
+            self.seen.add(key)            # container mutator on self
+            out.append(self.buckets.get(key, ()))
+        return out
+
+    def probe_stats(self, bands):
+        self.seq += 1                     # recency refresh is a write
+        return {"probes": len(bands)}

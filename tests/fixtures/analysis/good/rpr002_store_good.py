@@ -1,0 +1,29 @@
+"""Clean fixture: a Bloom-first store probe that stays pure (RPR002).
+
+Local accumulators carry all the accounting; the sqlite SELECT through
+``self.conn`` is a read, and no LRU/seq state is refreshed.
+"""
+
+
+class Store:
+    def probe_keys(self, bands):
+        cands = [set() for _ in bands]    # local accumulators are fine
+        filter_hits = [0] * len(bands)
+        for i, key in enumerate(bands):
+            if key not in self.primary:
+                continue                  # definitive miss, no disk
+            rows = self.conn.execute(
+                "SELECT docs FROM bandkeys WHERE hi=?", (key,))
+            for (docs,) in rows:
+                cands[i].update(docs)     # local set, not self-rooted
+            if not cands[i] and key in self.compaction_filter:
+                filter_hits[i] += 1
+        return [sorted(s) for s in cands], filter_hits
+
+    def probe_stats(self, bands):
+        maybe = sum(1 for key in bands if key in self.primary)
+        return {"probes": len(bands), "bloom_maybe": maybe}
+
+    def insert_document(self, doc_id, bands):  # write path mutates freely
+        self.seq += 1
+        self.seen.add(doc_id)

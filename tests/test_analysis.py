@@ -44,6 +44,11 @@ BAD_CASES = [
     ("rpr002_bad.py", "src/repro/serving/fixture_mod.py", "RPR002",
      {"assign:self.count", "call:evict", "mutate:append",
       "call:ingest", "mutate:fill"}),
+    # The band-store probe path (PR 10): ``probe_*`` reads on a store
+    # class are held to the same purity contract as view probes.
+    ("rpr002_store_bad.py", "src/repro/core/fixture_mod.py", "RPR002",
+     {"assign:self.hits", "call:compact", "mutate:add",
+      "assign:self.seq"}),
     ("rpr003_bad.py", "src/repro/serving/fixture_mod.py", "RPR003",
      {"unbucketed:compute_arrays", "unbucketed:compute_signatures"}),
     ("rpr004_bad.py", "src/repro/core/fixture_mod.py", "RPR004",
@@ -74,6 +79,7 @@ def test_bad_fixture_flagged(name, relpath, rule, expected):
 GOOD_CASES = [
     ("rpr001_good.py", "src/repro/kernels/fixture_mod.py"),
     ("rpr002_good.py", "src/repro/serving/fixture_mod.py"),
+    ("rpr002_store_good.py", "src/repro/core/fixture_mod.py"),
     ("rpr003_good.py", "src/repro/serving/fixture_mod.py"),
     ("rpr004_good.py", "src/repro/core/fixture_mod.py"),
     ("rpr005_good.py", "src/repro/kernels/fixture_mod.py"),

@@ -1,0 +1,445 @@
+"""Pluggable band-store backends (DESIGN.md §12).
+
+The load-bearing pin: a ``DedupConfig(store="sqlite")`` session — band
+index disk-resident behind Bloom-first lookups, signature rows gathered
+off disk through an LRU row cache — produces cluster labels IDENTICAL
+to and per-edge sims BIT-IDENTICAL to the in-memory tier, on the host,
+streaming, and sharded paths, with and without retention/eviction.
+Plus: the Bloom-first probe can never false-negative (hypothesis), the
+legacy Design-2 blob schemas still decode through the backend
+interface, and store compaction actually shrinks the store (the
+ROADMAP "retention completeness" fix).
+"""
+import os
+import sqlite3
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    DedupConfig,
+    DedupPipeline,
+    DedupSession,
+    RetentionPolicy,
+)
+from repro.core.bandstore import (
+    BandStoreBackend,
+    Design2Store,
+    DiskSignatureVerifier,
+    SqliteBandStore,
+    _encode_part_v2,
+    make_store,
+)
+from repro.core.query import query_view
+from repro.core.session import BandIndex
+from repro.core.unionfind import ThresholdUnionFind
+from repro.data import inject_near_duplicates, make_i2b2_like
+
+
+def _corpus(n=48, dups=32, seed=0):
+    notes = make_i2b2_like(n, seed=seed)
+    notes, _ = inject_near_duplicates(notes, dups, frac_low=0.0,
+                                      frac_high=0.005, seed=seed + 1)
+    rng = np.random.RandomState(seed + 2)
+    order = rng.permutation(len(notes))
+    return [notes[i] for i in order]
+
+
+def _chunks(notes, k):
+    return [[notes[i] for i in idx]
+            for idx in np.array_split(np.arange(len(notes)), k)]
+
+
+def _run_session(store, backend, chunks, *, retention=None, exact=False,
+                 **kw):
+    cfg = DedupConfig(exact_verification=exact, store=store, **kw.pop(
+        "config_kw", {}))
+    sess = DedupSession(cfg, backend=backend, retention=retention, **kw)
+    for snap in sess.ingest_stream(chunks):
+        pass
+    return sess, snap
+
+
+def _assert_parity(a, b):
+    np.testing.assert_array_equal(a.labels, b.labels)
+    assert a.pairs == b.pairs    # bit-identical verified sims
+    assert a.filter_only_hits == b.filter_only_hits
+
+
+# -- backend parity: sqlite == memory, all paths ----------------------------
+
+@pytest.mark.parametrize("backend", ["host", "streaming"])
+@pytest.mark.parametrize("retained", [False, True])
+def test_sqlite_session_matches_memory(backend, retained):
+    chunks = _chunks(_corpus(), 5)
+    ret = (lambda: RetentionPolicy(lru_window=10)) if retained \
+        else (lambda: None)
+    _, a = _run_session("memory", backend, chunks, retention=ret())
+    _, b = _run_session("sqlite", backend, chunks, retention=ret())
+    _assert_parity(a, b)
+    if retained:
+        assert a.evicted == b.evicted > 0
+
+
+def test_sqlite_host_exact_mode_matches_memory():
+    chunks = _chunks(_corpus(seed=5), 4)
+    _, a = _run_session("memory", "host", chunks, exact=True)
+    _, b = _run_session("sqlite", "host", chunks, exact=True)
+    _assert_parity(a, b)
+
+
+def test_sqlite_matches_memory_under_key_budget_compaction():
+    """The lossy path too: budget compaction order (LRU by last hit)
+    and the filter-only-hit accounting must agree across tiers."""
+    chunks = _chunks(_corpus(seed=7), 6)
+    ret = lambda: RetentionPolicy(lru_window=10, band_key_budget=16,
+                                  bloom_bits=1 << 16)
+    sa, a = _run_session("memory", "host", chunks, retention=ret())
+    sb, b = _run_session("sqlite", "host", chunks, retention=ret())
+    _assert_parity(a, b)
+    assert sa.band_index.compacted_keys == sb.band_index.compacted_keys
+    assert sa.band_index.compacted_keys > 0
+    assert a.filter_only_hits > 0
+
+
+def test_sqlite_sharded_session_matches_memory():
+    from repro.core.dist_lsh import DistLSHConfig
+
+    rng = np.random.RandomState(0)
+    vocab = [f"t{i}" for i in range(300)]
+    docs = [" ".join(rng.choice(vocab, size=48)) for _ in range(32)]
+    docs[5] = docs[3]
+    docs[21] = docs[3]          # cross-chunk duplicate
+    docs[29] = docs[11]
+    chunks = _chunks(docs, 4)
+    dcfg = lambda: DistLSHConfig(ngram=4, num_hashes=20, verify_k=8,
+                                 edge_capacity=256, edge_threshold=0.5,
+                                 bucket_slack=16.0, band_groups=2)
+    kw = dict(config_kw=dict(ngram=4, num_hashes=20,
+                             edge_threshold=0.5),
+              retention=RetentionPolicy(lru_window=6))
+    _, a = _run_session("memory", "sharded", chunks,
+                        dist_config=dcfg(), **kw)
+    _, b = _run_session("sqlite", "sharded", chunks,
+                        dist_config=dcfg(), **kw)
+    _assert_parity(a, b)
+    assert a.evicted == b.evicted > 0
+
+
+def test_query_view_parity_over_sqlite_view(tmp_path):
+    """The read path over a disk-tier view: probes delegate to the
+    store's pure Bloom-first ``probe_keys``; results (candidates, sims,
+    verdicts, filter-only hits) equal the memory tier's dict walk.
+    Small AND large batches — the memory tier's device probe path must
+    agree with the store probe too."""
+    notes = _corpus(seed=9)
+    chunks = _chunks(notes, 4)
+    sa, _ = _run_session("memory", "host", chunks)
+    sb, _ = _run_session("sqlite", "host", chunks,
+                         store_path=str(tmp_path / "bands.db"))
+    pipe = DedupPipeline(DedupConfig(exact_verification=False))
+    queries = notes[:40] + ["an entirely novel note text " * 6]
+    toks = pipe.tokenize(queries)
+    sig, bands = pipe.compute_arrays(toks)
+    for q in (3, len(queries)):      # host walk + device-batch sizes
+        ra = query_view(sa.view(), bands[:q], sig=sig[:q])
+        rb = query_view(sb.view(), bands[:q], sig=sig[:q])
+        assert ra == rb
+
+
+# -- retention completeness: store compaction drops evicted rows ------------
+
+def test_streaming_store_compaction_bounds_row_count():
+    """Regression (ROADMAP "retention completeness"): the streaming
+    band STORE rewrites evicted docs' rows onto their cluster roots, so
+    its entry count tracks the retained set instead of growing with
+    evicted history."""
+    chunks = _chunks(_corpus(seed=11), 5)
+    for store in ("memory", "sqlite"):
+        plain, pl_snap = _run_session(store, "streaming", chunks,
+                                      chunk_docs=16)
+        sess, snap = _run_session(
+            store, "streaming", chunks, chunk_docs=16,
+            retention=RetentionPolicy(lru_window=10))
+        _assert_parity(snap, pl_snap)
+        assert snap.evicted > 0
+        n_plain = plain._impl.sd.store.n_entries()
+        n_kept = sess._impl.sd.store.n_entries()
+        # Every evicted doc merged through at least one shared band key
+        # whose other member maps to the same root — the keep-first
+        # dedup drops those rows, so the compacted store is strictly
+        # smaller.  (No per-band upper bound: a root legitimately sits
+        # in every key its evicted members occupied.)
+        assert n_kept < n_plain, (store, n_kept, n_plain)
+
+
+def test_design2_compact_preserves_scan_order():
+    """In-place root rewrite + keep-first dedup: the compacted store's
+    run enumeration equals an uncompacted store over the same
+    root-mapped rows (position stability is what keeps the engine feed
+    order identical)."""
+    store = Design2Store(part_size=3)
+    rng = np.random.default_rng(3)
+    bands = rng.integers(0, 4, size=(10, 2, 2), dtype=np.uint32)
+    for d in range(10):
+        store.insert_document(d, bands[d])
+    store.commit()
+    uf = ThresholdUnionFind(10, 0.3)
+    uf.union(0, 7, 1.0)
+    uf.union(2, 9, 1.0)
+    evicted = [d for d in range(10) if uf.find(d) != d]
+    store.compact(evicted, uf.find)
+    for j in range(2):
+        docs, vals = store.read_band(j)
+        assert not np.isin(docs, evicted).any()
+        # keep-first dedup: no (value, doc) entry appears twice
+        seen = list(zip(map(tuple, vals.tolist()), docs.tolist()))
+        assert len(seen) == len(set(seen))
+
+
+# -- blob-schema continuity through the backend interface -------------------
+
+def test_legacy_v1_and_v2_blobs_decode_through_interface(tmp_path):
+    """Stores written under the v1 (raw values, contiguous-id) and v2
+    (self-describing) part schemas keep reading identically through the
+    new ``BandStoreBackend`` scan path."""
+    path = str(tmp_path / "legacy.db")
+    store = Design2Store(path, part_size=4)
+    rng = np.random.default_rng(5)
+    bands = rng.integers(0, 50, size=(8, 3, 2), dtype=np.uint32)
+    for d in range(8):
+        store.insert_document(d, bands[d])
+    store.commit()
+    ref = {j: store.read_band(j) for j in range(3)}
+
+    # Rewrite every part as a v1 blob (raw uint32 values, ids implied
+    # by doc0) — the pre-PR-3 on-disk format.
+    from repro.core.bandstore import _decode_part
+
+    conn = sqlite3.connect(path)
+    rows = conn.execute(
+        "SELECT band_id, part_id, doc0, vals FROM band2").fetchall()
+    for band_id, part_id, doc0, blob in rows:
+        _, vals = _decode_part(blob, doc0)
+        conn.execute(
+            "UPDATE band2 SET vals=? WHERE band_id=? AND part_id=?",
+            (np.ascontiguousarray(vals, np.uint32).tobytes(),
+             band_id, part_id))
+    conn.commit()
+    conn.close()
+
+    legacy = Design2Store(path, part_size=4)
+    for j in range(3):
+        np.testing.assert_array_equal(legacy.read_band(j)[0], ref[j][0])
+        np.testing.assert_array_equal(legacy.read_band(j)[1], ref[j][1])
+    # ...and the interface-level scan agrees run for run.
+    runs_ref = [(br.band_id, br.sorted_vals.tolist(),
+                 br.sorted_docs.tolist())
+                for br in store.iter_band_runs(3)]
+    runs_leg = [(br.band_id, br.sorted_vals.tolist(),
+                 br.sorted_docs.tolist())
+                for br in legacy.iter_band_runs(3)]
+    assert runs_leg == runs_ref
+
+
+def test_v2_blob_roundtrips_noncontiguous_ids():
+    store = Design2Store(part_size=3)
+    ids = [5, 17, 900]            # resumed-ingest style gaps
+    bands = np.array([[[i, i + 1]] for i in ids], dtype=np.uint32)
+    for d, b in zip(ids, bands):
+        store.insert_document(d, b)
+    store.commit()
+    docs, vals = store.read_band(0)
+    assert docs.tolist() == ids
+    blob = _encode_part_v2(np.array(ids, np.int64), vals)
+    from repro.core.bandstore import _decode_part
+
+    d2, v2 = _decode_part(blob, 0)
+    assert d2.tolist() == ids
+    np.testing.assert_array_equal(v2, vals)
+
+
+# -- Bloom-first probe: false positives counted, false negatives never ------
+
+def test_bloom_first_probe_never_misses_hypothesis():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(deadline=None, max_examples=25)
+    @given(seed=st.integers(0, 2**10), n_docs=st.integers(1, 40),
+           n_queries=st.integers(1, 8), n_bands=st.integers(1, 4),
+           vocab=st.integers(2, 12))
+    def prop(seed, n_docs, n_queries, n_bands, vocab):
+        rng = np.random.default_rng(seed)
+        bands = rng.integers(0, vocab, size=(n_docs, n_bands, 2),
+                             dtype=np.uint32)
+        qbands = rng.integers(0, vocab, size=(n_queries, n_bands, 2),
+                              dtype=np.uint32)
+        store = SqliteBandStore(num_bands=n_bands,
+                                primary_bloom_bits=1 << 10)
+        store.put_band_rows(np.arange(n_docs), bands)
+        store.commit()
+        got, _ = store.probe_keys(qbands)
+        # The in-memory reference: the generic dict-walk over the same
+        # rows (BandStoreBackend.probe_keys default implementation).
+        want, _ = BandStoreBackend.probe_keys(store, qbands)
+        for g, w in zip(got, want):
+            assert g.tolist() == w.tolist()
+        # Filter accounting is observable and sane: every probe is
+        # either a bloom miss, a confirmed hit, or a counted FP.
+        stats = store.probe_stats(qbands)
+        assert stats["bloom_maybe"] == stats["disk_hits"] + \
+            stats["bloom_fps"]
+        assert stats["disk_hits"] <= stats["bloom_maybe"] <= \
+            stats["probes"]
+
+    prop()
+
+
+def test_probe_keys_is_pure():
+    """RPR002's dynamic half for the store: probing mutates nothing —
+    no recency refresh, no counters, no disk writes."""
+    rng = np.random.default_rng(1)
+    bands = rng.integers(0, 8, size=(12, 4, 2), dtype=np.uint32)
+    store = SqliteBandStore(num_bands=4, key_budget=64,
+                            track_entries=True)
+    store.match_then_insert(bands, 0)
+    before = (store._seq, store.filter_only_hits, store.compacted_keys,
+              store.n_writes, store.export_maps())
+    store.probe_keys(bands)
+    store.probe_stats(bands)
+    after = (store._seq, store.filter_only_hits, store.compacted_keys,
+             store.n_writes, store.export_maps())
+    assert before == after
+
+
+def test_sqlite_index_matches_bandindex_unit_semantics():
+    """Unit-level mirror of ``session.BandIndex``: same edges, same LRU
+    compaction victims, same filter-only-hit counts."""
+    rng = np.random.default_rng(2)
+    chunks = [rng.integers(0, 6, size=(6, 2, 2), dtype=np.uint32)
+              for _ in range(4)]
+    mem = BandIndex(2, key_budget=4, track_entries=True)
+    dsk = SqliteBandStore(num_bands=2, key_budget=4, track_entries=True)
+    uf = ThresholdUnionFind(64, 0.3)
+    base = 0
+    for t, bands in enumerate(chunks):
+        ea = mem.match_then_insert(bands, base)
+        eb = dsk.match_then_insert(bands, base)
+        np.testing.assert_array_equal(ea, eb)
+        if t == 1:
+            for a, b in ea.tolist():
+                uf.union(a, b, 1.0)
+            evict = [d for d in range(base) if uf.find(d) != d]
+            mem.evict(evict, uf.find)
+            dsk.evict(evict, uf.find)
+        base += len(bands)
+    assert mem.export_maps() == dsk.export_maps()
+    assert mem.compacted_keys == dsk.compacted_keys > 0
+    assert mem.filter_only_hits == dsk.filter_only_hits
+    ms, ds = mem.stats(), dsk.stats()
+    for k in ("n_keys", "n_entries", "compacted_keys",
+              "filter_only_hits"):
+        assert ms[k] == ds[k], k
+
+
+def test_sqlite_index_evict_requires_track_entries():
+    dsk = SqliteBandStore(num_bands=1)
+    with pytest.raises(ValueError, match="track_entries"):
+        dsk.evict([0], lambda d: d)
+
+
+# -- disk-resident signature rows -------------------------------------------
+
+def test_disk_signature_verifier_bit_parity_and_cache():
+    from repro.core.verify import SignatureVerifier
+
+    rng = np.random.RandomState(2)
+    sig = rng.randint(0, 50, size=(12, 40)).astype(np.uint32)
+    store = SqliteBandStore(num_bands=1)
+    store.put_signatures(np.arange(12), sig)
+    v = DiskSignatureVerifier(store, 40, cache_rows=4)
+    ref = SignatureVerifier(sig)
+    pairs = np.array([(0, 8), (2, 9), (5, 10), (3, 11), (0, 2)],
+                     dtype=np.int64)
+    np.testing.assert_array_equal(v(pairs), ref(pairs))
+    assert v(pairs).dtype == np.float32
+    assert v.cache_hits > 0 and v.cache_misses > 0
+    assert len(v._cache) <= 4                  # LRU bound holds
+    assert v.n_live_rows == 12
+
+
+def test_disk_signature_verifier_release_rows_bounds_disk():
+    rng = np.random.RandomState(3)
+    sig = rng.randint(0, 50, size=(8, 16)).astype(np.uint32)
+    store = SqliteBandStore(num_bands=1)
+    v = DiskSignatureVerifier(store, 16)
+    v.extend_signatures(np.arange(8), sig)
+    assert store.n_signatures() == 8
+    v(np.array([[1, 4]]))                      # warm the cache
+    v.release_rows([1, 4])
+    assert store.n_signatures() == 6           # gone from DISK
+    with pytest.raises(KeyError):
+        v(np.array([[1, 5]]))                  # evicted doc raises
+    got = v(np.array([[2, 3]]))
+    assert got[0] == (sig[2] == sig[3]).mean(dtype=np.float32)
+
+
+def test_streaming_sqlite_keeps_no_host_signature_matrix():
+    """The disk tier's point: a streaming sqlite session verifies off
+    the store's rows — no full host signature matrix is ever built."""
+    chunks = _chunks(_corpus(seed=13), 3)
+    sess, snap = _run_session("sqlite", "streaming", chunks,
+                              chunk_docs=16)
+    v = sess.verifier
+    assert isinstance(v, DiskSignatureVerifier)
+    assert len(sess._impl.sd._sig_cache) == 0
+    assert v.n_live_rows == snap.n_docs
+    assert snap.retained_rows == snap.n_docs
+
+
+# -- store factory / misc ---------------------------------------------------
+
+def test_make_store_factory(tmp_path):
+    assert isinstance(make_store("memory"), Design2Store)
+    assert isinstance(make_store("sqlite"), SqliteBandStore)
+    with pytest.raises(ValueError, match="unknown store"):
+        make_store("cassandra")
+    with pytest.raises(ValueError, match="unknown store"):
+        DedupConfig(store="cassandra")
+
+
+def test_sqlite_store_reopens_from_file(tmp_path):
+    """Primary Bloom filters, key counts, and the LRU clock rebuild
+    from a persisted database (resume)."""
+    path = str(tmp_path / "bands.db")
+    rng = np.random.default_rng(4)
+    bands = rng.integers(0, 10, size=(10, 3, 2), dtype=np.uint32)
+    s1 = SqliteBandStore(path, num_bands=3)
+    s1.put_band_rows(np.arange(10), bands)
+    s1.commit()
+    probe_ref = s1.probe_keys(bands[:4])
+    s1.conn.close()
+    s2 = SqliteBandStore(path, num_bands=3)
+    got = s2.probe_keys(bands[:4])
+    for g, w in zip(got[0], probe_ref[0]):
+        assert g.tolist() == w.tolist()
+    assert s2._key_counts == s1._key_counts
+    assert s2._seq >= s1._seq
+    assert s2.file_size_bytes() > 0
+
+
+def test_iter_band_runs_matches_across_backends():
+    rng = np.random.default_rng(6)
+    bands = rng.integers(0, 4, size=(20, 3, 2), dtype=np.uint32)
+    mem = make_store("memory", part_size=6)
+    dsk = make_store("sqlite", num_bands=3)
+    mem.put_band_rows(np.arange(20), bands)
+    dsk.put_band_rows(np.arange(20), bands)
+    mem.commit(), dsk.commit()
+    runs_m = [(br.band_id, br.sorted_vals.tolist(),
+               br.sorted_docs.tolist()) for br in mem.iter_band_runs(3)]
+    runs_d = [(br.band_id, br.sorted_vals.tolist(),
+               br.sorted_docs.tolist()) for br in dsk.iter_band_runs(3)]
+    assert runs_m == runs_d
+    assert mem.n_entries() == dsk.n_entries() == 60

@@ -156,11 +156,16 @@ def test_streaming_cluster_uses_batched_verifier():
     sd.ingest(notes)
     uf_b, stats = sd.cluster()
     assert stats["verify_batches"] >= 1
-    # scalar-callback compat path gives the identical clustering
-    cache = sd._sig_cache
+    # scalar-callback compat path gives the identical clustering.
+    # Rows come from wherever the configured tier keeps them: the host
+    # phase-1 cache (memory) or the store's sigs table (sqlite).
+    if hasattr(sd.store, "get_signature"):
+        row = sd.store.get_signature
+    else:
+        row = sd._sig_cache.__getitem__
     uf_s, _ = sd.cluster(
         similarity_fn=lambda a, b: float(
-            (cache[a] == cache[b]).mean()))
+            (row(a) == row(b)).mean()))
     np.testing.assert_array_equal(uf_b.components(), uf_s.components())
 
 
